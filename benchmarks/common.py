@@ -1,0 +1,98 @@
+"""Shared profiling harness for the paper-reproduction benchmarks.
+
+This is the FAITHFUL experimental setup, scaled to the host: the paper runs
+WordCount and Exim Mainlog parsing on a 4-node Hadoop cluster over 8 GB with
+20 (mappers, reducers) settings in [5, 40], 5 repeats each; we run the same
+two applications on the TPU-native MapReduce engine over a synthetic corpus
+(size set by --tokens), the same parameter ranges, wall-clocked after one
+warmup run (compile excluded — Hadoop's job-setup is likewise outside the
+paper's modeled time).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import profiler
+from repro.mapreduce import (
+    JobConfig,
+    build_job,
+    eximparse,
+    exim_mainlog,
+    wordcount,
+    wordcount_corpus,
+)
+
+DEFAULT_TOKENS = 1 << 16
+PARAM_RANGE = (5, 40)
+
+
+def make_app(name: str, tokens: int, seed: int = 0):
+    if name == "wordcount":
+        corpus = wordcount_corpus(tokens, vocab_size=4096, seed=seed)
+        return wordcount(4096), corpus
+    if name == "eximparse":
+        corpus = exim_mainlog(tokens, n_transactions=1024, seed=seed)
+        return eximparse(1024), corpus
+    raise ValueError(name)
+
+
+class JobRunner:
+    """Compile-cached runner: time(config) for one application."""
+
+    def __init__(self, app, corpus, *, warmup: int = 1):
+        self.app = app
+        self.corpus = corpus
+        self.warmup = warmup
+        self._cache: dict[tuple[int, int], object] = {}
+
+    def __call__(self, config) -> float:
+        M, R = int(round(config[0])), int(round(config[1]))
+        key = (M, R)
+        if key not in self._cache:
+            job = build_job(
+                self.app,
+                JobConfig(num_mappers=M, num_reducers=R),
+                len(self.corpus),
+            )
+            for _ in range(self.warmup):
+                jax.block_until_ready(job(self.corpus))
+            self._cache[key] = job
+        job = self._cache[key]
+        t0 = time.perf_counter()
+        jax.block_until_ready(job(self.corpus))
+        return time.perf_counter() - t0
+
+
+def training_configs(n: int = 20, seed: int = 0) -> np.ndarray:
+    """The paper's 20 profiled settings: spread over [5,40]^2."""
+    rng = np.random.default_rng(seed)
+    lo, hi = PARAM_RANGE
+    # stratified: 16 grid points + 4 random fill-ins
+    grid_axis = np.linspace(lo, hi, 4).round()
+    pts = [(m, r) for m in grid_axis for r in grid_axis]
+    while len(pts) < n:
+        pts.append(tuple(rng.integers(lo, hi + 1, 2).tolist()))
+    return np.asarray(pts[:n], dtype=np.float64)
+
+
+def heldout_configs(n: int = 8, seed: int = 123) -> np.ndarray:
+    """Random unseen settings for the prediction phase."""
+    rng = np.random.default_rng(seed)
+    lo, hi = PARAM_RANGE
+    return rng.integers(lo, hi + 1, size=(n, 2)).astype(np.float64)
+
+
+def profile_app(name: str, *, tokens: int = DEFAULT_TOKENS,
+                configs: np.ndarray | None = None, repeats: int = 5,
+                verbose: bool = False):
+    app, corpus = make_app(name, tokens)
+    runner = JobRunner(app, corpus)
+    configs = training_configs() if configs is None else configs
+    return runner, profiler.profile_experiments(
+        runner, configs, repeats=repeats,
+        param_names=("mappers", "reducers"), verbose=verbose,
+    )

@@ -1,0 +1,31 @@
+"""Figure 3 reproduction: per-experiment predicted vs actual execution time
+for WordCount and Exim Mainlog parsing (prediction phase, unseen configs)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import heldout_configs, profile_app
+from repro.core import fit
+
+
+def main(tokens: int = 1 << 16, repeats: int = 3) -> list[str]:
+    out = ["fig3,app,mappers,reducers,actual_s,predicted_s,err_pct"]
+    for app_name in ("wordcount", "eximparse"):
+        runner, prof = profile_app(
+            app_name, tokens=tokens, repeats=repeats
+        )
+        model = fit(prof.params, prof.times)
+        for cfg_row in heldout_configs():
+            actual = float(np.mean([runner(cfg_row) for _ in range(repeats)]))
+            pred = float(np.asarray(model.predict(cfg_row)).ravel()[0])
+            err = abs(pred - actual) / actual * 100
+            out.append(
+                f"fig3,{app_name},{int(cfg_row[0])},{int(cfg_row[1])},"
+                f"{actual:.5f},{pred:.5f},{err:.2f}"
+            )
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,52 @@
+"""Roofline table: reads the dry-run artifacts (experiments/dryrun) and
+emits the §Roofline rows — per (arch x shape x mesh): the three terms,
+dominant bottleneck, MODEL_FLOPS ratio, and roofline fraction."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.core.costmodel import format_seconds
+
+
+def load_reports(dryrun_dir: str = "experiments/dryrun") -> list[dict]:
+    reports = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*", "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        r["_mesh_name"] = os.path.basename(os.path.dirname(path))
+        reports.append(r)
+    return reports
+
+
+def main(dryrun_dir: str = "experiments/dryrun") -> list[str]:
+    out = [
+        "roofline,mesh,arch,shape,dominant,compute_s,memory_s,"
+        "collective_s,step_s_no_overlap,useful_flops_ratio,"
+        "roofline_fraction,peak_gib_per_dev,fits_16gib"
+    ]
+    reports = load_reports(dryrun_dir)
+    if not reports:
+        out.append("roofline,NO_DRYRUN_ARTIFACTS_FOUND,run "
+                   "`python -m repro.launch.dryrun` first,,,,,,,,,")
+        return out
+    for r in reports:
+        roof = r["roofline"]
+        meta = r["meta"]
+        peak_gib = r["memory"]["peak_bytes"] / 2**30
+        out.append(
+            f"roofline,{r['_mesh_name']},{meta['arch']},{meta['shape']},"
+            f"{roof['dominant']},{roof['compute_s']:.4f},"
+            f"{roof['memory_s']:.4f},{roof['collective_s']:.4f},"
+            f"{roof['step_time_no_overlap']:.4f},"
+            f"{(roof.get('useful_ratio') or 0):.3f},"
+            f"{(roof.get('roofline_fraction') or 0):.4f},"
+            f"{peak_gib:.2f},{peak_gib <= 16.0}"
+        )
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

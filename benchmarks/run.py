@@ -1,0 +1,109 @@
+"""Benchmark harness: one section per paper table/figure + roofline.
+
+``PYTHONPATH=src python -m benchmarks.run [--quick] [--tokens N]``
+
+Sections (CSV rows on stdout):
+  table1  — Table 1: mean/var prediction error, WordCount + EximParse
+  fig3    — Fig. 3: per-experiment predicted vs actual time
+  fig4    — Fig. 4: execution-time surface over (M, R) + observed optimum
+  tuner   — beyond-paper: regression autotuner vs exhaustive search
+  roofline— §Roofline table from the dry-run artifacts
+  kernels — per-kernel microbench (us/call, interpret mode)
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _kernel_micro() -> list[str]:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels.flash_attention import attention_ref, flash_attention
+    from repro.kernels.segment_reduce import segment_reduce
+
+    rows = ["kernel,name,us_per_call,derived"]
+    rng = np.random.default_rng(0)
+
+    def timeit(fn, *args, reps=3):
+        fn(*args)  # compile
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            jax.block_until_ready(fn(*args))
+        return (time.perf_counter() - t0) / reps * 1e6
+
+    q = jnp.asarray(rng.normal(size=(1, 256, 4, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 256, 2, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 256, 2, 64)), jnp.float32)
+    us_ref = timeit(lambda a, b, c: attention_ref(a, b, c, causal=True),
+                    q, k, v)
+    rows.append(f"kernel,attention_ref_256,{us_ref:.0f},xla_reference")
+    us_pl = timeit(
+        lambda a, b, c: flash_attention(a, b, c, causal=True), q, k, v
+    )
+    rows.append(
+        f"kernel,flash_attention_256,{us_pl:.0f},"
+        "interpret_mode_NOT_tpu_timing"
+    )
+    keys = jnp.asarray(
+        np.sort(rng.integers(0, 50, size=(8, 128)).astype(np.int32), axis=1))
+    vals = jnp.asarray(rng.integers(0, 9, size=(8, 128)).astype(np.int32))
+    us_seg = timeit(segment_reduce, keys, vals)
+    rows.append(
+        f"kernel,segment_reduce_8x128,{us_seg:.0f},"
+        "interpret_mode_NOT_tpu_timing"
+    )
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller corpora / fewer repeats")
+    ap.add_argument("--tokens", type=int, default=None)
+    ap.add_argument("--sections", default="all",
+                    help="comma list: table1,fig3,fig4,tuner,roofline,kernels")
+    args = ap.parse_args()
+    tokens = args.tokens or (1 << 14 if args.quick else 1 << 16)
+    repeats = 2 if args.quick else 5
+    sections = (
+        ["table1", "fig3", "fig4", "tuner", "roofline", "kernels"]
+        if args.sections == "all" else args.sections.split(",")
+    )
+    rows: list[str] = []
+    t_start = time.time()
+    for sec in sections:
+        t0 = time.time()
+        try:
+            if sec == "table1":
+                from benchmarks import table1_prediction_error
+                rows += table1_prediction_error.main(tokens, repeats)
+            elif sec == "fig3":
+                from benchmarks import fig3_accuracy
+                rows += fig3_accuracy.main(tokens, max(2, repeats - 2))
+            elif sec == "fig4":
+                from benchmarks import fig4_surface
+                rows += fig4_surface.main(tokens, max(2, repeats - 2))
+            elif sec == "tuner":
+                from benchmarks import tuner_vs_exhaustive
+                rows += tuner_vs_exhaustive.main(tokens)
+            elif sec == "roofline":
+                from benchmarks import roofline
+                rows += roofline.main()
+            elif sec == "kernels":
+                rows += _kernel_micro()
+            rows.append(f"_timing,{sec},{time.time() - t0:.1f}s,")
+        except Exception as e:  # noqa: BLE001
+            rows.append(f"_error,{sec},{type(e).__name__},{e}")
+    rows.append(f"_timing,total,{time.time() - t_start:.1f}s,")
+    print("\n".join(rows))
+    if any(r.startswith("_error") for r in rows):
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

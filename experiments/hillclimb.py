@@ -1,0 +1,121 @@
+"""§Perf hillclimb runner: evaluate named CellConfig variants for one cell
+and append structured results to experiments/perf_log.json.
+
+    PYTHONPATH=src python experiments/hillclimb.py --arch arctic-480b \
+        --shape train_4k --variant baseline --variant no_fsdp ...
+
+Variants are defined in VARIANTS below; each is (CellConfig overrides,
+optional ModelConfig transform). The log records the full roofline report
+per variant so EXPERIMENTS.md §Perf can cite before/after.
+"""
+
+import os
+import argparse
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", required=True)
+ap.add_argument("--shape", required=True)
+ap.add_argument("--mesh", default="16x16")
+ap.add_argument("--variant", action="append", default=[])
+ap.add_argument("--devices", type=int, default=256)
+ap.add_argument("--log", default="experiments/perf_log.json")
+args = ap.parse_args()
+
+os.environ["XLA_FLAGS"] = (
+    f"--xla_force_host_platform_device_count={args.devices}"
+)
+
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+
+import repro.configs as C  # noqa: E402
+from repro.launch import cells  # noqa: E402
+from repro.launch.mesh import make_mesh  # noqa: E402
+
+# variant name -> dict of CellConfig overrides (+ special keys:
+#   "cfg_fn": ModelConfig -> ModelConfig transform applied before build)
+VARIANTS: dict[str, dict] = {
+    "baseline": {},
+    "no_fsdp": {"fsdp": False},
+    "fsdp": {"fsdp": True},
+    "remat_dots": {"remat": "dots"},
+    "remat_none": {"remat": "none"},
+    "mb2": {"microbatch": 2},
+    "mb4": {"microbatch": 4},
+    "mb8": {"microbatch": 8},
+    "logits_chunk_512": {"logits_chunk": 512},
+    "logits_chunk_1024": {"logits_chunk": 1024},
+    "opt_bf16": {"opt_state_dtype": "bfloat16"},
+    "moe_groups_256": {"moe_n_groups": 256},
+    "moe_groups_64": {"moe_n_groups": 64},
+    "moe_groups_16": {"moe_n_groups": 16},
+    "cap_1_0": {
+        "cfg_fn": lambda cfg: dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=1.0)
+        )
+    },
+    "mb4_opt_bf16": {"microbatch": 4, "opt_state_dtype": "bfloat16"},
+    "mb4_remat_dots": {"microbatch": 4, "remat": "dots"},
+    "mb8_opt_bf16": {"microbatch": 8, "opt_state_dtype": "bfloat16"},
+    "mb4_opt_bf16_groups64": {
+        "microbatch": 4, "opt_state_dtype": "bfloat16", "moe_n_groups": 64,
+    },
+    "mb4_opt_bf16_chunk512": {
+        "microbatch": 4, "opt_state_dtype": "bfloat16", "logits_chunk": 512,
+    },
+}
+
+
+def main() -> None:
+    shape_dims = tuple(int(x) for x in args.mesh.split("x"))
+    axes = (("pod", "data", "model") if len(shape_dims) == 3
+            else ("data", "model"))
+    mesh = make_mesh(shape_dims, axes)
+    log = []
+    if os.path.exists(args.log):
+        with open(args.log) as f:
+            log = json.load(f)
+    for name in args.variant or ["baseline"]:
+        spec = dict(VARIANTS[name])
+        cfg = C.get_config(args.arch)
+        cfg_fn = spec.pop("cfg_fn", None)
+        if cfg_fn is not None:
+            cfg = cfg_fn(cfg)
+        base = cells.default_cell_config(cfg, C.SHAPES[args.shape])
+        cell = dataclasses.replace(base, **spec)
+        t0 = time.time()
+        try:
+            r = cells.analyze_cell_extrapolated(
+                args.arch, args.shape, mesh, cell=cell, cfg=cfg
+            )
+            roof = r["roofline"]
+            entry = {
+                "arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+                "variant": name, "ok": True,
+                "roofline": roof,
+                "peak_gib": r["memory"]["peak_bytes"] / 2**30,
+                "compile_s": time.time() - t0,
+            }
+            print(
+                f"{name:28s} dom={roof['dominant']:10s} "
+                f"step={roof['step_time_no_overlap']:8.3f}s "
+                f"C={roof['compute_s']:7.3f} M={roof['memory_s']:8.3f} "
+                f"X={roof['collective_s']:8.3f} "
+                f"frac={roof['roofline_fraction'] or 0:.4f} "
+                f"peak={entry['peak_gib']:8.2f}GiB",
+                flush=True,
+            )
+        except Exception as e:  # noqa: BLE001
+            entry = {
+                "arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+                "variant": name, "ok": False, "error": repr(e)[:500],
+            }
+            print(f"{name:28s} FAILED: {e}", flush=True)
+        log.append(entry)
+        with open(args.log, "w") as f:
+            json.dump(log, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""Hillclimb probe: compile ONE shallow unrolled group of a cell and dump
+collective breakdown + biggest HLO buffers, under a given CellConfig.
+
+    PYTHONPATH=src python experiments/perf_probe.py --arch arctic-480b \
+        --shape train_4k [--devices 256] [--fsdp/--no-fsdp] [...]
+"""
+
+import os
+
+import argparse
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="arctic-480b")
+ap.add_argument("--shape", default="train_4k")
+ap.add_argument("--devices", type=int, default=256)
+ap.add_argument("--mesh", default="16x16",
+                help="e.g. 16x16 or 2x16x16 (pod,data,model)")
+ap.add_argument("--fsdp", dest="fsdp", action="store_true", default=None)
+ap.add_argument("--no-fsdp", dest="fsdp", action="store_false")
+ap.add_argument("--remat", default=None)
+ap.add_argument("--logits-chunk", type=int, default=None)
+ap.add_argument("--microbatch", type=int, default=None)
+ap.add_argument("--opt-dtype", default=None)
+ap.add_argument("--moe-groups", type=int, default=None)
+ap.add_argument("--depth-groups", type=int, default=1)
+ap.add_argument("--dump-hlo", default=None)
+args = ap.parse_args()
+
+os.environ["XLA_FLAGS"] = (
+    f"--xla_force_host_platform_device_count={args.devices}"
+)
+
+import dataclasses  # noqa: E402
+import re  # noqa: E402
+
+import repro.configs as C  # noqa: E402
+from repro.core import costmodel  # noqa: E402
+from repro.launch import cells  # noqa: E402
+from repro.launch.mesh import make_mesh  # noqa: E402
+
+shape_dims = tuple(int(x) for x in args.mesh.split("x"))
+axes = ("pod", "data", "model") if len(shape_dims) == 3 else ("data", "model")
+mesh = make_mesh(shape_dims, axes)
+
+cfg = C.get_config(args.arch)
+shape = C.SHAPES[args.shape]
+cell = cells.default_cell_config(cfg, shape)
+over = {}
+if args.fsdp is not None:
+    over["fsdp"] = args.fsdp
+if args.remat:
+    over["remat"] = args.remat
+if args.logits_chunk is not None:
+    over["logits_chunk"] = args.logits_chunk
+if args.microbatch is not None:
+    over["microbatch"] = args.microbatch
+if args.opt_dtype:
+    over["opt_state_dtype"] = args.opt_dtype
+if args.moe_groups is not None:
+    over["moe_n_groups"] = args.moe_groups
+cell = dataclasses.replace(cell, unroll_layers=True, **over)
+cfg_shallow = dataclasses.replace(
+    cfg, n_layers=args.depth_groups * cfg.pattern_period
+)
+from repro.sharding.context import use_mesh  # noqa: E402
+
+built = cells.build_cell(args.arch, args.shape, mesh, cell=cell,
+                         cfg=cfg_shallow)
+with use_mesh(mesh):
+    lowered = built["jitted"].lower(*built["args"])
+compiled = lowered.compile()
+cost = compiled.cost_analysis()
+text = compiled.as_text()
+coll = costmodel.parse_collectives(text)
+mem = compiled.memory_analysis()
+print(f"== {args.arch} x {args.shape} @ {args.mesh}, "
+      f"depth={args.depth_groups} group(s), cell={cell}")
+print(f"flops/dev {cost.get('flops', 0):.3e}  "
+      f"bytes/dev {cost.get('bytes accessed', 0):.3e}")
+print(f"peak/dev {(mem.argument_size_in_bytes + mem.temp_size_in_bytes + mem.output_size_in_bytes - mem.alias_size_in_bytes) / 2**30:.2f} GiB "
+      f"(args {mem.argument_size_in_bytes / 2**30:.2f}, "
+      f"temp {mem.temp_size_in_bytes / 2**30:.2f})")
+print("collectives (bytes, count):")
+for kind in coll.bytes_by_kind:
+    if coll.count_by_kind[kind]:
+        print(f"  {kind:20s} {coll.bytes_by_kind[kind]:.3e}  "
+              f"x{coll.count_by_kind[kind]}")
+
+# biggest collective ops
+sizes = []
+for line in text.splitlines():
+    m = re.search(
+        r"=\s+(?P<shape>\S+)\s+(?P<kind>all-gather|all-reduce|"
+        r"reduce-scatter|all-to-all|collective-permute)(-start)?\(",
+        line)
+    if m and "-done(" not in line:
+        nbytes = costmodel._shape_bytes(m.group("shape"))
+        sizes.append((nbytes, m.group("kind"),
+                      line.strip()[:140]))
+sizes.sort(reverse=True)
+print("\ntop-10 collective ops:")
+for nbytes, kind, line in sizes[:10]:
+    print(f"  {nbytes / 2**20:9.1f}MiB {kind:18s} {line[:120]}")
+
+if args.dump_hlo:
+    with open(args.dump_hlo, "w") as f:
+        f.write(text)
+    print(f"\nHLO written to {args.dump_hlo} ({len(text)} chars)")

@@ -1,0 +1,65 @@
+"""Render the §Roofline markdown table from dry-run artifacts + perf log.
+
+    PYTHONPATH=src python experiments/render_roofline_md.py >> EXPERIMENTS.md
+"""
+
+import glob
+import json
+import os
+
+
+def rows_from(dryrun_dir):
+    out = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*", "*.json"))):
+        r = json.load(open(path))
+        mesh = os.path.basename(os.path.dirname(path))
+        roof, meta = r["roofline"], r["meta"]
+        out.append({
+            "mesh": mesh, "arch": meta["arch"], "shape": meta["shape"],
+            "C": roof["compute_s"], "M": roof["memory_s"],
+            "X": roof["collective_s"],
+            "step": roof["step_time_no_overlap"],
+            "dom": roof["dominant"],
+            "useful": roof.get("useful_ratio") or 0,
+            "frac": roof.get("roofline_fraction") or 0,
+            "peak": r["memory"]["peak_bytes"] / 2**30,
+        })
+    return out
+
+
+def main():
+    print("\n#### Baseline roofline table (single-pod 16x16; terms s/device)\n")
+    print("| arch | shape | C | M | X | step | dominant | useful | frac | peak GiB |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows_from("experiments/dryrun"):
+        if r["mesh"] != "single_pod_16x16":
+            continue
+        print(f"| {r['arch']} | {r['shape']} | {r['C']:.3f} | {r['M']:.3f} "
+              f"| {r['X']:.3f} | {r['step']:.3f} | {r['dom']} "
+              f"| {r['useful']:.2f} | {r['frac']:.4f} | {r['peak']:.1f} |")
+    print("\n#### Multi-pod (2x16x16) — compile proof + terms\n")
+    print("| arch | shape | step | dominant | peak GiB |")
+    print("|---|---|---|---|---|")
+    for r in rows_from("experiments/dryrun"):
+        if r["mesh"] != "multi_pod_2x16x16":
+            continue
+        print(f"| {r['arch']} | {r['shape']} | {r['step']:.3f} "
+              f"| {r['dom']} | {r['peak']:.1f} |")
+    # optimized entries from the perf log
+    if os.path.exists("experiments/perf_log.json"):
+        log = json.load(open("experiments/perf_log.json"))
+        print("\n#### §Perf optimized cells (post-hillclimb defaults)\n")
+        print("| arch | shape | variant | step | frac | peak GiB |")
+        print("|---|---|---|---|---|---|")
+        for e in log:
+            if not e.get("ok"):
+                continue
+            roof = e["roofline"]
+            print(f"| {e['arch']} | {e['shape']} | {e['variant']} "
+                  f"| {roof['step_time_no_overlap']:.3f} "
+                  f"| {roof.get('roofline_fraction') or 0:.4f} "
+                  f"| {e['peak_gib']:.1f} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,157 @@
+"""Architecture registry: ``get_config(arch)``, smoke variants, input specs."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (
+    ModelConfig,
+    MoEConfig,
+    ShapeConfig,
+    SHAPES,
+    applicable_shapes,
+)
+
+from repro.configs import (  # noqa: E402
+    arctic_480b,
+    gemma_7b,
+    granite_moe_1b_a400m,
+    hubert_xlarge,
+    internvl2_26b,
+    jamba_v0_1_52b,
+    llama3_8b,
+    qwen3_0_6b,
+    qwen3_32b,
+    rwkv6_3b,
+)
+
+_REGISTRY: dict[str, ModelConfig] = {
+    m.CONFIG.name: m.CONFIG
+    for m in (
+        granite_moe_1b_a400m,
+        arctic_480b,
+        internvl2_26b,
+        gemma_7b,
+        qwen3_0_6b,
+        qwen3_32b,
+        llama3_8b,
+        rwkv6_3b,
+        hubert_xlarge,
+        jamba_v0_1_52b,
+    )
+}
+
+ARCH_IDS = tuple(sorted(_REGISTRY))
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch!r}; available: {ARCH_IDS}")
+    return _REGISTRY[arch]
+
+
+def smoke_config(arch: str) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests (real forward/step)."""
+    cfg = get_config(arch)
+    moe = cfg.moe
+    if moe is not None:
+        moe = dataclasses.replace(
+            moe,
+            n_experts=4,
+            top_k=min(moe.top_k, 2),
+            d_ff_expert=64,
+            d_ff_dense=64 if moe.dense_residual else 0,
+            n_groups=1,
+            # headroom so tiny smoke batches never drop tokens (capacity
+            # dropping at the production factor is exercised separately)
+            capacity_factor=8.0,
+        )
+    return dataclasses.replace(
+        cfg,
+        n_layers=2 * cfg.pattern_period,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2 if cfg.n_kv_heads < cfg.n_heads else 4,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=503 if cfg.family == "audio" else 512,
+        moe=moe,
+        embed_in_dim=24 if cfg.input_kind == "embeddings" or cfg.family == "vlm" else 0,
+        n_patches=4 if cfg.family == "vlm" else 0,
+        rwkv_head_size=16,
+        mamba_d_state=4,
+        mamba_d_conv=4,
+        param_dtype="float32",
+    )
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation) + concrete batches
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct pytree for every model input of one shape cell.
+
+    train/prefill: the full (B, S) batch.  decode: (B, 1) new tokens (the
+    KV cache / SSM state is part of the step signature, built separately).
+    """
+    B = shape.global_batch
+    S = shape.seq_len if shape.kind != "decode" else 1
+    f32 = jnp.float32
+    i32 = jnp.int32
+    if cfg.family == "vlm":
+        n_txt = max(S - cfg.n_patches, 1) if shape.kind != "decode" else 1
+        spec = {
+            "tokens": jax.ShapeDtypeStruct((B, n_txt), i32),
+            "patches": jax.ShapeDtypeStruct(
+                (B, cfg.n_patches if shape.kind != "decode" else 0,
+                 cfg.embed_in_dim),
+                f32,
+            ),
+        }
+        if shape.kind == "decode":
+            # decoding continues the text stream; no new patches
+            spec = {"tokens": jax.ShapeDtypeStruct((B, 1), i32),
+                    "patches": jax.ShapeDtypeStruct((B, 0, cfg.embed_in_dim), f32)}
+        return spec
+    if cfg.input_kind == "embeddings":
+        spec = {
+            "embeds": jax.ShapeDtypeStruct((B, S, cfg.embed_in_dim), f32),
+        }
+        if shape.kind == "train":
+            spec["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+        return spec
+    return {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+
+
+def concrete_batch(cfg: ModelConfig, shape: ShapeConfig, seed: int = 0) -> dict:
+    """Small real batch matching input_specs (for smoke tests/examples)."""
+    specs = input_specs(cfg, shape)
+    key = jax.random.PRNGKey(seed)
+    out = {}
+    for name, s in specs.items():
+        key, k = jax.random.split(key)
+        if s.dtype == jnp.int32:
+            hi = cfg.vocab_size
+            out[name] = jax.random.randint(k, s.shape, 0, hi, dtype=s.dtype)
+        else:
+            out[name] = jax.random.normal(k, s.shape, dtype=s.dtype)
+    return out
+
+
+__all__ = [
+    "ModelConfig",
+    "MoEConfig",
+    "ShapeConfig",
+    "SHAPES",
+    "ARCH_IDS",
+    "applicable_shapes",
+    "get_config",
+    "smoke_config",
+    "input_specs",
+    "concrete_batch",
+]

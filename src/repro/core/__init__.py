@@ -1,0 +1,46 @@
+"""Core: the paper's profiling -> modeling -> prediction pipeline.
+
+Paper: "On Modeling Dependency between MapReduce Configuration Parameters and
+Total Execution Time" (Rizvandi et al., 2012).
+"""
+
+from repro.core.features import (
+    FeatureSpec,
+    design_matrix,
+    fit_feature_spec,
+    grid,
+)
+from repro.core.profiler import ProfileResult, profile_experiments, timeit
+from repro.core.predictor import ModelDatabase
+from repro.core.regression import (
+    RegressionModel,
+    fit,
+    prediction_error_stats,
+)
+from repro.core.costmodel import (
+    RooflineReport,
+    parse_collectives,
+    roofline_from_compiled,
+)
+from repro.core.tuner import TuneResult, mesh_factorizations, tune, validate
+
+__all__ = [
+    "FeatureSpec",
+    "design_matrix",
+    "fit_feature_spec",
+    "grid",
+    "ProfileResult",
+    "profile_experiments",
+    "timeit",
+    "ModelDatabase",
+    "RegressionModel",
+    "fit",
+    "prediction_error_stats",
+    "RooflineReport",
+    "parse_collectives",
+    "roofline_from_compiled",
+    "TuneResult",
+    "mesh_factorizations",
+    "tune",
+    "validate",
+]

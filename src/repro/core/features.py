@@ -1,0 +1,124 @@
+"""Polynomial design matrix for config->time regression (paper Eqn. 1-2).
+
+The paper's feature map expands each of the N configuration parameters into
+per-parameter monomials up to a fixed degree (3 in the paper), with NO cross
+terms, plus a single intercept column:
+
+    row(p) = [1, p_1, p_1^2, p_1^3, ..., p_N, p_N^2, p_N^3]
+
+``PolynomialFeatures`` reproduces this exactly in paper-faithful mode
+(``degree=3, cross_terms=False, scale=False``).  Beyond-paper options:
+
+* ``scale=True``      -- affinely map each raw parameter to [0, 1] before
+  expansion (fit-time ranges are stored).  Pure conditioning fix: the model
+  class is identical (an affine change of variables of a polynomial basis
+  spans the same function space), but the normal equations go from condition
+  number ~1e9 (p up to 40, cubed) to ~1e3, which matters in float32.
+* ``cross_terms=True`` -- add pairwise products p_i * p_j (i<j), enriching the
+  model for interacting knobs (e.g. mappers x reducers contention).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class FeatureSpec:
+    """Immutable description of a fitted feature map."""
+
+    n_params: int
+    degree: int = 3
+    cross_terms: bool = False
+    scale: bool = False
+    # Fit-time parameter ranges (used only when scale=True).
+    lo: tuple[float, ...] | None = None
+    hi: tuple[float, ...] | None = None
+
+    @property
+    def n_features(self) -> int:
+        n = 1 + self.n_params * self.degree
+        if self.cross_terms:
+            n += self.n_params * (self.n_params - 1) // 2
+        return n
+
+    def column_names(self) -> list[str]:
+        names = ["1"]
+        for i in range(self.n_params):
+            for d in range(1, self.degree + 1):
+                names.append(f"p{i}" if d == 1 else f"p{i}^{d}")
+        if self.cross_terms:
+            for i in range(self.n_params):
+                for j in range(i + 1, self.n_params):
+                    names.append(f"p{i}*p{j}")
+        return names
+
+
+def fit_feature_spec(
+    params: np.ndarray | jnp.ndarray,
+    *,
+    degree: int = 3,
+    cross_terms: bool = False,
+    scale: bool = False,
+) -> FeatureSpec:
+    """Build a FeatureSpec from training parameter rows (M, N)."""
+    params = np.asarray(params, dtype=np.float64)
+    if params.ndim != 2:
+        raise ValueError(f"params must be (M, N), got shape {params.shape}")
+    n_params = params.shape[1]
+    lo = hi = None
+    if scale:
+        lo = tuple(float(x) for x in params.min(axis=0))
+        hi_raw = params.max(axis=0)
+        # Guard degenerate (constant) parameters: width 1 keeps the affine
+        # map invertible without changing the constant column it produces.
+        hi = tuple(
+            float(h if h > l else l + 1.0) for l, h in zip(lo, hi_raw)
+        )
+    return FeatureSpec(
+        n_params=n_params, degree=degree, cross_terms=cross_terms,
+        scale=scale, lo=lo, hi=hi,
+    )
+
+
+def design_matrix(spec: FeatureSpec, params) -> jnp.ndarray:
+    """Expand raw parameter rows (M, N) into the design matrix P (M, F).
+
+    Differentiable and jit-able; the expansion itself is the (tiny) compute
+    kernel of the paper's modeling phase.
+    """
+    p = jnp.asarray(params, dtype=jnp.float32)
+    if p.ndim == 1:
+        p = p[None, :]
+    if p.shape[-1] != spec.n_params:
+        raise ValueError(
+            f"expected {spec.n_params} parameters, got {p.shape[-1]}"
+        )
+    if spec.scale:
+        lo = jnp.asarray(spec.lo, dtype=jnp.float32)
+        hi = jnp.asarray(spec.hi, dtype=jnp.float32)
+        p = (p - lo) / (hi - lo)
+    cols = [jnp.ones(p.shape[:-1] + (1,), dtype=p.dtype)]
+    for i in range(spec.n_params):
+        pi = p[..., i : i + 1]
+        acc = pi
+        for _ in range(spec.degree):
+            cols.append(acc)
+            acc = acc * pi
+    if spec.cross_terms:
+        for i in range(spec.n_params):
+            for j in range(i + 1, spec.n_params):
+                cols.append(p[..., i : i + 1] * p[..., j : j + 1])
+    # Paper ordering: [1, p1, p1^2, p1^3, p2, p2^2, p2^3, ...]
+    return jnp.concatenate(cols, axis=-1)
+
+
+def grid(ranges: Sequence[tuple[int, int, int]]) -> np.ndarray:
+    """Cartesian experiment grid: ranges[(lo, hi, step)] per parameter."""
+    axes = [np.arange(lo, hi + 1, step) for lo, hi, step in ranges]
+    mesh = np.meshgrid(*axes, indexing="ij")
+    return np.stack([m.ravel() for m in mesh], axis=-1).astype(np.float64)

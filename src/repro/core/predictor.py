@@ -1,0 +1,80 @@
+"""Prediction phase + model database (paper Fig. 2b).
+
+The paper keeps one fitted model per application in a database, keyed so that
+a model is only ever used for the *same application on the same platform*
+(its stated validity boundary).  ``ModelDatabase`` enforces that key structure
+and persists to JSON so a long-lived scheduler can reload models across
+restarts — the paper's motivating use case (smarter job scheduling).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.regression import RegressionModel
+
+
+class ModelDatabase:
+    """Per-(application, platform) store of fitted RegressionModels."""
+
+    def __init__(self) -> None:
+        self._models: dict[tuple[str, str], RegressionModel] = {}
+
+    @staticmethod
+    def _key(application: str, platform: str) -> tuple[str, str]:
+        return (application, platform)
+
+    def put(self, application: str, platform: str, model: RegressionModel):
+        self._models[self._key(application, platform)] = model
+
+    def get(self, application: str, platform: str) -> RegressionModel:
+        key = self._key(application, platform)
+        if key not in self._models:
+            raise KeyError(
+                f"no model for application={application!r} on "
+                f"platform={platform!r}; the paper's models do not transfer "
+                f"across applications or platforms — profile first."
+            )
+        return self._models[key]
+
+    def __contains__(self, key: tuple[str, str]) -> bool:
+        return self._key(*key) in self._models
+
+    def __len__(self) -> int:
+        return len(self._models)
+
+    def applications(self) -> list[tuple[str, str]]:
+        return sorted(self._models)
+
+    def predict(
+        self, application: str, platform: str, params: Sequence[float]
+    ) -> float:
+        """Paper Fig. 2b: look up the app's model, evaluate Eqn. 5."""
+        model = self.get(application, platform)
+        return float(np.asarray(model.predict(np.asarray(params))).ravel()[0])
+
+    # ---- persistence ----------------------------------------------------
+
+    def save(self, path: str) -> None:
+        payload = {
+            f"{app}\x00{plat}": model.to_dict()
+            for (app, plat), model in self._models.items()
+        }
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(payload, f)
+        os.replace(tmp, path)  # atomic publish
+
+    @classmethod
+    def load(cls, path: str) -> "ModelDatabase":
+        db = cls()
+        with open(path) as f:
+            payload = json.load(f)
+        for key, d in payload.items():
+            app, plat = key.split("\x00")
+            db.put(app, plat, RegressionModel.from_dict(d))
+        return db

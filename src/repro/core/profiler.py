@@ -1,0 +1,108 @@
+"""Profiling phase (paper Fig. 2a).
+
+``profile_experiments`` runs an application callable under each configuration
+in an experiment set, ``repeats`` times each (paper: 5), and keeps the mean
+total execution time — exactly the paper's pruning-by-averaging mechanism.
+
+Two time sources are supported, both behind the same interface:
+
+* ``WallClockTimer``   — real wall time with ``block_until_ready`` fencing
+  (used for the MapReduce reproduction and small-model runs on host devices);
+* ``AnalyticTimer``    — roofline-term time from a compiled dry-run artifact
+  (used for at-scale workloads in this TPU-less container; see
+  ``core.costmodel``).
+
+The profiler is deliberately ignorant of what the "application" is: it only
+sees ``fn(config) -> float seconds``.  That mirrors the paper's black-box
+treatment of MapReduce jobs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ProfileResult:
+    """Profiling-phase output: the training set for the modeling phase."""
+
+    params: np.ndarray  # (M, N) configuration values
+    times: np.ndarray   # (M,)  mean execution time per experiment (seconds)
+    raw_times: np.ndarray  # (M, repeats) all repeats, for variance analysis
+    param_names: tuple[str, ...]
+
+    @property
+    def n_experiments(self) -> int:
+        return self.params.shape[0]
+
+    def repeat_cv(self) -> np.ndarray:
+        """Coefficient of variation across repeats, per experiment.
+
+        The paper attributes residual prediction error to "temporal changes";
+        this quantifies that noise floor.
+        """
+        mean = self.raw_times.mean(axis=1)
+        std = self.raw_times.std(axis=1)
+        return std / np.maximum(mean, 1e-12)
+
+
+def timeit(fn: Callable[[], object]) -> float:
+    """Wall-clock one call, fencing async dispatch."""
+    import jax
+
+    t0 = time.perf_counter()
+    out = fn()
+    jax.block_until_ready(out)
+    return time.perf_counter() - t0
+
+
+def profile_experiments(
+    run_fn: Callable[[Sequence[float]], float],
+    configs: np.ndarray,
+    *,
+    repeats: int = 5,
+    param_names: Sequence[str] | None = None,
+    warmup: int = 0,
+    reducer: str = "mean",
+    verbose: bool = False,
+) -> ProfileResult:
+    """Run every config ``repeats`` times; aggregate per paper Fig. 2a.
+
+    run_fn(config_row) must return the total execution time in seconds for
+    one run of the application under that configuration.
+
+    ``reducer``: "mean" is paper-faithful; "median"/"min" are beyond-paper
+    noise-robust options (documented in EXPERIMENTS.md when used).
+    """
+    configs = np.asarray(configs, dtype=np.float64)
+    if configs.ndim != 2:
+        raise ValueError(f"configs must be (M, N), got {configs.shape}")
+    M, N = configs.shape
+    names = tuple(param_names or (f"p{i}" for i in range(N)))
+    raw = np.zeros((M, repeats), dtype=np.float64)
+    for i, row in enumerate(configs):
+        for _ in range(warmup):
+            run_fn(row)
+        for r in range(repeats):
+            raw[i, r] = float(run_fn(row))
+        if verbose:
+            print(
+                f"[profiler] config {i + 1}/{M} "
+                f"{dict(zip(names, row))}: "
+                f"mean={raw[i].mean():.4f}s cv={raw[i].std() / max(raw[i].mean(), 1e-12):.3f}"
+            )
+    if reducer == "mean":
+        times = raw.mean(axis=1)
+    elif reducer == "median":
+        times = np.median(raw, axis=1)
+    elif reducer == "min":
+        times = raw.min(axis=1)
+    else:
+        raise ValueError(f"unknown reducer {reducer!r}")
+    return ProfileResult(
+        params=configs, times=times, raw_times=raw, param_names=names
+    )

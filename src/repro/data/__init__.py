@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, TokenPipeline, host_batches
+
+__all__ = ["DataConfig", "TokenPipeline", "host_batches"]

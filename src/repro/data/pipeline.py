@@ -1,0 +1,89 @@
+"""Deterministic, resumable, sharded synthetic token pipeline.
+
+Large-scale requirements this covers:
+
+* **determinism / resumability** — batches are a pure function of
+  (seed, step); restoring from a checkpoint at step k resumes the exact
+  stream with a constant-time skip (no replaying k steps of state);
+* **per-host sharding** — each data-parallel host generates only its slice
+  of the global batch (no host ever materializes the global batch);
+* **straggler isolation** — generation is stateless per step, so a re-run
+  of a failed host's slice is trivially consistent.
+
+The "corpus" is a seeded markov-ish token stream with enough structure for
+loss to decrease (shifted-window next-token dependency), which makes the
+end-to-end example (examples/train_lm.py) genuinely learnable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    # structure of the synthetic language (mixture weight of copy-prev rule)
+    structure: float = 0.7
+
+
+class TokenPipeline:
+    """Stateless-per-step synthetic stream; state == the step counter."""
+
+    def __init__(self, cfg: DataConfig, *, host_id: int = 0,
+                 n_hosts: int = 1):
+        if cfg.global_batch % n_hosts:
+            raise ValueError(
+                f"global_batch {cfg.global_batch} not divisible by "
+                f"{n_hosts} hosts"
+            )
+        self.cfg = cfg
+        self.host_id = host_id
+        self.n_hosts = n_hosts
+        self.local_batch = cfg.global_batch // n_hosts
+
+    def batch_at(self, step: int) -> dict:
+        """The (host-local slice of the) batch for one global step."""
+        cfg = self.cfg
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step),
+            self.host_id,
+        )
+        k1, k2 = jax.random.split(key)
+        base = jax.random.randint(
+            k1, (self.local_batch, cfg.seq_len), 0, cfg.vocab_size,
+            dtype=jnp.int32,
+        )
+        # learnable structure: odd positions are (with prob `structure`) a
+        # fixed function of the OBSERVED even token before them, so a
+        # next-token model can reach a loss floor of ~0.5*ln(V).
+        gate = jax.random.bernoulli(
+            k2, self.cfg.structure, (self.local_batch, cfg.seq_len)
+        )
+        prev_even = jnp.roll(base, 1, axis=1)
+        structured = (prev_even * 7 + 1) % cfg.vocab_size
+        odd = (jnp.arange(cfg.seq_len) % 2 == 1)[None, :]
+        tokens = jnp.where(odd & gate, structured, base)
+        return {"tokens": tokens}
+
+    def state_dict(self, step: int) -> dict:
+        return {"step": int(step), "seed": self.cfg.seed}
+
+    @staticmethod
+    def resume_step(state: dict) -> int:
+        return int(state["step"])
+
+
+def host_batches(pipeline: TokenPipeline, start_step: int = 0):
+    """Infinite iterator of (step, batch)."""
+    step = start_step
+    while True:
+        yield step, pipeline.batch_at(step)
+        step += 1

@@ -1,0 +1,114 @@
+"""Pallas TPU flash-decode kernel: few queries vs a long KV cache.
+
+Decode is memory-bound (the whole cache streams HBM->VMEM once); the kernel
+tiles the cache into ``block_k`` chunks and keeps the online-softmax
+accumulators in VMEM scratch.
+
+Grid: (B * n_kv, n_k_blocks) — cache chunks innermost.  The dynamic valid
+length (how much of the cache is filled) arrives as a scalar-prefetch
+operand in SMEM, so the same compiled kernel serves any fill level and
+fully-invalid chunks are masked (and cheap: one compare + select per chunk).
+
+Blocks:
+    q   : (1, G*Sq_pad, d)  — all grouped query heads of one kv head
+    k/v : (1, block_k, d)
+    o   : (1, G*Sq_pad, d)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_K = 512
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
+                   acc_scr, *, sm_scale, block_k, n_k_blocks, n_q, sq):
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    kv_len = len_ref[0]
+    k_start = ki * block_k
+
+    @pl.when(k_start < kv_len)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)   # (n_q = G*Sq_pad, d)
+        k = k_ref[0].astype(jnp.float32)   # (block_k, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * sm_scale                       # (n_q, block_k)
+        # rows are (g, qpos) pairs; query qpos sits at kv_len - sq + qpos
+        row_q = jax.lax.broadcasted_iota(jnp.int32, (n_q, block_k), 0) % sq
+        qpos = kv_len - sq + row_q
+        kpos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, (n_q, block_k), 1
+        )
+        mask = kpos <= qpos
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = corr * l_scr[...] + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_k_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_fwd(q, k, v, kv_len, *, sm_scale: float,
+                         sq: int,
+                         block_k: int = DEFAULT_BLOCK_K,
+                         interpret: bool = True):
+    """q: (B*n_kv, n_q=G*Sq_pad, d); k, v: (B*n_kv, S_max, d); kv_len ()."""
+    BH, n_q, d = q.shape
+    S_max = k.shape[1]
+    n_k = S_max // block_k
+    kernel = functools.partial(
+        _decode_kernel,
+        sm_scale=sm_scale,
+        block_k=block_k,
+        n_k_blocks=n_k,
+        n_q=n_q,
+        sq=sq,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(BH, n_k),
+        in_specs=[
+            pl.BlockSpec((1, n_q, d), lambda h, ki, len_ref: (h, 0, 0)),
+            pl.BlockSpec((1, block_k, d), lambda h, ki, len_ref: (h, ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda h, ki, len_ref: (h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n_q, d), lambda h, ki, len_ref: (h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((n_q,), jnp.float32),
+            pltpu.VMEM((n_q,), jnp.float32),
+            pltpu.VMEM((n_q, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((BH, n_q, d), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray([kv_len], jnp.int32), q, k, v)

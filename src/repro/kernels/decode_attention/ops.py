@@ -1,0 +1,55 @@
+"""jit'd public wrapper for the flash-decode kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import (
+    DEFAULT_BLOCK_K,
+    decode_attention_fwd,
+)
+
+LANE = 128
+
+
+def _pad_axis(x, axis, mult):
+    pad = (-x.shape[axis]) % mult
+    if pad:
+        w = [(0, 0)] * x.ndim
+        w[axis] = (0, pad)
+        x = jnp.pad(x, w)
+    return x
+
+
+@partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(q, k_cache, v_cache, kv_len, *,
+                     block_k: int = DEFAULT_BLOCK_K,
+                     interpret: bool = True):
+    """q: (B, Sq, Hq, hd); caches: (B, S_max, n_kv, hd); kv_len scalar.
+
+    Returns (B, Sq, Hq, hd) — matches ``ref.decode_attention_ref``.
+    """
+    B, Sq, Hq, hd = q.shape
+    S_max, n_kv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // n_kv
+    # cache chunk size: cap at the (128-aligned) cache length
+    bk = min(block_k, ((S_max + 127) // 128) * 128)
+    # layout: (B, n_kv, G*Sq, hd)
+    qk = q.reshape(B, Sq, n_kv, G, hd).transpose(0, 2, 3, 1, 4)
+    qk = qk.reshape(B * n_kv, G * Sq, hd)
+    kk = k_cache.transpose(0, 2, 1, 3).reshape(B * n_kv, S_max, hd)
+    vk = v_cache.transpose(0, 2, 1, 3).reshape(B * n_kv, S_max, hd)
+    kk = _pad_axis(kk, 1, bk)
+    vk = _pad_axis(vk, 1, bk)
+    qk = _pad_axis(qk, 2, LANE)
+    kk = _pad_axis(kk, 2, LANE)
+    vk = _pad_axis(vk, 2, LANE)
+    out = decode_attention_fwd(
+        qk, kk, vk, kv_len, sm_scale=hd**-0.5, sq=Sq, block_k=bk,
+        interpret=interpret,
+    )
+    out = out[:, :, :hd].reshape(B, n_kv, G, Sq, hd).transpose(0, 3, 1, 2, 4)
+    return out.reshape(B, Sq, Hq, hd)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for decode attention (single/few queries vs long KV)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k_cache, v_cache, kv_len):
+    """q: (B, Sq, Hq, hd); caches: (B, S_max, n_kv, hd); kv_len scalar.
+
+    Attends q (at positions kv_len - Sq .. kv_len - 1) over cache[:kv_len],
+    causal within the fresh block.  fp32 softmax.
+    """
+    B, Sq, Hq, hd = q.shape
+    S_max, n_kv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // n_kv
+    qg = q.reshape(B, Sq, n_kv, G, hd)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_cache).astype(jnp.float32)
+    logits = logits * hd**-0.5
+    qpos = kv_len - Sq + jnp.arange(Sq)
+    kpos = jnp.arange(S_max)
+    mask = kpos[None, :] <= qpos[:, None]
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v_cache)
+    return out.reshape(B, Sq, Hq, hd)

@@ -1,0 +1,126 @@
+"""Pallas TPU flash-attention forward kernel (causal/bidirectional, GQA).
+
+Grid: (B * n_heads, n_q_blocks, n_k_blocks) — k blocks innermost so the
+online-softmax accumulators (m, l, acc) persist in VMEM scratch across the
+k sweep.  BlockSpecs tile Q/K/V/O into VMEM:
+
+    q   : (1, block_q, head_dim)   index (h, qi, ki) -> (h, qi, 0)
+    k/v : (1, block_k, head_dim)   index (h, qi, ki) -> (h // G, ki, 0)
+    o   : (1, block_q, head_dim)   index (h, qi, ki) -> (h, qi, 0)
+
+GQA is expressed in the K/V index map (q-head h reads kv-head h // G) — no
+repeated-KV materialization, matching the reference einsum semantics.
+Fully-masked causal blocks are skipped via pl.when (no FLOPs burned).
+MXU alignment: block_q/block_k default 128; head_dim padded to 128 by ops.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  sm_scale: float, causal: bool, block_q: int, block_k: int,
+                  n_k_blocks: int, seq_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)            # (bq, d)
+        k = k_ref[0].astype(jnp.float32)            # (bk, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * sm_scale                                # (bq, bk)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = kpos < seq_k                          # tail padding
+        if causal:
+            mask = mask & (qpos >= kpos)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = corr * l_prev + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    if causal:
+        # skip blocks strictly above the diagonal (no FLOPs burned)
+        pl.when(k_start <= q_start + block_q - 1)(_compute)
+    else:
+        _compute()
+
+    @pl.when(ki == n_k_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal: bool = True,
+                        sm_scale: float | None = None,
+                        block_q: int = DEFAULT_BLOCK_Q,
+                        block_k: int = DEFAULT_BLOCK_K,
+                        true_seq_k: int | None = None,
+                        interpret: bool = True):
+    """q: (BH, Sq, d); k, v: (B*n_kv, Sk, d) with BH = B*n_kv*G.
+
+    Sq/Sk must be pre-padded to block multiples by ops.py; d MXU-aligned.
+    ``true_seq_k``: unpadded K length — tail-padding keys are masked out.
+    """
+    BH, Sq, d = q.shape
+    BK, Sk, _ = k.shape
+    G = BH // BK
+    n_q = Sq // block_q
+    n_k = Sk // block_k
+    kernel = functools.partial(
+        _flash_kernel,
+        sm_scale=sm_scale if sm_scale is not None else d**-0.5,
+        causal=causal,
+        block_q=block_q,
+        block_k=block_k,
+        n_k_blocks=n_k,
+        seq_k=true_seq_k if true_seq_k is not None else Sk,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda h, qi, ki: (h, qi, 0)),
+            pl.BlockSpec((1, block_k, d), lambda h, qi, ki: (h // G, ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda h, qi, ki: (h // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda h, qi, ki: (h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

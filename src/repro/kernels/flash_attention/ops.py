@@ -1,0 +1,67 @@
+"""jit'd public wrapper for the flash-attention kernel.
+
+Handles layout (model-facing (B, S, H, hd) <-> kernel-facing (BH, S, d)),
+GQA head grouping, sequence padding to block multiples, and head_dim
+padding to the 128-lane MXU width.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import (
+    DEFAULT_BLOCK_K,
+    DEFAULT_BLOCK_Q,
+    flash_attention_fwd,
+)
+
+LANE = 128
+
+
+def _pad_to(x, axis: int, mult: int):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+@partial(
+    jax.jit,
+    static_argnames=("causal", "sm_scale", "block_q", "block_k", "interpret"),
+)
+def flash_attention(q, k, v, *, causal: bool = True,
+                    sm_scale: float | None = None,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = True):
+    """q: (B, Sq, Hq, hd); k, v: (B, Sk, n_kv, hd) -> (B, Sq, Hq, hd)."""
+    B, Sq, Hq, hd = q.shape
+    n_kv = k.shape[2]
+    G = Hq // n_kv
+    Sk = k.shape[1]
+    bq = min(block_q, max(16, 1 << (Sq - 1).bit_length()))
+    bk = min(block_k, max(16, 1 << (Sk - 1).bit_length()))
+    # kernel layout: q (B, n_kv, G, Sq, hd) -> (B*n_kv*G, Sq, hd)
+    qk = q.reshape(B, Sq, n_kv, G, hd).transpose(0, 2, 3, 1, 4)
+    qk = qk.reshape(B * n_kv * G, Sq, hd)
+    kk = k.transpose(0, 2, 1, 3).reshape(B * n_kv, Sk, hd)
+    vk = v.transpose(0, 2, 1, 3).reshape(B * n_kv, Sk, hd)
+    qk, pad_q = _pad_to(qk, 1, bq)
+    kk, _ = _pad_to(kk, 1, bk)
+    vk, _ = _pad_to(vk, 1, bk)
+    qk, pad_d = _pad_to(qk, 2, LANE)
+    kk, _ = _pad_to(kk, 2, LANE)
+    vk, _ = _pad_to(vk, 2, LANE)
+    scale = sm_scale if sm_scale is not None else hd**-0.5
+    out = flash_attention_fwd(
+        qk, kk, vk, causal=causal, sm_scale=scale,
+        block_q=bq, block_k=bk, true_seq_k=Sk, interpret=interpret,
+    )
+    out = out[:, : Sq, : hd]
+    out = out.reshape(B, n_kv, G, Sq, hd).transpose(0, 3, 1, 2, 4)
+    return out.reshape(B, Sq, Hq, hd)

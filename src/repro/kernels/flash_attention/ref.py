@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for flash attention (GQA, causal/bidirectional)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, sm_scale: float | None = None):
+    """q: (B, Sq, Hq, hd); k, v: (B, Sk, n_kv, hd) -> (B, Sq, Hq, hd).
+
+    fp32 softmax, GQA via grouped einsum (no repeated-KV materialization).
+    """
+    B, Sq, Hq, hd = q.shape
+    n_kv = k.shape[2]
+    G = Hq // n_kv
+    scale = sm_scale if sm_scale is not None else hd**-0.5
+    qg = q.reshape(B, Sq, n_kv, G, hd)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32)
+    logits = logits * scale
+    if causal:
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(k.shape[1])[None, :]
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(B, Sq, Hq, hd)

@@ -1,0 +1,117 @@
+"""Pallas TPU kernel for the chunked WKV6 recurrence (data-dependent decay).
+
+Grid: (B*H, n_chunks) — chunks innermost; the per-head state S (hs x hs)
+lives in VMEM scratch across the chunk sweep, so HBM traffic is exactly one
+pass over r/k/v/w plus the output (the recurrence itself never round-trips).
+
+Within a chunk the recurrence is parallelized with the same overflow-safe
+log-space factorization as the XLA reference path (`models/ssm.py`):
+all decay factors are exp() of non-positive cumulative-log differences.
+
+Blocks (hs = head_size, lane-padded by ops.py; C = chunk length):
+    r/k/v/w : (1, C, hs)   index (bh, ci) -> (bh, ci, 0)
+    u       : (1, hs)      index (bh, ci) -> (bh % H, 0)
+    o       : (1, C, hs)   index (bh, ci) -> (bh, ci, 0)
+    S_out   : (1, hs, hs)  index (bh, ci) -> (bh, 0, 0)   (final state)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 64
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_out_ref,
+                 S_scr, *, chunk: int, n_chunks: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        S_scr[...] = jnp.zeros_like(S_scr)
+
+    r = r_ref[0].astype(jnp.float32)   # (C, hs)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)   # (hs,)
+    S0 = S_scr[...]                    # (hs_k, hs_v)
+
+    logw = jnp.log(jnp.clip(w, 1e-8, 1.0))
+    logD = jnp.cumsum(logw, axis=0)            # (C, hs), <= 0
+    logDm1 = logD - logw                       # log D_{j-1}
+    # inter-chunk: out_q += (r_q * D_{q-1}) @ S0
+    out = jax.lax.dot_general(
+        r * jnp.exp(logDm1), S0, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    # intra-chunk: att[q, d] = sum_c r[q,c] k[d,c] exp(logDm1[q,c]-logD[d,c])
+    pair = jnp.exp(
+        jnp.minimum(logDm1[:, None, :] - logD[None, :, :], 0.0)
+    )                                          # (Cq, Cd, hs)
+    att = jnp.einsum("qc,dc,qdc->qd", r, k, pair)
+    C = r.shape[0]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0) > \
+        jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+    att = jnp.where(tri, att, 0.0)
+    out = out + jax.lax.dot_general(
+        att, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    # bonus diagonal
+    bonus = jnp.sum(r * (u[None, :] * k), axis=1)   # (C,)
+    out = out + bonus[:, None] * v
+    o_ref[0] = out.astype(o_ref.dtype)
+    # state update
+    logD_C = logD[-1]                          # (hs,)
+    decay_i = jnp.exp(logD_C[None, :] - logD)  # (C, hs) <= 1
+    S_new = S0 * jnp.exp(logD_C)[:, None] + jax.lax.dot_general(
+        k * decay_i, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    S_scr[...] = S_new
+
+    @pl.when(ci == n_chunks - 1)
+    def _final():
+        s_out_ref[0] = S_new.astype(s_out_ref.dtype)
+
+
+def wkv6_fwd(r, k, v, w, u, *, chunk: int = DEFAULT_CHUNK,
+             interpret: bool = True):
+    """r,k,v,w: (BH, T, hs); u: (H, hs).  T must be a multiple of chunk.
+
+    Returns (out (BH, T, hs), S_final (BH, hs, hs)).
+    """
+    BH, T, hs = r.shape
+    H = u.shape[0]
+    n_chunks = T // chunk
+    kernel = functools.partial(
+        _wkv6_kernel, chunk=chunk, n_chunks=n_chunks
+    )
+    out, s_final = pl.pallas_call(
+        kernel,
+        grid=(BH, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, hs), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk, hs), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk, hs), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk, hs), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, hs), lambda bh, ci: (bh % H, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, hs), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, hs, hs), lambda bh, ci: (bh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, T, hs), r.dtype),
+            jax.ShapeDtypeStruct((BH, hs, hs), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hs, hs), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)
+    return out, s_final

@@ -1,0 +1,38 @@
+"""jit'd public wrapper for the WKV6 kernel (layout + padding)."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6.kernel import DEFAULT_CHUNK, wkv6_fwd
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r, k, v, w, u, *, chunk: int = DEFAULT_CHUNK,
+         interpret: bool = True):
+    """r,k,v,w: (B, T, H, hs); u: (H, hs) -> (out (B,T,H,hs), S (B,H,hs,hs)).
+
+    Zero initial state (the model carries state across calls itself via the
+    XLA path; kernel deployment fuses whole sequences).
+    """
+    B, T, H, hs = r.shape
+    pad_t = (-T) % chunk
+    def prep(x, fill=0.0):
+        if pad_t:
+            x = jnp.pad(
+                x, ((0, 0), (0, pad_t), (0, 0), (0, 0)),
+                constant_values=fill,
+            )
+        # (B, T, H, hs) -> (B*H, T, hs)
+        return x.transpose(0, 2, 1, 3).reshape(B * H, T + pad_t, hs)
+
+    rk = prep(r)
+    kk = prep(k)
+    vk = prep(v)
+    wk = prep(w, fill=1.0)  # pad decay=1: no state change on padding
+    out, s = wkv6_fwd(rk, kk, vk, wk, u, chunk=chunk, interpret=interpret)
+    out = out.reshape(B, H, T + pad_t, hs)[:, :, :T].transpose(0, 2, 1, 3)
+    return out, s.reshape(B, H, hs, hs)

@@ -1,0 +1,36 @@
+"""Pure-jnp step-scan oracle for the WKV6 recurrence.
+
+    out_t = r_t @ (S_{t-1} + (u * k_t) v_t^T)
+    S_t   = diag(w_t) S_{t-1} + k_t v_t^T
+
+All shapes per-head; the oracle scans one step at a time (the slow but
+obviously-correct formulation the chunked kernel is checked against).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, w, u, S0=None):
+    """r,k,v,w: (B, T, H, hs); u: (H, hs); S0: (B, H, hs, hs) or None.
+
+    Returns (out (B,T,H,hs), S_T).
+    """
+    B, T, H, hs = r.shape
+    if S0 is None:
+        S0 = jnp.zeros((B, H, hs, hs), jnp.float32)
+    r, k, v, w = (x.astype(jnp.float32) for x in (r, k, v, w))
+    u = u.astype(jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp  # (B, H, hs)
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, S + u[None, :, :, None] * kv)
+        S_new = S * wt[..., None] + kv
+        return S_new, out
+
+    xs = tuple(x.transpose(1, 0, 2, 3) for x in (r, k, v, w))
+    S_T, outs = jax.lax.scan(step, S0, xs)
+    return outs.transpose(1, 0, 2, 3), S_T

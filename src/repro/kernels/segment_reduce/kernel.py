@@ -1,0 +1,74 @@
+"""Pallas TPU sorted segment-reduce kernel (MapReduce reduce-task combine).
+
+One reduce-task partition per grid step: the engine hands each reducer a
+capacity-bounded, key-sorted partition; the kernel aggregates equal-key runs
+entirely in VMEM.
+
+TPU adaptation: no scatter.  The scatter-style segment sum of the XLA
+reference becomes a matmul against a one-hot segment matrix — MXU work
+instead of serial VREG updates:
+
+    seg_onehot[i, s] = (seg_id[i] == s)           (C x C, built from iota)
+    agg = seg_onehot^T @ values                   (segment sums)
+    out = first * (seg_onehot @ agg)              (scatter-back, again MXU)
+
+Grid: (n_partitions,); blocks: keys/values (1, C) -> out (1, C).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+PAD_KEY = jnp.iinfo(jnp.int32).max
+
+
+def _segment_reduce_kernel(k_ref, v_ref, ok_ref, ov_ref):
+    keys = k_ref[0]                      # (C,) sorted, PAD_KEY tail
+    vals = v_ref[0].astype(jnp.float32)
+    C = keys.shape[0]
+    valid = keys != PAD_KEY
+    pos = jax.lax.iota(jnp.int32, C)
+    prev = jnp.roll(keys, 1)
+    first = ((keys != prev) | (pos == 0)) & valid
+    seg_id = jnp.cumsum(first.astype(jnp.int32)) - 1
+    seg_id = jnp.where(valid, seg_id, C - 1)
+    # one-hot segment matrix -> MXU segment sums
+    iota = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+    onehot = (seg_id[:, None] == iota).astype(jnp.float32)   # (i, s)
+    vals = jnp.where(valid, vals, 0.0)
+    agg = jax.lax.dot_general(
+        onehot, vals[:, None], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )[:, 0]                               # (C,) per-segment sums
+    back = jax.lax.dot_general(
+        onehot, agg[:, None], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )[:, 0]                               # agg[seg_id[i]]
+    ok_ref[0] = jnp.where(first, keys, PAD_KEY)
+    ov_ref[0] = jnp.where(first, back, 0.0).astype(ov_ref.dtype)
+
+
+def segment_reduce_fwd(keys, values, *, interpret: bool = True):
+    """keys/values: (R, C) per-partition sorted. Returns (out_k, out_v)."""
+    R, C = keys.shape
+    return pl.pallas_call(
+        _segment_reduce_kernel,
+        grid=(R,),
+        in_specs=[
+            pl.BlockSpec((1, C), lambda r: (r, 0)),
+            pl.BlockSpec((1, C), lambda r: (r, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, C), lambda r: (r, 0)),
+            pl.BlockSpec((1, C), lambda r: (r, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, C), keys.dtype),
+            jax.ShapeDtypeStruct((R, C), values.dtype),
+        ],
+        interpret=interpret,
+    )(keys, values)

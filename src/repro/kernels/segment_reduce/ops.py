@@ -1,0 +1,24 @@
+"""jit'd public wrapper for the segment-reduce kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.segment_reduce.kernel import segment_reduce_fwd
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def segment_reduce(keys, values, *, interpret: bool = True):
+    """keys/values (R, C) (sorted, PAD_KEY-padded per row) or (C,) 1-D."""
+    squeeze = keys.ndim == 1
+    if squeeze:
+        keys, values = keys[None], values[None]
+    vals_f = values.astype(jnp.float32)
+    ok, ov = segment_reduce_fwd(keys, vals_f, interpret=interpret)
+    ov = ov.astype(values.dtype)
+    if squeeze:
+        return ok[0], ov[0]
+    return ok, ov

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the sorted segment-reduce (MapReduce combine)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+PAD_KEY = jnp.iinfo(jnp.int32).max
+
+
+def segment_reduce_ref(keys, values):
+    """keys (N,) sorted int32 (PAD_KEY = invalid); values (N,) int32.
+
+    Returns (out_keys, out_vals): the aggregate of each key's run sits at
+    its first occurrence; other slots are (PAD_KEY, 0).
+    """
+    n = keys.shape[0]
+    valid = keys != PAD_KEY
+    first = jnp.concatenate(
+        [jnp.array([True]), keys[1:] != keys[:-1]]
+    ) & valid
+    seg_id = jnp.cumsum(first.astype(jnp.int32)) - 1
+    seg_id = jnp.where(valid, seg_id, n - 1)
+    agg = jnp.zeros((n,), values.dtype).at[seg_id].add(
+        jnp.where(valid, values, 0)
+    )
+    out_keys = jnp.where(first, keys, PAD_KEY)
+    out_vals = jnp.where(first, agg[seg_id], 0)
+    return out_keys, out_vals

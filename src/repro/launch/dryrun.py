@@ -1,0 +1,117 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run entrypoint.
+
+MUST be run as its own process (``python -m repro.launch.dryrun``): the
+first two lines above pin 512 host placeholder devices BEFORE any jax
+import, so ``make_production_mesh`` can build the 16x16 single-pod and
+2x16x16 multi-pod meshes.  Smoke tests and benchmarks must NOT import this
+module (they should see 1 device).
+
+For every (architecture x applicable input shape x mesh):
+    jit(step).lower(**ShapeDtypeStructs).compile()
+then record memory_analysis / cost_analysis / parsed collective bytes into
+``experiments/dryrun/<mesh>/<arch>__<shape>.json`` for EXPERIMENTS.md.
+"""
+
+import argparse     # noqa: E402
+import json         # noqa: E402
+import time         # noqa: E402
+import traceback    # noqa: E402
+
+import jax          # noqa: E402
+
+from repro.configs import ARCH_IDS, applicable_shapes, get_config  # noqa: E402
+from repro.launch import cells                                     # noqa: E402
+from repro.launch.mesh import make_production_mesh                 # noqa: E402
+
+
+def run_cell(arch: str, shape_name: str, mesh, out_path: str,
+             cell_cfg=None) -> dict:
+    t0 = time.time()
+    result = cells.analyze_cell_extrapolated(
+        arch, shape_name, mesh, cell=cell_cfg
+    )
+    result["compile_seconds"] = time.time() - t0
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    tmp = out_path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(result, f, indent=1)
+    os.replace(tmp, out_path)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="arch id or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help="shape cell name or 'all'")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--fail-fast", action="store_true")
+    args = ap.parse_args()
+
+    assert jax.device_count() == 512, (
+        f"expected 512 placeholder devices, got {jax.device_count()} — "
+        f"dryrun must own the process (XLA_FLAGS set before jax import)"
+    )
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single_pod_16x16", make_production_mesh()))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi_pod_2x16x16",
+                       make_production_mesh(multi_pod=True)))
+
+    archs = list(ARCH_IDS) if args.arch == "all" else [args.arch]
+    n_ok = n_fail = n_skip = 0
+    failures = []
+    for mesh_name, mesh in meshes:
+        for arch in archs:
+            cfg = get_config(arch)
+            shapes = (
+                applicable_shapes(cfg)
+                if args.shape == "all"
+                else [args.shape]
+            )
+            for shape_name in shapes:
+                out_path = os.path.join(
+                    args.out, mesh_name, f"{arch}__{shape_name}.json"
+                )
+                if args.skip_existing and os.path.exists(out_path):
+                    n_skip += 1
+                    continue
+                tag = f"[{mesh_name}] {arch} x {shape_name}"
+                try:
+                    r = run_cell(arch, shape_name, mesh, out_path)
+                    roof = r["roofline"]
+                    print(
+                        f"OK   {tag}: dominant={roof['dominant']} "
+                        f"compute={roof['compute_s']:.4f}s "
+                        f"memory={roof['memory_s']:.4f}s "
+                        f"collective={roof['collective_s']:.4f}s "
+                        f"peak={r['memory']['peak_bytes'] / 2**30:.2f}GiB/dev "
+                        f"(compile {r['compile_seconds']:.0f}s)",
+                        flush=True,
+                    )
+                    n_ok += 1
+                except Exception as e:  # noqa: BLE001
+                    n_fail += 1
+                    failures.append((tag, repr(e)))
+                    print(f"FAIL {tag}: {e}", flush=True)
+                    traceback.print_exc()
+                    if args.fail_fast:
+                        raise
+    print(f"\ndry-run complete: {n_ok} ok, {n_fail} failed, {n_skip} skipped")
+    for tag, err in failures:
+        print(f"  FAILED: {tag}: {err}")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

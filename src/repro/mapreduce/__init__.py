@@ -1,0 +1,26 @@
+"""TPU-native MapReduce substrate: engine + the paper's two applications."""
+
+from repro.mapreduce.engine import (
+    JobConfig,
+    MapReduceApp,
+    PAD_KEY,
+    build_job,
+    build_job_sharded,
+    collect_results,
+)
+from repro.mapreduce.apps import eximparse, wordcount, RECORD_WIDTH
+from repro.mapreduce.datagen import exim_mainlog, wordcount_corpus
+
+__all__ = [
+    "JobConfig",
+    "MapReduceApp",
+    "PAD_KEY",
+    "build_job",
+    "build_job_sharded",
+    "collect_results",
+    "eximparse",
+    "wordcount",
+    "RECORD_WIDTH",
+    "exim_mainlog",
+    "wordcount_corpus",
+]

@@ -1,0 +1,86 @@
+"""The paper's two benchmark applications, on the TPU MapReduce engine.
+
+* **WordCount** — each map task takes a split of word-ids and emits
+  ``<word, 1>``; reducers sum per word.  (Paper §V.A, refs [33-34].)
+* **Exim Mainlog parsing** — Exim logs are sequences of per-message records;
+  the Hadoop job groups log lines by transaction id.  Our token encoding of a
+  mainlog is a flat stream of fixed-width records
+  ``[txn_id, event_type, size]``; map emits ``<txn_id, packed(event, size)>``
+  and reducers aggregate per transaction (event count + total bytes packed in
+  one int32).  (Paper §V.A, ref [35].)
+
+Both apps are pure `jnp` map functions with static output sizes, as the
+engine requires.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.mapreduce.engine import MapReduceApp, PAD_KEY
+
+# ---------------------------------------------------------------------------
+# WordCount
+# ---------------------------------------------------------------------------
+
+
+def _wordcount_map(tokens, valid):
+    """<line of words> -> <word, 1> pairs."""
+    keys = jnp.where(valid, tokens, PAD_KEY)
+    values = jnp.where(valid, 1, 0).astype(jnp.int32)
+    return keys, values, valid
+
+
+def wordcount(vocab_size: int = 4096) -> MapReduceApp:
+    return MapReduceApp(
+        name="wordcount",
+        key_space=vocab_size,
+        map_fn=_wordcount_map,
+        pairs_per_token=1,
+        reduce_op="sum",
+    )
+
+
+# ---------------------------------------------------------------------------
+# Exim Mainlog parsing
+# ---------------------------------------------------------------------------
+
+RECORD_WIDTH = 3  # [txn_id, event_type, size_bytes]
+
+
+def _eximparse_map(tokens, valid):
+    """Parse fixed-width records from a split; emit <txn_id, size>.
+
+    A split of S tokens holds S // RECORD_WIDTH whole records; trailing
+    partial records are invalid (in real Hadoop, input splits are
+    line-aligned; our fixed-width records make alignment static).  Reducers
+    sum sizes per transaction id — the per-transaction grouping/aggregation
+    of the paper's Exim job.
+    """
+    S = tokens.shape[0]
+    n_rec = S // RECORD_WIDTH
+    rec = tokens[: n_rec * RECORD_WIDTH].reshape(n_rec, RECORD_WIDTH)
+    rec_valid = valid[: n_rec * RECORD_WIDTH].reshape(n_rec, RECORD_WIDTH).all(
+        axis=1
+    )
+    txn = rec[:, 0]
+    size = rec[:, 2]
+    keys = jnp.where(rec_valid, txn, PAD_KEY)
+    values = jnp.where(rec_valid, size, 0).astype(jnp.int32)
+    # Static output size: one pair per record slot; pad to S with invalid
+    # pairs so every map task emits the same-shaped output.
+    pad = S - n_rec
+    keys = jnp.concatenate([keys, jnp.full((pad,), PAD_KEY, jnp.int32)])
+    values = jnp.concatenate([values, jnp.zeros((pad,), jnp.int32)])
+    pvalid = jnp.concatenate([rec_valid, jnp.zeros((pad,), bool)])
+    return keys, values, pvalid
+
+
+def eximparse(n_transactions: int = 1024) -> MapReduceApp:
+    return MapReduceApp(
+        name="eximparse",
+        key_space=n_transactions,
+        map_fn=_eximparse_map,
+        pairs_per_token=1,
+        reduce_op="sum",
+    )

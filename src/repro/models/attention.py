@@ -1,0 +1,166 @@
+"""Grouped-query attention with RoPE, qk-norm, KV cache, and flash option.
+
+The XLA einsum path is the dry-run/roofline path (cost_analysis sees real
+FLOPs); the Pallas kernels in ``repro.kernels`` are the TPU deployment path,
+selected via ``use_flash`` and validated against this reference in tests.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (
+    apply_rope,
+    init_dense,
+    init_rmsnorm,
+    rmsnorm,
+    rope_angles,
+)
+
+
+def init_attention(key, cfg, dtype):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": init_dense(kq, d, cfg.n_heads * hd, dtype),
+        "wk": init_dense(kk, d, cfg.n_kv_heads * hd, dtype),
+        "wv": init_dense(kv, d, cfg.n_kv_heads * hd, dtype),
+        "wo": init_dense(ko, cfg.n_heads * hd, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(hd, dtype)
+        p["k_norm"] = init_rmsnorm(hd, dtype)
+    return p
+
+
+def _sdpa(q, k, v, *, causal: bool, q_offset=0, kv_valid_len=None):
+    """Reference GQA scaled-dot-product attention (no repeated-KV
+    materialization — grouped einsum keeps KV bytes at n_kv heads).
+
+    q: (B, Sq, Hq, hd); k, v: (B, Sk, n_kv, hd).  fp32 softmax.
+    ``kv_valid_len``: mask out cache slots >= this length (decode mode).
+    """
+    B, Sq, Hq, hd = q.shape
+    n_kv = k.shape[2]
+    G = Hq // n_kv
+    qg = q.reshape(B, Sq, n_kv, G, hd)
+    scale = hd**-0.5
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32)
+    logits = logits * scale
+    Sk = k.shape[1]
+    qpos = jnp.arange(Sq) + q_offset
+    kpos = jnp.arange(Sk)
+    mask = None
+    if causal:
+        mask = qpos[:, None] >= kpos[None, :]
+    if kv_valid_len is not None:
+        vmask = kpos[None, :] < kv_valid_len
+        mask = vmask if mask is None else (mask & vmask)
+    if mask is not None:
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(B, Sq, Hq, hd)
+
+
+def attention(
+    x,
+    params,
+    cfg,
+    *,
+    positions=None,
+    cache=None,
+    cache_index=None,
+    use_flash: bool = False,
+):
+    """Forward attention.
+
+    x: (B, S, D).  Without a cache: full self-attention (causal per cfg).
+    With ``cache = {"k": (B, S_max, n_kv, hd), "v": ...}`` and scalar
+    ``cache_index``: decode/append mode — writes S new entries at
+    cache_index and attends over the first cache_index + S entries.
+    Returns (out, new_cache).
+    """
+    B, S, D = x.shape
+    hd = cfg.resolved_head_dim
+    cdt = jnp.dtype(cfg.compute_dtype)
+    xc = x.astype(cdt)
+    q = (xc @ params["wq"].astype(cdt)).reshape(B, S, cfg.n_heads, hd)
+    k = (xc @ params["wk"].astype(cdt)).reshape(B, S, cfg.n_kv_heads, hd)
+    v = (xc @ params["wv"].astype(cdt)).reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"]["w"], cfg.norm_eps)
+        k = rmsnorm(k, params["k_norm"]["w"], cfg.norm_eps)
+    if positions is None:
+        offset = 0 if cache_index is None else cache_index
+        positions = jnp.arange(S) + offset
+        positions = jnp.broadcast_to(positions, (B, S))
+    cos, sin = rope_angles(positions, hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    # Sharding pins for full-sequence self-attention.  When n_kv divides the
+    # TP axis, heads shard cleanly; when it does NOT (arctic 8 kv vs 16-way
+    # TP), the partitioner replicates batch and ALL-REDUCES the fp32 S^2
+    # logits (measured 112 GiB per layer, §Perf-arctic it.3) — instead pin
+    # K/V on the sequence axis: softmax over a seq-sharded axis lowers to
+    # partial max/sum + tiny stat all-reduces (flash-decode style).
+    if cache is None:
+        from repro.sharding.context import current_mesh, constraint
+
+        mesh = current_mesh()
+        if mesh is not None:
+            msize = dict(
+                zip(mesh.axis_names, mesh.devices.shape)
+            ).get("model", 1)
+            dp = ("pod", "data")
+            if cfg.n_kv_heads % msize == 0:
+                q = constraint(q, dp, None, "model", None)
+                k = constraint(k, dp, None, "model", None)
+                v = constraint(v, dp, None, "model", None)
+            else:
+                q = constraint(q, dp, None, None, None)
+                k = constraint(k, dp, "model", None, None)
+                v = constraint(v, dp, "model", None, None)
+
+    new_cache = None
+    if cache is not None:
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, cache_index, 0, 0)
+        )
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, cache_index, 0, 0)
+        )
+        new_cache = {"k": ck, "v": cv}
+        if use_flash:
+            from repro.kernels.decode_attention import ops as dec_ops
+
+            kv_len = cache_index + S
+            out = dec_ops.decode_attention(
+                q, ck.astype(cdt), cv.astype(cdt), kv_len
+            )
+        else:
+            # causal within the appended block + mask unwritten cache slots
+            out = _sdpa(
+                q, ck.astype(cdt), cv.astype(cdt),
+                causal=True, q_offset=cache_index,
+                kv_valid_len=cache_index + S,
+            )
+    else:
+        if use_flash:
+            from repro.kernels.flash_attention import ops as fa_ops
+
+            out = fa_ops.flash_attention(q, k, v, causal=cfg.causal)
+        else:
+            out = _sdpa(q, k, v, causal=cfg.causal)
+    out = out.reshape(B, S, cfg.n_heads * hd)
+    return out @ params["wo"].astype(cdt), new_cache
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dtype),
+    }

@@ -1,0 +1,112 @@
+"""Shared neural net layers (pure functional JAX: explicit params pytrees)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm(x, weight, eps: float = 1e-6):
+    """RMSNorm in fp32, cast back to input dtype."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)).astype(dtype)
+
+
+def init_rmsnorm(d: int, dtype=jnp.float32):
+    return {"w": jnp.ones((d,), dtype=dtype)}
+
+
+def init_dense(key, d_in: int, d_out: int, dtype=jnp.float32, scale=None):
+    scale = scale if scale is not None else d_in**-0.5
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def rope_angles(positions, head_dim: int, theta: float = 10000.0):
+    """positions (...,) -> cos/sin (..., head_dim/2)."""
+    freqs = theta ** (
+        -jnp.arange(0, head_dim // 2, dtype=jnp.float32) / (head_dim // 2)
+    )
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x (..., S, n_heads, head_dim); cos/sin (..., S, head_dim/2)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    cos = cos[..., None, :]  # broadcast over heads
+    sin = sin[..., None, :]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def swiglu(x, w_gate, w_up, w_down, compute_dtype=jnp.bfloat16):
+    x = x.astype(compute_dtype)
+    g = jax.nn.silu(x @ w_gate.astype(compute_dtype))
+    u = x @ w_up.astype(compute_dtype)
+    return (g * u) @ w_down.astype(compute_dtype)
+
+
+def geglu(x, w_gate, w_up, w_down, compute_dtype=jnp.bfloat16):
+    x = x.astype(compute_dtype)
+    g = gelu(x @ w_gate.astype(compute_dtype))
+    u = x @ w_up.astype(compute_dtype)
+    return (g * u) @ w_down.astype(compute_dtype)
+
+
+def ffn_apply(x, params, ffn_type: str, compute_dtype=jnp.bfloat16):
+    if ffn_type == "swiglu":
+        return swiglu(
+            x, params["w_gate"], params["w_up"], params["w_down"], compute_dtype
+        )
+    if ffn_type == "geglu":
+        return geglu(
+            x, params["w_gate"], params["w_up"], params["w_down"], compute_dtype
+        )
+    if ffn_type in ("relu", "gelu"):
+        x = x.astype(compute_dtype)
+        act = jax.nn.relu if ffn_type == "relu" else gelu
+        h = act(x @ params["w_up"].astype(compute_dtype))
+        return h @ params["w_down"].astype(compute_dtype)
+    raise ValueError(ffn_type)
+
+
+def init_ffn(key, d_model: int, d_ff: int, ffn_type: str, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if ffn_type in ("swiglu", "geglu"):
+        return {
+            "w_gate": init_dense(k1, d_model, d_ff, dtype),
+            "w_up": init_dense(k2, d_model, d_ff, dtype),
+            "w_down": init_dense(k3, d_ff, d_model, dtype),
+        }
+    if ffn_type in ("relu", "gelu"):
+        return {
+            "w_up": init_dense(k1, d_model, d_ff, dtype),
+            "w_down": init_dense(k2, d_ff, d_model, dtype),
+        }
+    raise ValueError(ffn_type)
+
+
+def cross_entropy_loss(
+    logits, labels, *, ignore_index: int = -100, z_loss: float = 0.0
+):
+    """Token-mean softmax cross-entropy in fp32; labels==ignore_index masked."""
+    logits = logits.astype(jnp.float32)
+    mask = labels != ignore_index
+    safe = jnp.where(mask, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if z_loss:
+        nll = nll + z_loss * logz**2
+    nll = jnp.where(mask, nll, 0.0)
+    denom = jnp.maximum(mask.sum(), 1)
+    return nll.sum() / denom

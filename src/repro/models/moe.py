@@ -1,0 +1,204 @@
+"""Mixture-of-Experts FFN: top-k routing, sort-based capacity dispatch, EP.
+
+Design (GShard/MaxText-style "grouped dropped" MoE, TPU-native):
+
+* tokens are processed in ``n_groups`` dispatch groups (a group == one data
+  shard at scale, so dispatch stays shard-local and the only cross-device
+  movement is the expert all_to_all the SPMD partitioner derives from the
+  group->expert resharding);
+* within a group, token->expert assignment is sorted (argsort) and each
+  expert takes up to ``capacity`` tokens, the rest fall through on the
+  residual path (standard dropped-token semantics);
+* expert compute is a batched einsum over the expert dimension -> FLOPs are
+  tokens * top_k * expert_ffn, NOT n_experts * (the one-hot-dispatch blowup);
+* experts are sharded over the "model" mesh axis (EP) via sharding rules in
+  ``repro.sharding.rules``; arctic's dense-residual branch runs in parallel.
+
+Router aux loss is the Switch load-balance loss, returned alongside.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_dense
+
+
+def init_moe(key, cfg, dtype):
+    m = cfg.moe
+    d = cfg.d_model
+    f = m.d_ff_expert
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    shape3 = lambda k, a, b: (
+        jax.random.normal(k, (m.n_experts, a, b)) * (a**-0.5)
+    ).astype(dtype)
+    p = {
+        "router": init_dense(kr, d, m.n_experts, jnp.float32),
+        "w_gate": shape3(kg, d, f),
+        "w_up": shape3(ku, d, f),
+        "w_down": shape3(kd, f, d),
+    }
+    return p
+
+
+def moe_ffn(x, params, cfg, compute_dtype=jnp.bfloat16):
+    """x: (T, D) token block (one dispatch group). Returns (y, aux_loss)."""
+    m = cfg.moe
+    T, D = x.shape
+    E, K = m.n_experts, m.top_k
+    cap = max(1, math.ceil(T * K / E * m.capacity_factor))
+    cap = min(cap, T)
+
+    # --- router (fp32) ----------------------------------------------------
+    logits = x.astype(jnp.float32) @ params["router"]
+    probs = jax.nn.softmax(logits, axis=-1)            # (T, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)    # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9
+    )
+
+    # Switch aux loss: E * sum_e fraction_tokens_e * mean_prob_e.
+    assign_onehot = jax.nn.one_hot(expert_idx[:, 0], E)  # top-1 fractions
+    aux = E * jnp.mean(assign_onehot.mean(0) * probs.mean(0))
+
+    # --- sort-based dispatch ----------------------------------------------
+    flat_expert = expert_idx.reshape(-1)               # (T*K,)
+    flat_token = jnp.repeat(jnp.arange(T), K)
+    flat_gate = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_expert, stable=True)
+    se, st, sg = flat_expert[order], flat_token[order], flat_gate[order]
+    # Position of each routed slot within its expert.
+    start = jnp.searchsorted(se, jnp.arange(E + 1), side="left")
+    pos = jnp.arange(T * K) - start[se]
+    keep = pos < cap
+    # Gather kept tokens into (E, cap, D); dropped slots point at row 0 with
+    # zero gate so they contribute nothing.
+    slot_token = jnp.where(keep, st, 0)
+    buf_tok = jnp.zeros((E, cap), dtype=jnp.int32)
+    buf_gate = jnp.zeros((E, cap), dtype=jnp.float32)
+    buf_valid = jnp.zeros((E, cap), dtype=bool)
+    erow = jnp.where(keep, se, E)
+    ecol = jnp.where(keep, pos, 0)
+    buf_tok = buf_tok.at[erow, ecol].set(slot_token, mode="drop")
+    buf_gate = buf_gate.at[erow, ecol].set(
+        jnp.where(keep, sg, 0.0), mode="drop"
+    )
+    buf_valid = buf_valid.at[erow, ecol].set(keep, mode="drop")
+
+    xin = x.astype(compute_dtype)[buf_tok]             # (E, cap, D)
+    xin = xin * buf_valid[..., None].astype(compute_dtype)
+
+    # --- expert compute (batched over E; EP shards this axis) -------------
+    wg = params["w_gate"].astype(compute_dtype)
+    wu = params["w_up"].astype(compute_dtype)
+    wd = params["w_down"].astype(compute_dtype)
+    if cfg.ffn_type == "geglu":
+        act = lambda z: jax.nn.gelu(z, approximate=True)
+    else:
+        act = jax.nn.silu
+    h = act(jnp.einsum("ecd,edf->ecf", xin, wg)) * jnp.einsum(
+        "ecd,edf->ecf", xin, wu
+    )
+    yexp = jnp.einsum("ecf,efd->ecd", h, wd)           # (E, cap, D)
+
+    # --- combine: scatter-add back to tokens, weighted by gates -----------
+    yexp = yexp * buf_gate[..., None].astype(compute_dtype)
+    y = jnp.zeros((T, D), dtype=compute_dtype)
+    y = y.at[buf_tok.reshape(-1)].add(
+        yexp.reshape(E * cap, D),
+        mode="drop",
+    )
+    return y, aux.astype(jnp.float32)
+
+
+def moe_ffn_grouped(x, params, cfg, compute_dtype=jnp.bfloat16):
+    """x: (B, S, D) -> grouped GShard-style one-hot-einsum MoE.
+
+    Groups slice the flattened token axis so each group is one data shard's
+    tokens at the production sharding.  Dispatch and combine are pure
+    EINSUMS against a (G, S, E, C) assignment tensor — no sort / gather /
+    scatter, which GSPMD cannot partition on the expert axis (measured:
+    sort+scatter dispatch replicated expert grads, 82% of arctic-480b train
+    collective bytes as 6.4 TB/device of all-reduce; a gather-based combine
+    replicated the (G, T*K, D) intermediate instead — §Perf-arctic it.1-4).
+    The einsum dispatch costs ~2*T*S_g*k*cf*D extra flops (~17% of arctic's
+    expert compute at S_g=4096) and partitions perfectly: G on dp, E on ep.
+
+    Position-in-expert is the GShard cumsum construction, k-major priority
+    (all first choices claim capacity before any second choice).
+    """
+    from repro.sharding.context import constraint
+
+    m = cfg.moe
+    B, S_, D = x.shape
+    G = m.n_groups
+    T_all = B * S_
+    if T_all % G:
+        G = 1
+    T = T_all // G
+    E, K = m.n_experts, m.top_k
+    cap = max(1, math.ceil(T * K / E * m.capacity_factor))
+    cap = min(cap, T)
+    dp, ep = ("pod", "data"), "model"
+
+    xg = constraint(x.reshape(G, T, D), dp, None, None)
+
+    # --- router (fp32) ----------------------------------------------------
+    logits = xg.astype(jnp.float32) @ params["router"]      # (G, T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)         # (G, T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9
+    )
+    aux = E * jnp.mean(
+        jax.nn.one_hot(expert_idx[..., 0], E).mean(1) * probs.mean(1)
+    )
+
+    # --- GShard cumsum position assignment (k-major priority) -------------
+    # mask_k: (G, T, E) one-hot of the k-th choice
+    masks = [jax.nn.one_hot(expert_idx[..., k], E, dtype=jnp.int32)
+             for k in range(K)]
+    counts_before = jnp.zeros((G, 1, E), jnp.int32)
+    dispatch = None
+    combine = None
+    for k in range(K):
+        mk = masks[k]
+        pos_k = jnp.cumsum(mk, axis=1) - mk + counts_before  # (G, T, E)
+        keep_k = (pos_k < cap) & (mk > 0)
+        # (G, T, E, C) one-hot of the claimed capacity slot
+        slot = jax.nn.one_hot(
+            jnp.where(keep_k, pos_k, cap), cap, dtype=compute_dtype
+        ) * keep_k[..., None].astype(compute_dtype)
+        dispatch = slot if dispatch is None else dispatch + slot
+        combine_k = slot * gate_vals[..., k][..., None, None].astype(
+            compute_dtype
+        )
+        combine = combine_k if combine is None else combine + combine_k
+        counts_before = counts_before + mk.sum(axis=1, keepdims=True)
+    dispatch = constraint(dispatch, dp, None, ep, None)
+    combine = constraint(combine, dp, None, ep, None)
+
+    # --- dispatch / expert compute / combine (all einsum) -----------------
+    xin = jnp.einsum(
+        "gtec,gtd->gecd", dispatch, xg.astype(compute_dtype)
+    )
+    xin = constraint(xin, dp, ep, None, None)
+    wg = params["w_gate"].astype(compute_dtype)
+    wu = params["w_up"].astype(compute_dtype)
+    wd = params["w_down"].astype(compute_dtype)
+    act = (
+        (lambda z: jax.nn.gelu(z, approximate=True))
+        if cfg.ffn_type == "geglu" else jax.nn.silu
+    )
+    h = act(jnp.einsum("gecd,edf->gecf", xin, wg)) * jnp.einsum(
+        "gecd,edf->gecf", xin, wu
+    )
+    h = constraint(h, dp, ep, None, None)
+    yexp = jnp.einsum("gecf,efd->gecd", h, wd)
+    yexp = constraint(yexp, dp, ep, None, None)
+    y = jnp.einsum("gtec,gecd->gtd", combine, yexp)
+    y = constraint(y, dp, None, None)
+    return y.reshape(B, S_, D), aux.astype(jnp.float32)

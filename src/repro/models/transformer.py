@@ -1,0 +1,431 @@
+"""Composable model assembly for all assigned architectures.
+
+A model is a sequence of *blocks* tiled from ``cfg.block_pattern`` (period P,
+repeated n_layers/P times).  Per-position parameters are stacked over repeats
+and the stack is consumed by ``lax.scan`` — one trace per period regardless
+of depth (compile-time critical for 512-device dry-runs of 64-layer models).
+
+Block kinds:
+  attn  : norm -> GQA attention -> residual, then FFN/MoE sub-block
+  mamba : norm -> selective SSM -> residual, then FFN/MoE sub-block (jamba)
+  rwkv  : norm -> WKV6 time-mix -> residual, norm -> channel-mix -> residual
+
+MoE placement follows ``cfg.moe.every_n_layers/offset`` on absolute layer
+index; arctic's dense-residual FFN runs in parallel with its MoE.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    cross_entropy_loss,
+    ffn_apply,
+    init_dense,
+    init_ffn,
+    init_rmsnorm,
+    rmsnorm,
+)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_block_position(key, cfg: ModelConfig, pos: int, dtype):
+    """Params for one in-period position (shared structure across repeats)."""
+    kind = cfg.block_pattern[pos % cfg.pattern_period]
+    keys = jax.random.split(key, 8)
+    p: dict = {"norm1": init_rmsnorm(cfg.d_model, dtype)}
+    if kind == "attn":
+        p["attn"] = attn_mod.init_attention(keys[0], cfg, dtype)
+    elif kind == "mamba":
+        p["mamba"] = ssm_mod.init_mamba(keys[0], cfg, dtype)
+    elif kind == "rwkv":
+        p["rwkv"] = ssm_mod.init_rwkv(keys[0], cfg, dtype)
+        p["norm2"] = init_rmsnorm(cfg.d_model, dtype)
+        return p  # rwkv: channel-mix is inside the rwkv params
+    else:
+        raise ValueError(kind)
+    p["norm2"] = init_rmsnorm(cfg.d_model, dtype)
+    if cfg.is_moe_layer(pos):
+        p["moe"] = moe_mod.init_moe(keys[1], cfg, dtype)
+        if cfg.moe.dense_residual and cfg.moe.d_ff_dense:
+            dense_cfg_ff = cfg.moe.d_ff_dense
+            p["ffn"] = init_ffn(keys[2], cfg.d_model, dense_cfg_ff,
+                                cfg.ffn_type, dtype)
+    else:
+        p["ffn"] = init_ffn(keys[2], cfg.d_model, cfg.d_ff, cfg.ffn_type, dtype)
+    return p
+
+
+def _moe_positions_valid(cfg: ModelConfig):
+    if cfg.moe is None:
+        return
+    if cfg.moe.every_n_layers > 1 and cfg.pattern_period % cfg.moe.every_n_layers:
+        raise ValueError(
+            f"{cfg.name}: pattern period {cfg.pattern_period} must be a "
+            f"multiple of moe.every_n_layers={cfg.moe.every_n_layers} so "
+            f"MoE placement is repeat-invariant (scan requirement)"
+        )
+
+
+def init_params(cfg: ModelConfig, key):
+    """Full parameter pytree.  Blocks stacked over repeats per position."""
+    _moe_positions_valid(cfg)
+    dtype = jnp.dtype(cfg.param_dtype)
+    n_rep = cfg.n_groups_of_layers
+    P = cfg.pattern_period
+    keys = jax.random.split(key, P + 4)
+    blocks = {}
+    for pos in range(P):
+        rep_keys = jax.random.split(keys[pos], n_rep)
+        blocks[f"pos{pos}"] = jax.vmap(
+            lambda k: _init_block_position(k, cfg, pos, dtype)
+        )(rep_keys)
+    params = {
+        "blocks": blocks,
+        "final_norm": init_rmsnorm(cfg.d_model, dtype),
+    }
+    if cfg.input_kind == "tokens" or cfg.family == "vlm":
+        params["embed"] = (
+            jax.random.normal(keys[P], (cfg.vocab_padded, cfg.d_model))
+            * cfg.d_model**-0.5
+        ).astype(dtype)
+        if not cfg.tie_embeddings:
+            params["lm_head"] = init_dense(
+                keys[P + 1], cfg.d_model, cfg.vocab_padded, dtype
+            )
+    if cfg.input_kind == "embeddings" or cfg.family == "vlm":
+        params["in_proj"] = init_dense(
+            keys[P + 2], cfg.embed_in_dim, cfg.d_model, dtype
+        )
+        if cfg.family == "audio":
+            params["lm_head"] = init_dense(
+                keys[P + 1], cfg.d_model, cfg.vocab_padded, dtype
+            )
+    return params
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+
+def _apply_ffn_or_moe(x, p, cfg: ModelConfig, pos: int):
+    """The FFN sub-block (dense, MoE, or arctic's parallel dense+MoE)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    h = rmsnorm(x, p["norm2"]["w"], cfg.norm_eps)
+    aux = jnp.float32(0.0)
+    if cfg.is_moe_layer(pos):
+        y, aux = moe_mod.moe_ffn_grouped(h, p["moe"], cfg, cdt)
+        if cfg.moe.dense_residual and "ffn" in p:
+            y = y + ffn_apply(h, p["ffn"], cfg.ffn_type, cdt)
+    else:
+        y = ffn_apply(h, p["ffn"], cfg.ffn_type, cdt)
+    return x + y.astype(x.dtype), aux
+
+
+def _apply_block(x, p, cfg: ModelConfig, pos: int, state, use_flash: bool):
+    """One block.  ``state`` is None (train) or this layer's cache/state.
+
+    Returns (x, new_state, aux_loss).
+    """
+    kind = cfg.block_pattern[pos % cfg.pattern_period]
+    h = rmsnorm(x, p["norm1"]["w"], cfg.norm_eps)
+    aux = jnp.float32(0.0)
+    if kind == "attn":
+        cache = state.get("kv") if state else None
+        cache_index = state.get("pos") if state else None
+        y, new_cache = attn_mod.attention(
+            h, p["attn"], cfg,
+            cache=cache, cache_index=cache_index, use_flash=use_flash,
+        )
+        x = x + y.astype(x.dtype)
+        x, aux = _apply_ffn_or_moe(x, p, cfg, pos)
+        new_state = dict(state, kv=new_cache) if state else None
+    elif kind == "mamba":
+        mstate = state["mamba"] if state else ssm_mod.mamba_state_init(
+            cfg, x.shape[0]
+        )
+        y, mnew = ssm_mod.mamba_block(h, p["mamba"], cfg, mstate)
+        x = x + y.astype(x.dtype)
+        x, aux = _apply_ffn_or_moe(x, p, cfg, pos)
+        new_state = dict(state, mamba=mnew) if state else None
+    elif kind == "rwkv":
+        rstate = state["rwkv"] if state else ssm_mod.rwkv_state_init(
+            cfg, x.shape[0]
+        )
+        y, rnew = ssm_mod.rwkv_time_mix(h, p["rwkv"], cfg, rstate)
+        x = x + y.astype(x.dtype)
+        h2 = rmsnorm(x, p["norm2"]["w"], cfg.norm_eps)
+        y2, rnew = ssm_mod.rwkv_channel_mix(h2, p["rwkv"], cfg, rnew)
+        x = x + y2.astype(x.dtype)
+        new_state = dict(state, rwkv=rnew) if state else None
+    else:
+        raise ValueError(kind)
+    return x, new_state, aux
+
+
+def _scan_blocks(x, params, cfg: ModelConfig, states, use_flash: bool,
+                 remat: str = "none", unroll_layers: bool = False):
+    """Scan the period-group over repeats.  states: None or dict pos->stacked.
+
+    ``unroll_layers=True`` python-loops over repeats instead of lax.scan —
+    identical semantics, but XLA cost_analysis then counts every repeat
+    (scan bodies are costed ONCE regardless of trip count), so the dry-run
+    uses it for honest roofline terms.  Production keeps the scan (compile
+    time).
+
+    Returns (x, new_states, total_aux).
+    """
+    P = cfg.pattern_period
+    n_rep = cfg.n_groups_of_layers
+
+    def group(x, group_params, group_states):
+        aux_total = jnp.float32(0.0)
+        new_states = {}
+        for pos in range(P):
+            st = group_states.get(f"pos{pos}") if group_states else None
+            x, nst, aux = _apply_block(
+                x, group_params[f"pos{pos}"], cfg, pos, st, use_flash
+            )
+            aux_total = aux_total + aux
+            if nst is not None:
+                new_states[f"pos{pos}"] = nst
+        return x, new_states, aux_total
+
+    if remat == "full":
+        group = jax.checkpoint(group, prevent_cse=False)
+    elif remat == "dots":
+        group = jax.checkpoint(
+            group,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+            prevent_cse=False,
+        )
+
+    if unroll_layers:
+        take = lambda tree, i: jax.tree.map(
+            lambda l: jax.lax.index_in_dim(l, i, 0, keepdims=False), tree
+        )
+        aux = jnp.float32(0.0)
+        new_states_list = []
+        for i in range(n_rep):
+            gs = take(states, i) if states is not None else None
+            x, nst, a = group(x, take(params["blocks"], i), gs)
+            aux = aux + a
+            if states is not None:
+                new_states_list.append(nst)
+        if states is None:
+            return x, None, aux
+        new_states = jax.tree.map(
+            lambda *ls: jnp.stack(ls, axis=0), *new_states_list
+        )
+        return x, new_states, aux
+
+    if states is None:
+
+        def body_nostate(carry, gp):
+            x, aux_acc = carry
+            x, _, aux = group(x, gp, None)
+            return (x, aux_acc + aux), None
+
+        (x, aux), _ = jax.lax.scan(
+            body_nostate, (x, jnp.float32(0.0)), params["blocks"]
+        )
+        return x, None, aux
+
+    def body(carry, xs):
+        x, aux_acc = carry
+        gp, gs = xs
+        x, nst, aux = group(x, gp, gs)
+        return (x, aux_acc + aux), nst
+
+    (x, aux), new_states = jax.lax.scan(
+        body, (x, jnp.float32(0.0)), (params["blocks"], states)
+    )
+    return x, new_states, aux
+
+
+# ---------------------------------------------------------------------------
+# model API
+# ---------------------------------------------------------------------------
+
+
+def embed_inputs(params, cfg: ModelConfig, batch):
+    """Token/stub-frontend embedding -> (B, S, D) hidden states."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if cfg.family == "vlm":
+        tok = params["embed"][batch["tokens"]]  # (B, S_text, D)
+        patches = (
+            batch["patches"].astype(cdt) @ params["in_proj"].astype(cdt)
+        )
+        return jnp.concatenate([patches.astype(tok.dtype), tok], axis=1)
+    if cfg.input_kind == "embeddings":
+        return batch["embeds"].astype(cdt) @ params["in_proj"].astype(cdt)
+    return params["embed"][batch["tokens"]]
+
+
+def unembed(params, cfg: ModelConfig, h):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    h = h.astype(cdt)
+    if cfg.tie_embeddings:
+        logits = h @ params["embed"].astype(cdt).T
+    else:
+        logits = h @ params["lm_head"].astype(cdt)
+    if cfg.vocab_padded != cfg.vocab_size:
+        # mask pad-vocab columns so softmax/xent ignore them exactly
+        pad_mask = jnp.where(
+            jnp.arange(cfg.vocab_padded) < cfg.vocab_size, 0.0, -1e30
+        ).astype(logits.dtype)
+        logits = logits + pad_mask
+    return logits
+
+
+def forward(params, cfg: ModelConfig, batch, *, use_flash=False,
+            remat="none", return_hidden=False, unroll_layers=False):
+    """Full forward -> logits (B, S, V) (or hidden states)."""
+    x = embed_inputs(params, cfg, batch)
+    x, _, aux = _scan_blocks(
+        x, params, cfg, None, use_flash, remat, unroll_layers
+    )
+    x = rmsnorm(x, params["final_norm"]["w"], cfg.norm_eps)
+    if return_hidden:
+        return x, aux
+    return unembed(params, cfg, x), aux
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, use_flash=False,
+            remat="none", logits_chunk: int = 0, unroll_layers=False):
+    """Next-token LM loss (causal), or per-frame classification (encoder).
+
+    ``logits_chunk > 0`` computes logits+xent in sequence chunks of that size
+    (never materializing the full (B,S,V) logits) — the memory lever for
+    256k-vocab archs.
+    """
+    h, aux = forward(
+        params, cfg, batch, use_flash=use_flash, remat=remat,
+        return_hidden=True, unroll_layers=unroll_layers,
+    )
+    if cfg.causal:
+        if cfg.family == "vlm":
+            # loss over text positions only (patches are prefix context)
+            npat = batch["patches"].shape[1]
+            h_txt = h[:, npat:]
+            labels = batch["tokens"][:, 1:]
+            h_for_loss = h_txt[:, :-1]
+        else:
+            labels = batch["tokens"][:, 1:]
+            h_for_loss = h[:, :-1]
+    else:
+        labels = batch["labels"]
+        h_for_loss = h
+    if logits_chunk and h_for_loss.shape[1] > logits_chunk:
+        S = h_for_loss.shape[1]
+        pad = (-S) % logits_chunk
+        hp = jnp.pad(h_for_loss, ((0, 0), (0, pad), (0, 0)))
+        lp = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-100)
+        n = (S + pad) // logits_chunk
+        hp = hp.reshape(h_for_loss.shape[0], n, logits_chunk, -1)
+        lp = lp.reshape(labels.shape[0], n, logits_chunk)
+
+        def chunk_loss(carry, inp):
+            hc, lc = inp
+            logits = unembed(params, cfg, hc)
+            mask = (lc != -100)
+            lsum = cross_entropy_loss(logits, lc) * jnp.maximum(
+                mask.sum(), 1
+            )
+            return (carry[0] + lsum, carry[1] + mask.sum()), None
+
+        (tot, cnt), _ = jax.lax.scan(
+            chunk_loss,
+            (jnp.float32(0.0), jnp.int32(0)),
+            (hp.transpose(1, 0, 2, 3), lp.transpose(1, 0, 2)),
+        )
+        loss = tot / jnp.maximum(cnt, 1)
+    else:
+        logits = unembed(params, cfg, h_for_loss)
+        loss = cross_entropy_loss(logits, labels)
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.router_aux_weight * aux
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode with explicit state
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      cache_dtype=jnp.bfloat16):
+    """Stacked per-position states for the scan. ``pos`` is the write index."""
+    P = cfg.pattern_period
+    n_rep = cfg.n_groups_of_layers
+
+    def stack(tree):
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_rep,) + x.shape), tree
+        )
+
+    states = {}
+    for pos in range(P):
+        kind = cfg.block_pattern[pos]
+        st: dict = {"pos": jnp.int32(0)}
+        if kind == "attn":
+            st["kv"] = attn_mod.init_cache(cfg, batch, max_len, cache_dtype)
+        elif kind == "mamba":
+            st["mamba"] = ssm_mod.mamba_state_init(cfg, batch, cache_dtype)
+        elif kind == "rwkv":
+            st["rwkv"] = ssm_mod.rwkv_state_init(cfg, batch, cache_dtype)
+        states[f"pos{pos}"] = stack(st)
+    return {"layers": states, "pos": jnp.int32(0)}
+
+
+def decode_step(params, cfg: ModelConfig, state, batch, *, use_flash=False,
+                unroll_layers=False):
+    """Append S new tokens (S=1 for decode) -> (logits (B,S,V), new state)."""
+    x = embed_inputs(params, cfg, batch)
+    # inject the global position into each layer state copy
+    layers = jax.tree.map(lambda v: v, state["layers"])
+    for pos_key in layers:
+        layers[pos_key]["pos"] = jnp.broadcast_to(
+            state["pos"], layers[pos_key]["pos"].shape
+        )
+    x, new_layers, _ = _scan_blocks(
+        x, params, cfg, layers, use_flash, unroll_layers=unroll_layers
+    )
+    x = rmsnorm(x, params["final_norm"]["w"], cfg.norm_eps)
+    logits = unembed(params, cfg, x)
+    new_state = {
+        "layers": new_layers,
+        "pos": state["pos"] + x.shape[1],
+    }
+    return logits, new_state
+
+
+def prefill(params, cfg: ModelConfig, batch, max_len: int, *,
+            use_flash=False, cache_dtype=jnp.bfloat16, unroll_layers=False):
+    """Process the full prompt, returning last-token logits + filled state."""
+    if cfg.family == "vlm":
+        B = batch["tokens"].shape[0]
+        S = batch["tokens"].shape[1] + batch["patches"].shape[1]
+    elif cfg.input_kind == "embeddings":
+        B, S = batch["embeds"].shape[:2]
+    else:
+        B, S = batch["tokens"].shape
+    state = init_decode_state(cfg, B, max_len, cache_dtype)
+    logits, state = decode_step(
+        params, cfg, state, batch, use_flash=use_flash,
+        unroll_layers=unroll_layers,
+    )
+    return logits[:, -1:], state

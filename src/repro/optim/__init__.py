@@ -1,0 +1,17 @@
+from repro.optim.adamw import (
+    AdamWConfig,
+    apply_updates,
+    cosine_schedule,
+    global_norm,
+    init_state,
+)
+from repro.optim import grad_compress
+
+__all__ = [
+    "AdamWConfig",
+    "apply_updates",
+    "cosine_schedule",
+    "global_norm",
+    "init_state",
+    "grad_compress",
+]

@@ -1,0 +1,112 @@
+"""AdamW with dtype-configurable state (ZeRO-friendly) + gradient clipping.
+
+States (m, v, and optional fp32 master copy) inherit the parameter sharding
+specs, so under FSDP the optimizer is ZeRO-3-sharded for free.  ``state_dtype
+= bfloat16`` halves optimizer HBM — the lever that fits arctic-480b on a
+16 GB/chip pod (DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"   # bfloat16 halves optimizer memory
+    master_fp32: bool = False      # keep fp32 master params (bf16 models)
+
+
+def init_state(cfg: AdamWConfig, params) -> dict:
+    sdt = jnp.dtype(cfg.state_dtype)
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, sdt), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, sdt), params),
+    }
+    if cfg.master_fp32:
+        state["master"] = jax.tree.map(
+            lambda p: p.astype(jnp.float32), params
+        )
+    return state
+
+
+def global_norm(tree) -> jnp.ndarray:
+    sq = jax.tree.reduce(
+        lambda acc, g: acc + jnp.sum(jnp.square(g.astype(jnp.float32))),
+        tree,
+        jnp.float32(0.0),
+    )
+    return jnp.sqrt(sq)
+
+
+def apply_updates(cfg: AdamWConfig, params, grads, state, lr_scale=1.0):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    if cfg.grad_clip:
+        scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+        grads = jax.tree.map(
+            lambda g: (g.astype(jnp.float32) * scale), grads
+        )
+    else:
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    sdt = jnp.dtype(cfg.state_dtype)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, m, v, master=None):
+        m32 = m.astype(jnp.float32) * cfg.b1 + g * (1 - cfg.b1)
+        v32 = v.astype(jnp.float32) * cfg.b2 + jnp.square(g) * (1 - cfg.b2)
+        mhat = m32 / b1c
+        vhat = v32 / b2c
+        base = master if master is not None else p
+        base32 = base.astype(jnp.float32)
+        new32 = base32 - lr * (
+            mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * base32
+        )
+        return new32, m32.astype(sdt), v32.astype(sdt)
+
+    if cfg.master_fp32:
+        out = jax.tree.map(
+            upd, params, grads, state["m"], state["v"], state["master"]
+        )
+        new32 = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_params = jax.tree.map(
+            lambda p, n: n.astype(p.dtype), params, new32
+        )
+        new_state = {"step": step, "m": new_m, "v": new_v, "master": new32}
+    else:
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        new_params = jax.tree.map(
+            lambda p, o: o[0].astype(p.dtype), params, out,
+            is_leaf=lambda x: isinstance(x, tuple),
+        )
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_state = {"step": step, "m": new_m, "v": new_v}
+    metrics = {"grad_norm": gnorm, "lr": jnp.float32(lr)}
+    return new_params, new_state, metrics
+
+
+def cosine_schedule(step, *, base_lr=1.0, warmup=100, total=10000,
+                    min_frac=0.1):
+    """LR scale factor (multiply by cfg.lr)."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+    cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return base_lr * warm * cos

@@ -1,0 +1,8 @@
+from repro.sharding.rules import (
+    MeshAxes,
+    batch_specs,
+    decode_state_specs,
+    param_specs,
+)
+
+__all__ = ["MeshAxes", "batch_specs", "decode_state_specs", "param_specs"]

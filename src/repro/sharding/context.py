@@ -1,0 +1,55 @@
+"""Ambient mesh context so model modules can apply sharding constraints
+without threading mesh objects through every call signature.
+
+``cells.py`` (and any launcher) activates the mesh around tracing/lowering;
+``constraint(x, *spec)`` is a no-op when no mesh is active (smoke tests,
+single-device runs), so model code can sprinkle constraints freely.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_MESH = contextvars.ContextVar("repro_mesh", default=None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    token = _MESH.set(mesh)
+    try:
+        yield mesh
+    finally:
+        _MESH.reset(token)
+
+
+def current_mesh():
+    return _MESH.get()
+
+
+def constraint(x, *spec):
+    """with_sharding_constraint(x, P(*spec)) under the ambient mesh.
+
+    Spec entries naming axes absent from the ambient mesh are dropped
+    (e.g. "pod" on a single-pod mesh); no-op without an ambient mesh.
+    """
+    mesh = _MESH.get()
+    if mesh is None:
+        return x
+    names = set(mesh.axis_names)
+
+    def keep(entry):
+        if entry is None:
+            return None
+        if isinstance(entry, tuple):
+            kept = tuple(a for a in entry if a in names)
+            return kept if kept else None
+        return entry if entry in names else None
+
+    clean = [keep(e) for e in spec]
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*clean))
+    )

@@ -1,0 +1,249 @@
+"""PartitionSpec rules: DP / FSDP / TP / EP / SP over the (pod, data, model)
+production mesh.
+
+``param_specs(cfg, params, mesh_axes, fsdp=...)`` walks the parameter pytree
+and assigns a spec per leaf by path pattern:
+
+* TP  — attention heads / ffn hidden / vocab on ``model``;
+* EP  — MoE expert dimension on ``model``;
+* FSDP — remaining large axes additionally sharded on ``data`` (ZeRO-3
+  parameter sharding; required to fit arctic-480b in 16 GB/chip);
+* stacked block params (leading n_repeats axis from the layer scan) get a
+  leading ``None``.
+
+Batch/activations ride on ``dp_axes`` = ("pod","data") multi-pod else
+("data",).  KV caches shard batch on dp and kv-heads on model.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    data: tuple[str, ...] = ("data",)   # dp axes (includes "pod" if present)
+    model: str = "model"
+    fsdp: str = "data"                  # axis used for ZeRO param sharding
+
+    @property
+    def dp(self) -> tuple[str, ...]:
+        return self.data
+
+
+# (path regex, spec WITHOUT the stacked leading axis). First match wins.
+# Specs are written for the unstacked parameter.
+_RULES: list[tuple[str, tuple]] = [
+    (r"embed$",                 ("model", None)),     # vocab-sharded embed
+    (r"lm_head$",               (None, "model")),     # column-parallel unembed
+    (r"in_proj$",               (None, "model")),     # stub frontend proj / mamba in
+    (r"attn/w[qkv]$",           (None, "model")),
+    (r"attn/wo$",               ("model", None)),
+    (r"(q|k)_norm/w$",          (None,)),
+    (r"ffn/w_(gate|up)$",       (None, "model")),
+    (r"ffn/w_down$",            ("model", None)),
+    (r"moe/router$",            (None, None)),
+    (r"moe/w_(gate|up)$",       ("model", None, None)),   # EP: experts
+    (r"moe/w_down$",            ("model", None, None)),
+    (r"mamba/in_proj$",         (None, "model")),
+    (r"mamba/conv_w$",          (None, "model")),
+    (r"mamba/conv_b$",          ("model",)),
+    (r"mamba/x_proj$",          ("model", None)),
+    (r"mamba/dt_bias$",         ("model",)),
+    (r"mamba/A_log$",           ("model", None)),
+    (r"mamba/D$",               ("model",)),
+    (r"mamba/out_proj$",        ("model", None)),
+    (r"rwkv/mix$",              (None, None)),
+    (r"rwkv/w[rkvg]$",          (None, "model")),
+    (r"rwkv/wo$",               ("model", None)),
+    (r"rwkv/w0$",               ("model",)),
+    (r"rwkv/wA$",               (None, None)),
+    (r"rwkv/wB$",               (None, "model")),
+    (r"rwkv/u$",                (None, None)),   # (H, hs): H=40 not 16-divisible
+    (r"rwkv/ln_w$",             (None, None)),
+    (r"rwkv/cm_k$",             (None, "model")),
+    (r"rwkv/cm_v$",             ("model", None)),
+    (r"rwkv/cm_r$",             (None, "model")),
+    (r"norm\d?/w$",             (None,)),
+    (r"final_norm/w$",          (None,)),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _base_spec(path_s: str) -> tuple | None:
+    for pat, spec in _RULES:
+        if re.search(pat, path_s):
+            return spec
+    return None
+
+
+def _apply_fsdp(spec: list, shape: tuple[int, ...], axes: MeshAxes,
+                min_size: int) -> list:
+    """Shard the largest still-unsharded axis on the fsdp axis."""
+    if axes.fsdp in spec:
+        return spec
+    cand = [
+        (shape[i], i) for i in range(len(spec))
+        if spec[i] is None and shape[i] >= min_size
+    ]
+    if not cand:
+        return spec
+    _, idx = max(cand)
+    spec[idx] = axes.fsdp
+    return spec
+
+
+def _axis_size(mesh_shape: dict | None, axis) -> int:
+    if mesh_shape is None:
+        return 1  # unknown -> assume divisible (caller validates)
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh_shape.get(a, 1)
+        return n
+    return mesh_shape.get(axis, 1)
+
+
+def _sanitize(spec: list, shape: tuple, mesh_shape: dict | None) -> list:
+    """Drop axis assignments whose dimension isn't shard-divisible."""
+    out = []
+    for s, dim in zip(spec, shape):
+        if s is None:
+            out.append(None)
+        elif dim % _axis_size(mesh_shape, s) == 0:
+            out.append(s)
+        else:
+            out.append(None)
+    return out
+
+
+def param_specs(params, axes: MeshAxes = MeshAxes(), *,
+                fsdp: bool = False, fsdp_min_size: int = 1024,
+                mesh_shape: dict | None = None):
+    """Pytree of PartitionSpec matching ``params``.
+
+    Block params (under ``blocks/``) are stacked (leading n_repeats axis from
+    the layer scan) -> a leading None is prepended to their rule spec.
+    ``mesh_shape`` ({axis: size}) enables divisibility sanitization: any
+    assignment whose dimension doesn't divide evenly degrades to None.
+    """
+
+    def assign(path, leaf):
+        path_s = _path_str(path)
+        stacked = path_s.startswith("blocks/")
+        shape = np.shape(leaf) if not hasattr(leaf, "shape") else leaf.shape
+        eff_shape = shape[1:] if stacked else shape
+        base = _base_spec(path_s)
+        if base is None:
+            base = (None,) * len(eff_shape)
+        spec = [b if isinstance(b, str) or b is None else None for b in base]
+        spec = [s if s != "model" else axes.model for s in spec]
+        spec = _sanitize(spec, tuple(eff_shape), mesh_shape)
+        if fsdp:
+            spec = _apply_fsdp(list(spec), tuple(eff_shape), axes,
+                               fsdp_min_size)
+            spec = _sanitize(spec, tuple(eff_shape), mesh_shape)
+        if stacked:
+            spec = [None] + list(spec)
+        if len(spec) != len(shape):
+            raise ValueError(
+                f"spec rank mismatch at {path_s}: spec {spec} vs shape {shape}"
+            )
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(assign, params)
+
+
+def batch_specs(batch_like, axes: MeshAxes = MeshAxes(),
+                mesh_shape: dict | None = None):
+    """Batch inputs: leading (global batch) dim on the dp axes.
+
+    If the batch doesn't divide (e.g. long_500k B=1), the dp assignment is
+    dropped; the sequence axis picks up (data, model) sequence parallelism
+    in the decode-state specs instead.
+    """
+    dp = axes.dp if len(axes.dp) > 1 else axes.dp[0]
+
+    def assign(path, leaf):
+        shape = leaf.shape
+        spec = [dp] + [None] * (len(shape) - 1)
+        spec = _sanitize(spec, tuple(shape), mesh_shape)
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(assign, batch_like)
+
+
+def decode_state_specs(state_like, axes: MeshAxes = MeshAxes(),
+                       mesh_shape: dict | None = None):
+    """KV caches / SSM states with divisibility-aware fallbacks.
+
+    Preferred layouts (stacked leading n_rep):
+      kv k/v    : (n_rep, B, S_max, n_kv, hd)
+                  batch on dp; kv-heads on model if divisible, else the
+                  *sequence* axis takes model (context-parallel decode: XLA
+                  turns the masked softmax over a sharded KV axis into the
+                  flash-decode partial-softmax + tiny all-reduce pattern);
+                  if batch itself is unshardable (long_500k B=1), sequence
+                  takes (dp..., model) — full sequence parallelism.
+      mamba h   : (n_rep, B, d_in, ds)   batch dp, channels model
+      mamba conv: (n_rep, B, k-1, d_in)  batch dp, channels model
+      rwkv S    : (n_rep, B, H, hs, hs)  batch dp, heads model if divisible
+      x_prev    : (n_rep, B, D)          batch dp, D model
+    """
+    dp = axes.dp if len(axes.dp) > 1 else axes.dp[0]
+    m = axes.model
+
+    def div(dim: int, axis) -> bool:
+        return dim % _axis_size(mesh_shape, axis) == 0
+
+    def assign(path, leaf):
+        path_s = _path_str(path)
+        shape = leaf.shape
+        if path_s.endswith("pos"):
+            return P(*([None] * len(shape)))
+        if re.search(r"kv/(k|v)$", path_s):
+            _, B, S, H, D = shape
+            batch_ok = div(B, dp)
+            spec = [None, dp if batch_ok else None, None, None, None]
+            if batch_ok and div(H, m):
+                spec[3] = m
+            elif batch_ok and div(S, m):
+                spec[2] = m
+            elif not batch_ok:
+                seq_axes = tuple(
+                    (list(dp) if isinstance(dp, tuple) else [dp]) + [m]
+                )
+                if div(S, seq_axes):
+                    spec[2] = seq_axes
+                elif div(S, m):
+                    spec[2] = m
+            return P(*_sanitize(spec, shape, mesh_shape))
+        if re.search(r"mamba/h$", path_s):
+            spec = [None, dp, m, None]
+        elif re.search(r"mamba/conv$", path_s):
+            spec = [None, dp, None, m]
+        elif re.search(r"rwkv/S$", path_s):
+            spec = [None, dp, m, None, None]
+        elif re.search(r"x_prev", path_s):
+            spec = [None, dp, m]
+        else:
+            spec = [None] * len(shape)
+        return P(*_sanitize(spec, shape, mesh_shape))
+
+    return jax.tree_util.tree_map_with_path(assign, state_like)

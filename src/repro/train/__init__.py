@@ -1,0 +1,19 @@
+from repro.train.step import (
+    StepConfig,
+    build_compressed_dp_train_step,
+    build_decode_step,
+    build_eval_step,
+    build_prefill_step,
+    build_train_step,
+    decode_state_shapes,
+)
+
+__all__ = [
+    "StepConfig",
+    "build_compressed_dp_train_step",
+    "build_decode_step",
+    "build_eval_step",
+    "build_prefill_step",
+    "build_train_step",
+    "decode_state_shapes",
+]

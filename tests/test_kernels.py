@@ -1,0 +1,165 @@
+"""Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles
+(interpret mode on CPU; TPU is the deployment target)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.decode_attention import decode_attention, decode_attention_ref
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.rwkv6 import wkv6, wkv6_ref
+from repro.kernels.segment_reduce import (
+    PAD_KEY,
+    segment_reduce,
+    segment_reduce_ref,
+)
+
+RNG = np.random.default_rng(0)
+
+
+def _randn(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape) * scale, dtype)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("B,Sq,Sk,Hq,nkv,hd,causal", [
+        (2, 128, 128, 4, 2, 64, True),
+        (1, 256, 256, 8, 8, 128, True),
+        (2, 100, 100, 4, 1, 32, True),     # ragged seq -> padding path
+        (1, 64, 192, 2, 2, 80, False),     # Sk > Sq, odd head_dim
+        (1, 128, 128, 16, 2, 128, True),   # deep GQA grouping
+    ])
+    def test_matches_reference(self, B, Sq, Sk, Hq, nkv, hd, causal):
+        q = _randn((B, Sq, Hq, hd))
+        k = _randn((B, Sk, nkv, hd))
+        v = _randn((B, Sk, nkv, hd))
+        out = flash_attention(q, k, v, causal=causal)
+        ref = attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_bfloat16(self):
+        q = _randn((1, 128, 4, 64), jnp.bfloat16)
+        k = _randn((1, 128, 2, 64), jnp.bfloat16)
+        v = _randn((1, 128, 2, 64), jnp.bfloat16)
+        out = flash_attention(q, k, v, causal=True)
+        ref = attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32),
+            rtol=5e-2, atol=5e-2,
+        )
+
+    @given(
+        sq=st.integers(8, 160), hq=st.sampled_from([1, 2, 4, 8]),
+        g=st.sampled_from([1, 2, 4]), hd=st.sampled_from([16, 32, 64]),
+        bq=st.sampled_from([16, 32, 128]),
+    )
+    @settings(max_examples=8, deadline=None)
+    def test_property_block_shape_invariance(self, sq, hq, g, hd, bq):
+        """Output must not depend on the BlockSpec tiling."""
+        q = _randn((1, sq, hq * g, hd))
+        k = _randn((1, sq, hq, hd))
+        v = _randn((1, sq, hq, hd))
+        a = flash_attention(q, k, v, causal=True, block_q=bq, block_k=bq)
+        b = attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=3e-5, atol=3e-5)
+
+
+class TestDecodeAttention:
+    @pytest.mark.parametrize("B,Sq,S_max,Hq,nkv,hd,kv_len", [
+        (2, 1, 256, 4, 2, 64, 100),
+        (1, 1, 1024, 8, 8, 128, 1024),
+        (2, 4, 512, 4, 1, 32, 300),
+        (1, 1, 96, 2, 2, 80, 7),
+    ])
+    def test_matches_reference(self, B, Sq, S_max, Hq, nkv, hd, kv_len):
+        q = _randn((B, Sq, Hq, hd))
+        k = _randn((B, S_max, nkv, hd))
+        v = _randn((B, S_max, nkv, hd))
+        out = decode_attention(q, k, v, kv_len, block_k=128)
+        ref = decode_attention_ref(q, k, v, kv_len)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_garbage_beyond_kv_len_ignored(self):
+        q = _randn((1, 1, 2, 32))
+        k = _randn((1, 128, 2, 32))
+        v = _randn((1, 128, 2, 32))
+        out1 = decode_attention(q, k, v, 50, block_k=128)
+        k2 = k.at[:, 50:].set(1e4)  # poison unwritten slots
+        v2 = v.at[:, 50:].set(-1e4)
+        out2 = decode_attention(q, k2, v2, 50, block_k=128)
+        np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                                   rtol=1e-6)
+
+
+class TestWKV6:
+    @pytest.mark.parametrize("B,T,H,hs,chunk", [
+        (2, 64, 2, 32, 16),
+        (1, 100, 4, 64, 32),   # ragged T -> padding path
+        (2, 32, 1, 16, 32),
+        (1, 128, 2, 64, 64),
+    ])
+    def test_matches_step_scan(self, B, T, H, hs, chunk):
+        r = _randn((B, T, H, hs))
+        k = _randn((B, T, H, hs), scale=0.5)
+        v = _randn((B, T, H, hs))
+        w = jnp.asarray(RNG.uniform(0.05, 0.999, (B, T, H, hs)), jnp.float32)
+        u = _randn((H, hs), scale=0.3)
+        out, S = wkv6(r, k, v, w, u, chunk=chunk)
+        ref_out, ref_S = wkv6_ref(r, k, v, w, u)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                                   rtol=2e-3, atol=2e-3)
+        np.testing.assert_allclose(np.asarray(S), np.asarray(ref_S),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_strong_decay_no_overflow(self):
+        """w near 0 (log-space danger zone) must stay finite."""
+        B, T, H, hs = 1, 64, 1, 16
+        r = _randn((B, T, H, hs))
+        k = _randn((B, T, H, hs))
+        v = _randn((B, T, H, hs))
+        w = jnp.full((B, T, H, hs), 1e-6, jnp.float32)
+        u = _randn((H, hs))
+        out, S = wkv6(r, k, v, w, u, chunk=16)
+        assert np.isfinite(np.asarray(out)).all()
+        assert np.isfinite(np.asarray(S)).all()
+
+
+class TestSegmentReduce:
+    @pytest.mark.parametrize("R,C,nkeys", [(3, 64, 10), (1, 128, 5),
+                                           (4, 32, 32), (2, 256, 100)])
+    def test_matches_reference(self, R, C, nkeys):
+        keys = np.sort(
+            RNG.integers(0, nkeys, size=(R, C)).astype(np.int32), axis=1
+        )
+        for r in range(R):
+            npad = int(RNG.integers(0, C // 3))
+            if npad:
+                keys[r, -npad:] = int(PAD_KEY)
+            keys[r] = np.sort(keys[r])
+        vals = RNG.integers(1, 10, size=(R, C)).astype(np.int32)
+        ok, ov = segment_reduce(jnp.asarray(keys), jnp.asarray(vals))
+        for r in range(R):
+            rk, rv = segment_reduce_ref(jnp.asarray(keys[r]),
+                                        jnp.asarray(vals[r]))
+            np.testing.assert_array_equal(np.asarray(ok[r]), np.asarray(rk))
+            np.testing.assert_array_equal(np.asarray(ov[r]), np.asarray(rv))
+
+    @given(
+        c=st.sampled_from([16, 64, 128]),
+        nkeys=st.integers(1, 40),
+        seed=st.integers(0, 10_000),
+    )
+    @settings(max_examples=15, deadline=None)
+    def test_property_sum_conservation(self, c, nkeys, seed):
+        rng = np.random.default_rng(seed)
+        keys = np.sort(rng.integers(0, nkeys, c).astype(np.int32))
+        vals = rng.integers(0, 100, c).astype(np.int32)
+        ok, ov = segment_reduce(jnp.asarray(keys), jnp.asarray(vals))
+        assert int(np.asarray(ov).sum()) == int(vals.sum())
+        # one output slot per distinct key
+        assert (np.asarray(ok) != int(PAD_KEY)).sum() == len(set(keys))

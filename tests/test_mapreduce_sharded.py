@@ -1,0 +1,46 @@
+"""Sharded (all_to_all) MapReduce path — needs >1 device, so runs in a
+subprocess with forced host device count."""
+
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax
+from collections import Counter
+from repro.mapreduce import (JobConfig, build_job, build_job_sharded,
+                             collect_results, wordcount, wordcount_corpus)
+
+mesh = jax.make_mesh((4,), ("workers",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+corpus = wordcount_corpus(5000, vocab_size=129, seed=11)
+app = wordcount(129)
+for M, R in [(8, 6), (5, 9), (4, 4)]:
+    cfg = JobConfig(num_mappers=M, num_reducers=R, num_workers=4,
+                    capacity_factor=12.0)
+    ok, ov, dropped = build_job_sharded(app, cfg, len(corpus), mesh)(corpus)
+    assert int(dropped) == 0, (M, R)
+    got = collect_results(ok, ov)
+    want = dict(Counter(corpus.tolist()))
+    assert got == want, (M, R, len(got), len(want))
+    # equivalence with the single-controller path
+    cfg1 = JobConfig(num_mappers=M, num_reducers=R, capacity_factor=12.0)
+    ok1, ov1, d1 = build_job(app, cfg1, len(corpus))(corpus)
+    assert collect_results(ok1, ov1) == got
+print("SHARDED_OK")
+"""
+
+
+@pytest.mark.slow
+def test_sharded_engine_matches_global(tmp_path):
+    proc = subprocess.run(
+        [sys.executable, "-c", _SCRIPT],
+        capture_output=True, text=True, timeout=600,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "HOME": str(tmp_path)},
+        cwd=__file__.rsplit("/tests/", 1)[0],
+    )
+    assert "SHARDED_OK" in proc.stdout, proc.stderr[-3000:]

@@ -1,0 +1,173 @@
+"""Per-arch smoke tests: reduced same-family config, one real train/forward
+step on CPU, shape + NaN assertions; decode/prefill consistency."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import (
+    ARCH_IDS,
+    SHAPES,
+    applicable_shapes,
+    concrete_batch,
+    get_config,
+    smoke_config,
+)
+from repro.models import transformer as tf
+
+SMALL = dataclasses.replace(SHAPES["train_4k"], seq_len=24, global_batch=2)
+
+
+@pytest.fixture(scope="module")
+def smoke_models():
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = smoke_config(arch)
+            params = tf.init_params(cfg, jax.random.PRNGKey(0))
+            cache[arch] = (cfg, params)
+        return cache[arch]
+
+    return get
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_finite(arch, smoke_models):
+    cfg, params = smoke_models(arch)
+    batch = concrete_batch(cfg, SMALL)
+    loss, grads = jax.value_and_grad(
+        lambda p: tf.loss_fn(p, cfg, batch)
+    )(params)
+    assert np.isfinite(float(loss))
+    leaves = jax.tree.leaves(grads)
+    assert leaves and all(np.isfinite(np.asarray(g, np.float32)).all()
+                          for g in leaves)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_output_shape(arch, smoke_models):
+    cfg, params = smoke_models(arch)
+    batch = concrete_batch(cfg, SMALL)
+    logits, _ = tf.forward(params, cfg, batch)
+    B = SMALL.global_batch
+    if cfg.family == "vlm":
+        S = SMALL.seq_len  # patches + text
+    else:
+        S = SMALL.seq_len
+    assert logits.shape[0] == B and logits.shape[-1] == cfg.vocab_padded
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+@pytest.mark.parametrize(
+    "arch", [a for a in ARCH_IDS
+             if "decode_32k" in applicable_shapes(get_config(a))]
+)
+def test_decode_matches_full_forward(arch, smoke_models):
+    """prefill(t[:k]) + decode(t[k:]) must equal forward(t) at each position
+    (fp32 state/caches) — validates cache indexing and SSM state carry."""
+    cfg, params = smoke_models(arch)
+    B, S, k = 2, 12, 8
+    key = jax.random.PRNGKey(42)
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size,
+                                dtype=jnp.int32)
+    batch = {"tokens": tokens}
+    if cfg.family == "vlm":
+        patches = jax.random.normal(
+            key, (B, cfg.n_patches, cfg.embed_in_dim))
+        batch["patches"] = patches
+    full_logits, _ = tf.forward(params, cfg, batch)
+
+    state = tf.init_decode_state(cfg, B, S + cfg.n_patches,
+                                 cache_dtype=jnp.float32)
+    pre = {"tokens": tokens[:, :k]}
+    if cfg.family == "vlm":
+        pre["patches"] = patches
+    logits, state = tf.decode_step(params, cfg, state, pre)
+    np.testing.assert_allclose(
+        np.asarray(logits[:, -1], np.float32),
+        np.asarray(full_logits[:, cfg.n_patches + k - 1
+                               if cfg.family == "vlm" else k - 1],
+                   np.float32),
+        rtol=2e-2, atol=2e-2,
+    )
+    for i in range(k, S):
+        step_batch = {"tokens": tokens[:, i:i + 1]}
+        if cfg.family == "vlm":
+            step_batch["patches"] = jnp.zeros((B, 0, cfg.embed_in_dim))
+        logits, state = tf.decode_step(params, cfg, state, step_batch)
+        want = full_logits[:, cfg.n_patches + i
+                           if cfg.family == "vlm" else i]
+        np.testing.assert_allclose(
+            np.asarray(logits[:, 0], np.float32),
+            np.asarray(want, np.float32),
+            rtol=2e-2, atol=2e-2,
+        )
+
+
+def test_unrolled_layers_match_scan():
+    cfg = smoke_config("llama3-8b")
+    params = tf.init_params(cfg, jax.random.PRNGKey(1))
+    batch = concrete_batch(cfg, SMALL)
+    l1 = tf.loss_fn(params, cfg, batch)
+    l2 = tf.loss_fn(params, cfg, batch, unroll_layers=True)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+
+
+def test_logits_chunked_loss_matches_full():
+    cfg = smoke_config("gemma-7b")
+    params = tf.init_params(cfg, jax.random.PRNGKey(2))
+    batch = concrete_batch(cfg, SMALL)
+    full = tf.loss_fn(params, cfg, batch)
+    chunked = tf.loss_fn(params, cfg, batch, logits_chunk=8)
+    np.testing.assert_allclose(float(full), float(chunked), rtol=1e-5)
+
+
+def test_vocab_padding_masked():
+    cfg = smoke_config("hubert-xlarge")  # vocab 503 -> padded 512
+    assert cfg.vocab_padded == 512
+    params = tf.init_params(cfg, jax.random.PRNGKey(3))
+    batch = concrete_batch(cfg, SMALL)
+    logits, _ = tf.forward(params, cfg, batch)
+    pad_cols = np.asarray(logits, np.float32)[..., cfg.vocab_size:]
+    assert (pad_cols < -1e20).all()
+
+
+def test_moe_aux_loss_present():
+    cfg = smoke_config("granite-moe-1b-a400m")
+    params = tf.init_params(cfg, jax.random.PRNGKey(4))
+    batch = concrete_batch(cfg, SMALL)
+    _, aux = tf.forward(params, cfg, batch)
+    assert float(aux) > 0.0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_matches_brief(arch):
+    """Spot-check the exact assigned hyperparameters."""
+    cfg = get_config(arch)
+    brief = {
+        "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49155),
+        "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+        "internvl2-26b": (48, 6144, 48, 8, 16384, 92553),
+        "gemma-7b": (28, 3072, 16, 16, 24576, 256000),
+        "qwen3-0.6b": (28, 1024, 16, 8, 3072, 151936),
+        "qwen3-32b": (64, 5120, 64, 8, 25600, 151936),
+        "llama3-8b": (32, 4096, 32, 8, 14336, 128256),
+        "rwkv6-3b": (32, 2560, 40, 40, 8960, 65536),
+        "hubert-xlarge": (48, 1280, 16, 16, 5120, 504),
+        "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536),
+    }[arch]
+    assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+            cfg.d_ff, cfg.vocab_size) == brief
+    moe_brief = {
+        "granite-moe-1b-a400m": (32, 8),
+        "arctic-480b": (128, 2),
+        "jamba-v0.1-52b": (16, 2),
+    }
+    if arch in moe_brief:
+        assert (cfg.moe.n_experts, cfg.moe.top_k) == moe_brief[arch]
+    else:
+        assert cfg.moe is None

@@ -1,0 +1,152 @@
+"""Core modeling tests: features (Eqn 1-2), OLS (Eqn 6), prediction (Eqn 4-5)."""
+
+import numpy as np
+import pytest
+
+jnp = pytest.importorskip("jax.numpy")
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    ModelDatabase,
+    design_matrix,
+    fit,
+    fit_feature_spec,
+    grid,
+    prediction_error_stats,
+)
+
+
+def _cubic_surface(p):
+    m, r = p[..., 0], p[..., 1]
+    return (
+        120.0 + 2.0 * m - 0.05 * m**2 + 0.0008 * m**3
+        + 4.0 * r - 0.09 * r**2 + 0.0011 * r**3
+    )
+
+
+class TestFeatures:
+    def test_design_matrix_paper_ordering(self):
+        spec = fit_feature_spec(np.array([[2.0, 3.0]]))
+        row = np.asarray(design_matrix(spec, np.array([[2.0, 3.0]])))[0]
+        np.testing.assert_allclose(
+            row, [1, 2, 4, 8, 3, 9, 27], rtol=1e-6
+        )
+
+    def test_column_names(self):
+        spec = fit_feature_spec(np.zeros((4, 2)))
+        assert spec.column_names() == [
+            "1", "p0", "p0^2", "p0^3", "p1", "p1^2", "p1^3"
+        ]
+
+    def test_cross_terms(self):
+        spec = fit_feature_spec(np.zeros((4, 2)), cross_terms=True)
+        assert spec.n_features == 8
+        row = np.asarray(design_matrix(spec, np.array([[2.0, 3.0]])))[0]
+        assert row[-1] == 6.0  # p0 * p1
+
+    def test_scaling_maps_to_unit_interval(self):
+        params = np.array([[5.0, 10.0], [40.0, 20.0]])
+        spec = fit_feature_spec(params, scale=True)
+        P = np.asarray(design_matrix(spec, params))
+        assert P[0, 1] == 0.0 and P[1, 1] == 1.0
+
+    def test_grid(self):
+        g = grid([(5, 40, 5), (5, 40, 5)])
+        assert g.shape == (64, 2)
+        assert g.min() == 5 and g.max() == 40
+
+
+class TestFit:
+    def test_exact_recovery_noiseless(self):
+        """A cubic no-cross-term surface is IN the model class: zero error."""
+        space = grid([(5, 40, 5), (5, 40, 5)])
+        times = _cubic_surface(space)
+        model = fit(space, times)
+        assert model.train_mape < 1e-6
+        assert model.r2 > 1 - 1e-9
+        test = np.array([[7.5, 13.0], [33.0, 8.0]])
+        np.testing.assert_allclose(
+            np.asarray(model.predict(test)), _cubic_surface(test), rtol=1e-6
+        )
+
+    def test_paper_error_band_with_noise(self):
+        """~1% multiplicative noise -> test error well under the paper's 5%."""
+        rng = np.random.default_rng(0)
+        space = grid([(5, 40, 5), (5, 40, 5)])
+        times = _cubic_surface(space) * (1 + rng.normal(0, 0.01, len(space)))
+        model = fit(space, times)
+        test = np.array([[7, 13], [22, 31], [38, 9], [17, 24], [11, 36]],
+                        dtype=float)
+        stats = prediction_error_stats(model, test, _cubic_surface(test))
+        assert stats["mean_pct"] < 5.0
+
+    def test_float32_scaled_matches_float64(self):
+        space = grid([(5, 40, 5), (5, 40, 5)])
+        rng = np.random.default_rng(1)
+        times = _cubic_surface(space) * (1 + rng.normal(0, 0.005, len(space)))
+        m64 = fit(space, times)
+        m32 = fit(space, times, scale=True, lam=1e-9, dtype=jnp.float32)
+        assert abs(m32.train_mape - m64.train_mape) < 0.1
+
+    def test_robust_downweights_outliers(self):
+        space = grid([(5, 40, 5), (5, 40, 5)])
+        times = _cubic_surface(space).copy()
+        times[7] *= 3.0  # a straggler experiment (paper's temporal changes)
+        plain = fit(space, times)
+        robust = fit(space, times, robust=True)
+        clean = np.delete(np.arange(len(space)), 7)
+        err_plain = prediction_error_stats(
+            plain, space[clean], _cubic_surface(space[clean]))["mean_pct"]
+        err_rob = prediction_error_stats(
+            robust, space[clean], _cubic_surface(space[clean]))["mean_pct"]
+        assert err_rob < err_plain
+
+    def test_underdetermined_raises(self):
+        with pytest.raises(ValueError, match="underdetermined"):
+            fit(np.zeros((3, 2)), np.zeros(3))
+
+    @given(
+        coefs=st.lists(
+            st.floats(-2, 2, allow_nan=False), min_size=7, max_size=7
+        ),
+        seed=st.integers(0, 2**16),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_property_model_class_closure(self, coefs, seed):
+        """Any function in the model's own class is fit exactly (property)."""
+        rng = np.random.default_rng(seed)
+        space = rng.uniform(1, 10, size=(30, 2))
+        spec = fit_feature_spec(space)
+        P = np.asarray(design_matrix(spec, space), dtype=np.float64)
+        times = P @ np.asarray(coefs)
+        if np.abs(times).max() < 1e-3:
+            return  # degenerate all-zero surface
+        model = fit(space, times)
+        pred = np.asarray(model.predict(space))
+        np.testing.assert_allclose(pred, times, rtol=1e-4, atol=1e-6)
+
+
+class TestModelDatabase:
+    def test_per_app_per_platform_isolation(self, tmp_path):
+        db = ModelDatabase()
+        space = grid([(5, 40, 5), (5, 40, 5)])
+        model = fit(space, _cubic_surface(space))
+        db.put("wordcount", "cluster-A", model)
+        assert db.predict("wordcount", "cluster-A", [10, 10]) > 0
+        with pytest.raises(KeyError, match="platform"):
+            db.get("wordcount", "cluster-B")
+        with pytest.raises(KeyError):
+            db.get("eximparse", "cluster-A")
+
+    def test_persistence_roundtrip(self, tmp_path):
+        db = ModelDatabase()
+        space = grid([(5, 40, 5), (5, 40, 5)])
+        db.put("wc", "plat", fit(space, _cubic_surface(space)))
+        path = str(tmp_path / "models.json")
+        db.save(path)
+        db2 = ModelDatabase.load(path)
+        p = [17.0, 23.0]
+        assert db2.predict("wc", "plat", p) == pytest.approx(
+            db.predict("wc", "plat", p), rel=1e-9
+        )

@@ -1,0 +1,78 @@
+"""Tuner (beyond-paper autotuning) + end-to-end training-loop integration."""
+
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.core import grid, mesh_factorizations, tune, validate
+from repro.data import DataConfig, TokenPipeline
+from repro.launch.train import TrainLoopConfig, run_training
+
+
+class TestTuner:
+    def test_finds_optimum_on_smooth_surface(self):
+        def cost(p):
+            m, r = p[0], p[1]
+            return 10 + 0.02 * (m - 22) ** 2 + 0.05 * (r - 9) ** 2
+
+        space = grid([(5, 40, 1), (5, 40, 1)])
+        result = tune(cost, space, n_samples=40, seed=1)
+        result = validate(result, cost, space)
+        assert result.regret_pct < 5.0
+
+    def test_mesh_factorizations(self):
+        f = mesh_factorizations(16)
+        assert [tuple(map(int, r)) for r in f] == [
+            (1, 16), (2, 8), (4, 4), (8, 2), (16, 1)
+        ]
+
+    def test_sample_budget_respected(self):
+        calls = []
+
+        def cost(p):
+            calls.append(tuple(p))
+            return float(p[0] + p[1])
+
+        space = grid([(5, 40, 5), (5, 40, 5)])
+        tune(cost, space, n_samples=20, seed=0)
+        assert len(set(calls)) <= 24  # sample + top-up only, not the space
+
+
+class TestTrainLoop:
+    def test_loss_decreases_and_failure_recovery(self, tmp_path):
+        cfg = smoke_config("qwen3-0.6b")
+        data = DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
+                          global_batch=8, structure=0.9)
+        out = run_training(
+            cfg, data,
+            TrainLoopConfig(
+                steps=100, ckpt_dir=str(tmp_path), ckpt_every=20,
+                log_every=0, fail_at_step=50, lr=3e-3,
+            ),
+        )
+        assert out["last_step"] == 100
+        assert out["losses"][-1] < out["losses"][0] - 0.3
+        # failure at step 50 restored from step 40: extra replayed steps
+        assert len(out["losses"]) > 100 - 1
+
+    def test_restart_resumes_from_checkpoint(self, tmp_path):
+        cfg = smoke_config("qwen3-0.6b")
+        data = DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                          global_batch=4)
+        run_training(cfg, data, TrainLoopConfig(
+            steps=10, ckpt_dir=str(tmp_path), ckpt_every=5, log_every=0))
+        out2 = run_training(cfg, data, TrainLoopConfig(
+            steps=12, ckpt_dir=str(tmp_path), log_every=0))
+        assert out2["last_step"] == 12
+        assert len(out2["losses"]) == 2  # only steps 10..12 re-run
+
+    def test_deterministic_replay(self, tmp_path):
+        """Same seed + same data cursor -> identical loss trajectory."""
+        cfg = smoke_config("qwen3-0.6b")
+        data = DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                          global_batch=4, seed=7)
+        a = run_training(cfg, data, TrainLoopConfig(steps=5, log_every=0))
+        b = run_training(cfg, data, TrainLoopConfig(steps=5, log_every=0))
+        np.testing.assert_allclose(a["losses"], b["losses"], rtol=1e-6)
