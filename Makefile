@@ -1,0 +1,22 @@
+# One-step wrappers around the repo's verify/benchmark commands.
+
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test test-fast bench-quick bench-backends
+
+# Tier-1 verify (ROADMAP.md).
+test:
+	$(PYTHON) -m pytest -x -q
+
+# Skip the multi-device subprocess tests.
+test-fast:
+	$(PYTHON) -m pytest -x -q -m "not slow"
+
+# Full benchmark harness at reduced size.
+bench-quick:
+	$(PYTHON) -m benchmarks.run --quick
+
+# Just the reduce-backend comparison section.
+bench-backends:
+	$(PYTHON) -m benchmarks.run --quick --sections backends

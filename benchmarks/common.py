@@ -41,12 +41,19 @@ def make_app(name: str, tokens: int, seed: int = 0):
 
 
 class JobRunner:
-    """Compile-cached runner: time(config) for one application."""
+    """Compile-cached runner: time(config) for one application.
 
-    def __init__(self, app, corpus, *, warmup: int = 1):
+    ``cfg_kwargs`` forwards extra JobConfig fields (e.g.
+    ``reduce_backend="pallas"``), making the execution backend one more
+    profiled axis — build one runner per category and hand the set to
+    ``core.profiler.profile_categorical`` / ``core.tuner.tune_categorical``.
+    """
+
+    def __init__(self, app, corpus, *, warmup: int = 1, **cfg_kwargs):
         self.app = app
         self.corpus = corpus
         self.warmup = warmup
+        self.cfg_kwargs = cfg_kwargs
         self._cache: dict[tuple[int, int], object] = {}
 
     def __call__(self, config) -> float:
@@ -55,7 +62,7 @@ class JobRunner:
         if key not in self._cache:
             job = build_job(
                 self.app,
-                JobConfig(num_mappers=M, num_reducers=R),
+                JobConfig(num_mappers=M, num_reducers=R, **self.cfg_kwargs),
                 len(self.corpus),
             )
             for _ in range(self.warmup):

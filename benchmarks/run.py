@@ -7,6 +7,7 @@ Sections (CSV rows on stdout):
   fig3    — Fig. 3: per-experiment predicted vs actual time
   fig4    — Fig. 4: execution-time surface over (M, R) + observed optimum
   tuner   — beyond-paper: regression autotuner vs exhaustive search
+  backends— beyond-paper: reduce-backend (jnp/pallas/xla) timing comparison
   roofline— §Roofline table from the dry-run artifacts
   kernels — per-kernel microbench (us/call, interpret mode)
 """
@@ -66,12 +67,13 @@ def main() -> None:
                     help="smaller corpora / fewer repeats")
     ap.add_argument("--tokens", type=int, default=None)
     ap.add_argument("--sections", default="all",
-                    help="comma list: table1,fig3,fig4,tuner,roofline,kernels")
+                    help="comma list: table1,fig3,fig4,tuner,backends,"
+                         "roofline,kernels")
     args = ap.parse_args()
     tokens = args.tokens or (1 << 14 if args.quick else 1 << 16)
     repeats = 2 if args.quick else 5
     sections = (
-        ["table1", "fig3", "fig4", "tuner", "roofline", "kernels"]
+        ["table1", "fig3", "fig4", "tuner", "backends", "roofline", "kernels"]
         if args.sections == "all" else args.sections.split(",")
     )
     rows: list[str] = []
@@ -91,6 +93,9 @@ def main() -> None:
             elif sec == "tuner":
                 from benchmarks import tuner_vs_exhaustive
                 rows += tuner_vs_exhaustive.main(tokens)
+            elif sec == "backends":
+                from benchmarks import backends_compare
+                rows += backends_compare.main(tokens, max(2, repeats - 2))
             elif sec == "roofline":
                 from benchmarks import roofline
                 rows += roofline.main()

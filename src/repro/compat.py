@@ -1,0 +1,59 @@
+"""Version-compatibility shims for jax APIs that moved across releases.
+
+The repo targets current jax (top-level ``jax.shard_map``, explicit mesh
+``AxisType``, dict-valued ``cost_analysis``) but must also run on the 0.4.x
+line shipped in some containers, where ``shard_map`` lives in
+``jax.experimental``, meshes take no ``axis_types``, the replication-check
+kwarg is ``check_rep`` (renamed ``check_vma`` later), and
+``Compiled.cost_analysis()`` returns a per-device list.
+"""
+
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+try:
+    _shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover - version-dependent
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_SIG = inspect.signature(_shard_map).parameters
+if "check_vma" in _SIG:
+    _CHECK_KW = "check_vma"
+elif "check_rep" in _SIG:
+    _CHECK_KW = "check_rep"
+else:  # pragma: no cover
+    _CHECK_KW = None
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check: bool = True):
+    """``jax.shard_map`` with the replication-check kwarg name normalized."""
+    kwargs = {}
+    if not check and _CHECK_KW is not None:
+        kwargs[_CHECK_KW] = False
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs
+    )
+
+
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` with explicit Auto axis types where supported."""
+    shape, axes = tuple(shape), tuple(axes)
+    try:
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+        )
+    except (AttributeError, TypeError):  # pragma: no cover
+        return jax.make_mesh(shape, axes)
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``Compiled.cost_analysis()`` as one dict (newer jax) even on versions
+    returning a per-device list."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost

@@ -10,7 +10,12 @@ from repro.core.features import (
     fit_feature_spec,
     grid,
 )
-from repro.core.profiler import ProfileResult, profile_experiments, timeit
+from repro.core.profiler import (
+    ProfileResult,
+    profile_categorical,
+    profile_experiments,
+    timeit,
+)
 from repro.core.predictor import ModelDatabase
 from repro.core.regression import (
     RegressionModel,
@@ -22,7 +27,14 @@ from repro.core.costmodel import (
     parse_collectives,
     roofline_from_compiled,
 )
-from repro.core.tuner import TuneResult, mesh_factorizations, tune, validate
+from repro.core.tuner import (
+    CategoricalTuneResult,
+    TuneResult,
+    mesh_factorizations,
+    tune,
+    tune_categorical,
+    validate,
+)
 
 __all__ = [
     "FeatureSpec",
@@ -30,6 +42,7 @@ __all__ = [
     "fit_feature_spec",
     "grid",
     "ProfileResult",
+    "profile_categorical",
     "profile_experiments",
     "timeit",
     "ModelDatabase",
@@ -39,8 +52,10 @@ __all__ = [
     "RooflineReport",
     "parse_collectives",
     "roofline_from_compiled",
+    "CategoricalTuneResult",
     "TuneResult",
     "mesh_factorizations",
     "tune",
+    "tune_categorical",
     "validate",
 ]

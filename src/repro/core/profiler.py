@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Sequence
+from typing import Callable, Mapping, Sequence
 
 import numpy as np
 
@@ -106,3 +106,35 @@ def profile_experiments(
     return ProfileResult(
         params=configs, times=times, raw_times=raw, param_names=names
     )
+
+
+def profile_categorical(
+    run_fns: Mapping[str, Callable[[Sequence[float]], float]],
+    configs: np.ndarray,
+    *,
+    repeats: int = 5,
+    param_names: Sequence[str] | None = None,
+    warmup: int = 0,
+    reducer: str = "mean",
+    verbose: bool = False,
+) -> dict[str, ProfileResult]:
+    """Profile the same configuration set under each categorical variant.
+
+    ``run_fns`` maps a category value (e.g. the MapReduce engine's reduce
+    backend: "jnp" / "pallas" / "xla") to its ``run_fn``.  The numeric
+    parameters stay shared, so the results are directly comparable and feed
+    the per-category models of :func:`repro.core.tuner.tune_categorical` —
+    the paper's per-application model-database pattern, reused per-category.
+    """
+    return {
+        cat: profile_experiments(
+            fn,
+            configs,
+            repeats=repeats,
+            param_names=param_names,
+            warmup=warmup,
+            reducer=reducer,
+            verbose=verbose,
+        )
+        for cat, fn in run_fns.items()
+    }

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Sequence
+from typing import Callable, Mapping, Sequence
 
 import numpy as np
 
@@ -116,6 +116,47 @@ def tune(
         model=model,
         sampled_configs=prof.params,
         sampled_times=prof.times,
+    )
+
+
+@dataclasses.dataclass
+class CategoricalTuneResult:
+    """Joint optimum over (category, numeric config)."""
+
+    best_category: str
+    best_config: np.ndarray
+    predicted_time: float
+    per_category: dict[str, TuneResult]
+
+    def predicted_times(self) -> dict[str, float]:
+        return {c: r.predicted_time for c, r in self.per_category.items()}
+
+
+def tune_categorical(
+    run_fns: Mapping[str, Callable[[Sequence[float]], float]],
+    space: np.ndarray,
+    **tune_kwargs,
+) -> CategoricalTuneResult:
+    """Tune a mixed categorical x numeric space: one polynomial model per
+    category value, argmin across all of them.
+
+    The paper's model is numeric-only; categorical axes (here: the MapReduce
+    engine's shuffle/reduce backend) don't embed in a polynomial basis, so we
+    reuse the paper's model-database pattern — one independent model per
+    category — and take the joint argmin.  Costs |categories| x |samples|
+    profiles instead of |categories| x |space|.
+    """
+    if not run_fns:
+        raise ValueError("run_fns must name at least one category")
+    per = {
+        cat: tune(fn, space, **tune_kwargs) for cat, fn in run_fns.items()
+    }
+    best_cat = min(per, key=lambda c: per[c].predicted_time)
+    return CategoricalTuneResult(
+        best_category=best_cat,
+        best_config=per[best_cat].best_config,
+        predicted_time=per[best_cat].predicted_time,
+        per_category=per,
     )
 
 

@@ -289,7 +289,9 @@ def estimate_step_time(arch: str, shape_name: str, mesh, *,
 
 
 def _raw_costs(compiled, n_devices):
-    cost = compiled.cost_analysis()
+    from repro.compat import cost_analysis_dict
+
+    cost = cost_analysis_dict(compiled)
     coll = costmodel.parse_collectives(compiled.as_text())
     return {
         "flops": float(cost.get("flops", 0.0)),

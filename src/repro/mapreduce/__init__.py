@@ -1,4 +1,14 @@
-"""TPU-native MapReduce substrate: engine + the paper's two applications."""
+"""TPU-native MapReduce substrate: phase pipeline + pluggable backends +
+the paper's two applications.
+
+Layering (see ARCHITECTURE.md):
+
+    phases.py   — the single shared implementation of each phase
+    backends.py — swappable shuffle/reduce strategies + registries
+    engine.py   — JobConfig/MapReduceApp + thin build_job compositions
+    apps.py     — WordCount and Exim mainlog parsing
+    datagen.py  — synthetic corpora
+"""
 
 from repro.mapreduce.engine import (
     JobConfig,
@@ -7,6 +17,16 @@ from repro.mapreduce.engine import (
     build_job,
     build_job_sharded,
     collect_results,
+)
+from repro.mapreduce.backends import (
+    REDUCE_BACKENDS,
+    SHUFFLE_BACKENDS,
+    ReduceBackend,
+    ShuffleBackend,
+    get_reduce_backend,
+    get_shuffle_backend,
+    register_reduce_backend,
+    register_shuffle_backend,
 )
 from repro.mapreduce.apps import eximparse, wordcount, RECORD_WIDTH
 from repro.mapreduce.datagen import exim_mainlog, wordcount_corpus
@@ -18,6 +38,14 @@ __all__ = [
     "build_job",
     "build_job_sharded",
     "collect_results",
+    "REDUCE_BACKENDS",
+    "SHUFFLE_BACKENDS",
+    "ReduceBackend",
+    "ShuffleBackend",
+    "get_reduce_backend",
+    "get_shuffle_backend",
+    "register_reduce_backend",
+    "register_shuffle_backend",
     "eximparse",
     "wordcount",
     "RECORD_WIDTH",

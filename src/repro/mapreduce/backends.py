@@ -1,0 +1,294 @@
+"""Pluggable shuffle/reduce backends for the MapReduce phase pipeline.
+
+The paper models total execution time as a function of configuration
+parameters (M, R, ...).  This module turns the *execution strategy* itself
+into one more configuration axis: a ``JobConfig`` names a reduce backend and
+a shuffle backend by string, the engine resolves them here, and the tuner
+can treat the backend as a categorical knob (one model per category — the
+paper's per-application model-database pattern, reused per-backend).
+
+Reduce backends (per-partition sorted segment aggregation, all implementing
+the same contract as :func:`repro.mapreduce.phases.segment_sum_sorted`):
+
+* ``jnp``    — scatter-add segment sum (the portable reference);
+* ``pallas`` — the Pallas TPU ``segment_reduce`` kernel (MXU one-hot
+  matmul formulation; interpret mode off-TPU), ``sum`` only;
+* ``xla``    — ``jax.ops.segment_sum`` / ``segment_max`` primitives.
+
+Shuffle backends:
+
+* ``lexsort``    — single-controller global sort by (reducer, key) +
+  capacity-bounded scatter;
+* ``all_to_all`` — per-worker partition + a literal mesh ``all_to_all``
+  (the multi-chip deployment path; used inside ``shard_map``).
+
+Registering a new backend is one call::
+
+    register_reduce_backend(MyBackend())
+    JobConfig(..., reduce_backend="mine")   # now valid
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.mapreduce import phases
+from repro.mapreduce.phases import PAD_KEY, bucket_scatter, hash_to_reducer
+
+
+# ---------------------------------------------------------------------------
+# Reduce backends
+# ---------------------------------------------------------------------------
+
+
+class ReduceBackend:
+    """Per-partition sorted segment aggregation.
+
+    ``reduce(keys, values, reduce_op)`` takes (N, C) blocks — N partitions,
+    each row sorted by key with PAD_KEY padding — and returns (out_keys,
+    out_vals) of the same shape: the aggregate of each equal-key run at its
+    first occurrence, (PAD_KEY, 0) elsewhere.
+    """
+
+    name: str = "abstract"
+    supported_ops: tuple[str, ...] = ()
+
+    def reduce(self, keys, values, reduce_op: str):
+        raise NotImplementedError
+
+
+class JnpReduceBackend(ReduceBackend):
+    """Portable reference: scatter-add/max segment reduce (pure jnp)."""
+
+    name = "jnp"
+    supported_ops = ("sum", "max")
+
+    def reduce(self, keys, values, reduce_op: str):
+        ok, ov, _ = jax.vmap(
+            lambda k, v: phases.segment_sum_sorted(
+                k, v, k != PAD_KEY, reduce_op
+            )
+        )(keys, values)
+        return ok, ov
+
+
+class PallasReduceBackend(ReduceBackend):
+    """The Pallas TPU segment-reduce kernel (one grid step per partition).
+
+    Accumulates on the MXU in float32, so integer aggregates are exact only
+    while every partial sum stays below ``EXACT_INT_BOUND`` (2**24); beyond
+    that the result silently loses low bits relative to the jnp/xla
+    backends.  Workloads with per-key totals near that bound should use a
+    different backend (tests/test_backends.py pins this boundary).
+
+    ``interpret=None`` (default) auto-selects: the compiled kernel on TPU,
+    interpret mode everywhere else.
+    """
+
+    name = "pallas"
+    supported_ops = ("sum",)
+    EXACT_INT_BOUND = 2 ** 24  # float32 integer-exactness limit
+
+    def __init__(self, interpret: bool | None = None):
+        self.interpret = interpret
+
+    def reduce(self, keys, values, reduce_op: str):
+        if reduce_op not in self.supported_ops:
+            raise ValueError(
+                f"pallas reduce backend supports {self.supported_ops}, "
+                f"got {reduce_op!r}"
+            )
+        from repro.kernels.segment_reduce import segment_reduce
+
+        interpret = self.interpret
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        return segment_reduce(keys, values, interpret=interpret)
+
+
+class XlaReduceBackend(ReduceBackend):
+    """XLA segment primitives (``jax.ops.segment_sum`` / ``segment_max``)."""
+
+    name = "xla"
+    supported_ops = ("sum", "max")
+
+    def reduce(self, keys, values, reduce_op: str):
+        def one_row(k, v):
+            n = k.shape[0]
+            valid = k != PAD_KEY
+            first = jnp.concatenate(
+                [jnp.array([True]), k[1:] != k[:-1]]
+            ) & valid
+            seg = jnp.cumsum(first.astype(jnp.int32)) - 1
+            seg = jnp.where(valid, seg, n - 1)
+            if reduce_op == "sum":
+                agg = jax.ops.segment_sum(
+                    jnp.where(valid, v, 0), seg, num_segments=n
+                )
+            elif reduce_op == "max":
+                agg = jax.ops.segment_max(
+                    jnp.where(valid, v, jnp.iinfo(jnp.int32).min),
+                    seg,
+                    num_segments=n,
+                )
+            else:
+                raise ValueError(reduce_op)
+            out_k = jnp.where(first, k, PAD_KEY)
+            out_v = jnp.where(first, agg[seg], 0).astype(v.dtype)
+            return out_k, out_v
+
+        return jax.vmap(one_row)(keys, values)
+
+
+# ---------------------------------------------------------------------------
+# Shuffle backends
+# ---------------------------------------------------------------------------
+
+
+class ShuffleBackend:
+    """Routes map-output pairs into per-reduce-task partitions.
+
+    Two structural families share this interface:
+
+    * non-collective (``collective = False``): :meth:`partition` sees the
+      job's full flat pair stream and returns global (R_pad, cap)
+      partitions — used by the single-controller path;
+    * collective (``collective = True``): :meth:`exchange` runs *inside* a
+      ``shard_map`` worker body on that worker's local pairs and returns the
+      (slots, cap) reduce buckets the worker owns after the exchange.
+
+    Both return a ``dropped`` count for capacity-overflow accounting.
+    """
+
+    name: str = "abstract"
+    collective: bool = False
+
+    def partition(self, cfg, keys, values, pvalid):
+        raise NotImplementedError(f"{self.name} is not a global shuffle")
+
+    def exchange(self, cfg, axis, keys, values, pvalid):
+        raise NotImplementedError(f"{self.name} is not a collective shuffle")
+
+
+class LexsortShuffle(ShuffleBackend):
+    """Single-controller shuffle: global sort by (reducer, key) + scatter."""
+
+    name = "lexsort"
+    collective = False
+
+    def partition(self, cfg, keys, values, pvalid):
+        """keys/values/pvalid: flat (n,).  Returns (part_keys, part_vals,
+        dropped) with partitions of shape (reduce_waves * W, cap)."""
+        R, W = cfg.num_reducers, cfg.num_workers
+        n = keys.shape[0]
+        rid = hash_to_reducer(keys, R)
+        rid = jnp.where(pvalid, rid, R)  # invalid pairs -> OOB dump row
+        # Global shuffle sort: primary reducer id, secondary key.
+        order = jnp.lexsort((keys, rid))
+        skeys, svals, srid = keys[order], values[order], rid[order]
+        cap = phases.partition_capacity(n, R, cfg.capacity_factor)
+        R_pad = cfg.reduce_waves * W
+        (part_keys, part_vals), dropped = bucket_scatter(
+            srid, R, R_pad, cap, (skeys, svals), (PAD_KEY, 0)
+        )
+        return part_keys, part_vals, dropped
+
+
+class AllToAllShuffle(ShuffleBackend):
+    """Mesh shuffle: per-worker partition by destination + ``all_to_all``.
+
+    Runs inside a ``shard_map`` worker body.  Reducer r lives on worker
+    r % W; after the exchange each worker buckets its received pairs into
+    the ``reduce_waves`` local reduce slots it owns (local slot = r // W).
+    """
+
+    name = "all_to_all"
+    collective = True
+
+    def exchange(self, cfg, axis, keys, values, pvalid):
+        """keys/values/pvalid: this worker's flat (n_local,) pairs.
+        Returns (bucket_keys, bucket_vals, dropped) with buckets of shape
+        (reduce_waves, red_cap)."""
+        R, W, waves_r = cfg.num_reducers, cfg.num_workers, cfg.reduce_waves
+        n_local = keys.shape[0]
+        # Per (src, dst) shuffle capacity: uniform share x safety factor.
+        shuf_cap = phases.partition_capacity(n_local, W, cfg.capacity_factor)
+        red_cap = phases.partition_capacity(
+            W * n_local, R, cfg.capacity_factor
+        )
+        # Partition local pairs by destination worker = rid % W.
+        rid = jnp.where(pvalid, hash_to_reducer(keys, R), R)
+        dst = jnp.where(pvalid, rid % W, W)
+        order = jnp.lexsort((keys, rid, dst))
+        k, v, rid, dst = (
+            keys[order], values[order], rid[order], dst[order]
+        )
+        (send_k, send_v, send_r), send_dropped = bucket_scatter(
+            dst, W, W, shuf_cap, (k, v, rid), (PAD_KEY, 0, R)
+        )
+        # The shuffle: exchange partition i with worker i (tiled all_to_all:
+        # row i of the (W, cap) send buffer goes to worker i, received rows
+        # re-stack along the same axis).
+        recv_k = jax.lax.all_to_all(send_k, axis, 0, 0, tiled=True)
+        recv_v = jax.lax.all_to_all(send_v, axis, 0, 0, tiled=True)
+        recv_r = jax.lax.all_to_all(send_r, axis, 0, 0, tiled=True)
+        rk, rv, rr = (
+            recv_k.reshape(-1), recv_v.reshape(-1), recv_r.reshape(-1)
+        )
+        # Bucket received pairs into this worker's reduce tasks
+        # (local slot = rid // W, since reducer r lives on worker r % W).
+        lslot = jnp.where(rr < R, rr // W, waves_r)
+        order = jnp.lexsort((rk, lslot))
+        rk, rv, lslot = rk[order], rv[order], lslot[order]
+        (bk, bv), recv_dropped = bucket_scatter(
+            lslot, waves_r, waves_r, red_cap, (rk, rv), (PAD_KEY, 0)
+        )
+        return bk, bv, send_dropped + recv_dropped
+
+
+# ---------------------------------------------------------------------------
+# Registries
+# ---------------------------------------------------------------------------
+
+REDUCE_BACKENDS: dict[str, ReduceBackend] = {}
+SHUFFLE_BACKENDS: dict[str, ShuffleBackend] = {}
+
+
+def register_reduce_backend(backend: ReduceBackend) -> ReduceBackend:
+    if not backend.supported_ops:
+        raise ValueError(f"backend {backend.name!r} supports no reduce ops")
+    REDUCE_BACKENDS[backend.name] = backend
+    return backend
+
+
+def register_shuffle_backend(backend: ShuffleBackend) -> ShuffleBackend:
+    SHUFFLE_BACKENDS[backend.name] = backend
+    return backend
+
+
+register_reduce_backend(JnpReduceBackend())
+register_reduce_backend(PallasReduceBackend())
+register_reduce_backend(XlaReduceBackend())
+register_shuffle_backend(LexsortShuffle())
+register_shuffle_backend(AllToAllShuffle())
+
+
+def get_reduce_backend(name: str) -> ReduceBackend:
+    try:
+        return REDUCE_BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown reduce backend {name!r}; "
+            f"registered: {sorted(REDUCE_BACKENDS)}"
+        ) from None
+
+
+def get_shuffle_backend(name: str) -> ShuffleBackend:
+    try:
+        return SHUFFLE_BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown shuffle backend {name!r}; "
+            f"registered: {sorted(SHUFFLE_BACKENDS)}"
+        ) from None

@@ -211,14 +211,16 @@ def build_compressed_dp_train_step(cfg: ModelConfig,
         batch_spec = jax.tree.map(
             lambda l: P(axis, *([None] * (l.ndim - 1))), batch_like
         )
-        return jax.shard_map(
+        from repro.compat import shard_map
+
+        return shard_map(
             shard_body,
             mesh=mesh,
             in_specs=(rep(params_like), rep(opt_like), rep(err_like),
                       batch_spec),
             out_specs=(rep(params_like), rep(opt_like), rep(err_like),
                        {"loss": P(), "grad_norm": P(), "lr": P()}),
-            check_vma=False,
+            check=False,
         )
 
     return make

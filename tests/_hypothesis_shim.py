@@ -1,0 +1,131 @@
+"""Deterministic fallback for the ``hypothesis`` API surface this suite uses.
+
+The container has no network installs, so ``hypothesis`` may be absent.
+``tests/conftest.py`` registers this module as ``hypothesis`` in that case.
+It is NOT a property-testing engine: no shrinking, no adaptive generation —
+just a seeded-RNG sampler that runs each ``@given`` test ``max_examples``
+times with deterministic draws, so the property tests still exercise many
+parameter combinations and failures are reproducible.
+
+Supported: ``given``, ``settings(max_examples=, deadline=)``, and the
+strategies ``integers``, ``floats``, ``booleans``, ``just``,
+``sampled_from``, ``lists``.
+"""
+
+from __future__ import annotations
+
+import inspect
+import types
+
+import numpy as np
+
+__version__ = "0.0-shim"
+_DEFAULT_MAX_EXAMPLES = 10
+
+
+class SearchStrategy:
+    """A strategy is just a draw function over a seeded Generator."""
+
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+    def map(self, fn):
+        return SearchStrategy(lambda rng: fn(self._draw(rng)))
+
+
+def integers(min_value, max_value):
+    return SearchStrategy(
+        lambda rng: int(rng.integers(min_value, max_value + 1))
+    )
+
+
+def floats(min_value=None, max_value=None, allow_nan=None,
+           allow_infinity=None, width=64):
+    lo = -1e6 if min_value is None else float(min_value)
+    hi = 1e6 if max_value is None else float(max_value)
+    return SearchStrategy(lambda rng: float(rng.uniform(lo, hi)))
+
+
+def booleans():
+    return SearchStrategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def just(value):
+    return SearchStrategy(lambda rng: value)
+
+
+def sampled_from(elements):
+    elems = list(elements)
+    return SearchStrategy(lambda rng: elems[int(rng.integers(len(elems)))])
+
+
+def lists(elements, min_size=0, max_size=None):
+    hi = min_size + 10 if max_size is None else max_size
+
+    def draw(rng):
+        size = int(rng.integers(min_size, hi + 1))
+        return [elements.draw(rng) for _ in range(size)]
+
+    return SearchStrategy(draw)
+
+
+def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*st_args, **st_kwargs):
+    if st_args:
+        raise TypeError("shim supports keyword-style @given only")
+
+    def deco(fn):
+        sig = inspect.signature(fn)
+        remaining = [
+            p for name, p in sig.parameters.items() if name not in st_kwargs
+        ]
+
+        def wrapper(*args, **kwargs):
+            n = getattr(
+                wrapper,
+                "_shim_max_examples",
+                getattr(fn, "_shim_max_examples", _DEFAULT_MAX_EXAMPLES),
+            )
+            rng = np.random.default_rng(0)
+            for _ in range(n):
+                drawn = {k: s.draw(rng) for k, s in st_kwargs.items()}
+                fn(*args, **kwargs, **drawn)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        # Drawn params must not look like pytest fixtures.
+        wrapper.__signature__ = sig.replace(parameters=remaining)
+        if hasattr(fn, "_shim_max_examples"):
+            wrapper._shim_max_examples = fn._shim_max_examples
+        return wrapper
+
+    return deco
+
+
+class HealthCheck:
+    all = ()
+
+
+# Module-shaped ``strategies`` attribute so that both
+# ``from hypothesis import strategies as st`` and
+# ``import hypothesis.strategies`` resolve.
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.SearchStrategy = SearchStrategy
+strategies.integers = integers
+strategies.floats = floats
+strategies.booleans = booleans
+strategies.just = just
+strategies.sampled_from = sampled_from
+strategies.lists = lists

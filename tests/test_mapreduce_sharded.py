@@ -14,13 +14,12 @@ from collections import Counter
 from repro.mapreduce import (JobConfig, build_job, build_job_sharded,
                              collect_results, wordcount, wordcount_corpus)
 
-mesh = jax.make_mesh((4,), ("workers",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = jax.make_mesh((4,), ("workers",))
 corpus = wordcount_corpus(5000, vocab_size=129, seed=11)
 app = wordcount(129)
-for M, R in [(8, 6), (5, 9), (4, 4)]:
+for (M, R), backend in [((8, 6), "jnp"), ((5, 9), "pallas"), ((4, 4), "xla")]:
     cfg = JobConfig(num_mappers=M, num_reducers=R, num_workers=4,
-                    capacity_factor=12.0)
+                    capacity_factor=12.0, reduce_backend=backend)
     ok, ov, dropped = build_job_sharded(app, cfg, len(corpus), mesh)(corpus)
     assert int(dropped) == 0, (M, R)
     got = collect_results(ok, ov)
@@ -30,6 +29,12 @@ for M, R in [(8, 6), (5, 9), (4, 4)]:
     cfg1 = JobConfig(num_mappers=M, num_reducers=R, capacity_factor=12.0)
     ok1, ov1, d1 = build_job(app, cfg1, len(corpus))(corpus)
     assert collect_results(ok1, ov1) == got
+# config-driven route: shuffle backend selected via JobConfig
+cfg = JobConfig(num_mappers=6, num_reducers=5, num_workers=4,
+                capacity_factor=12.0, shuffle_backend="all_to_all")
+ok, ov, d = build_job(app, cfg, len(corpus), mesh=mesh)(corpus)
+assert int(d) == 0
+assert collect_results(ok, ov) == dict(Counter(corpus.tolist()))
 print("SHARDED_OK")
 """
 

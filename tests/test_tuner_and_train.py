@@ -6,7 +6,13 @@ import numpy as np
 import pytest
 
 from repro.configs import smoke_config
-from repro.core import grid, mesh_factorizations, tune, validate
+from repro.core import (
+    grid,
+    mesh_factorizations,
+    tune,
+    tune_categorical,
+    validate,
+)
 from repro.data import DataConfig, TokenPipeline
 from repro.launch.train import TrainLoopConfig, run_training
 
@@ -27,6 +33,34 @@ class TestTuner:
         assert [tuple(map(int, r)) for r in f] == [
             (1, 16), (2, 8), (4, 4), (8, 2), (16, 1)
         ]
+
+    def test_categorical_picks_best_backend(self):
+        """One model per category; the joint argmin finds the cheap one."""
+
+        def make_cost(overhead):
+            def cost(p):
+                m, r = p[0], p[1]
+                return overhead + 0.02 * (m - 22) ** 2 + 0.05 * (r - 9) ** 2
+            return cost
+
+        space = grid([(5, 40, 1), (5, 40, 1)])
+        result = tune_categorical(
+            {"slow": make_cost(30.0), "fast": make_cost(5.0)},
+            space, n_samples=40, seed=1,
+        )
+        assert result.best_category == "fast"
+        assert set(result.per_category) == {"slow", "fast"}
+        times = result.predicted_times()
+        assert times["fast"] < times["slow"]
+        # the numeric optimum is still found within the winning category
+        m, r = result.best_config
+        assert abs(m - 22) <= 3 and abs(r - 9) <= 3
+
+    def test_categorical_empty_rejected(self):
+        import pytest
+
+        with pytest.raises(ValueError, match="category"):
+            tune_categorical({}, grid([(5, 40, 5), (5, 40, 5)]))
 
     def test_sample_budget_respected(self):
         calls = []
