@@ -3,11 +3,20 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast bench-quick bench-backends
+.PHONY: test test-fast bench-quick bench-backends bench-cluster lint
 
 # Tier-1 verify (ROADMAP.md).
 test:
 	$(PYTHON) -m pytest -x -q
+
+# Ruff lint (config in pyproject.toml); skips gracefully when ruff is
+# absent locally — CI always installs it.
+lint:
+	@if command -v ruff >/dev/null 2>&1; then \
+		ruff check src tests benchmarks examples; \
+	else \
+		echo "ruff not installed; skipping lint (CI runs it)"; \
+	fi
 
 # Skip the multi-device subprocess tests.
 test-fast:
@@ -20,3 +29,7 @@ bench-quick:
 # Just the reduce-backend comparison section.
 bench-backends:
 	$(PYTHON) -m benchmarks.run --quick --sections backends
+
+# Just the predictive-scheduler policy comparison.
+bench-cluster:
+	$(PYTHON) -m benchmarks.run --quick --sections cluster

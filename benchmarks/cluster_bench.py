@@ -1,0 +1,132 @@
+"""Benchmark section ``cluster``: predictive scheduling vs the FIFO baseline.
+
+Runs every registered policy over the *same* deterministic heterogeneous
+trace (≥ 50 jobs by default) on the analytic oracle and reports makespan,
+mean wait/turnaround, utilization, SLO attainment, and the in-trace
+prediction-error trajectory (first-half vs second-half MAE — the online
+refinement effect).  CSV rows go to stdout like every other section; the
+summary dict feeds ``BENCH_cluster.json``.
+"""
+
+from __future__ import annotations
+
+from repro.cluster import (
+    AnalyticOracle,
+    Cluster,
+    POLICIES,
+    PredictivePolicy,
+    assign_deadlines,
+    generate_workload,
+    get_policy,
+)
+
+N_JOBS = 60
+WORKERS = 16
+
+
+def run_trace(
+    *,
+    n_jobs: int = N_JOBS,
+    workers: int = WORKERS,
+    arrival: str = "poisson",
+    mean_interarrival: float = 0.12,
+    size_range: tuple[int, int] = (1 << 14, 1 << 18),
+    deadline_fraction: float = 0.6,
+    slack_range: tuple[float, float] = (1.2, 6.0),
+    noise: float = 0.02,
+    seed: int = 1,
+    policies=None,
+) -> dict[str, dict]:
+    """Run each policy over one shared trace; return metrics per policy."""
+    oracle = AnalyticOracle(noise=noise, seed=seed)
+    jobs = generate_workload(
+        n_jobs, seed=seed, arrival=arrival,
+        mean_interarrival=mean_interarrival, size_range=size_range,
+    )
+    jobs = assign_deadlines(
+        jobs, lambda j: oracle.nominal_time(j.app, j.size),
+        slack_range=slack_range, fraction=deadline_fraction, seed=seed + 1,
+    )
+    cluster = Cluster(workers, oracle)
+    out = {}
+    # Default: every registered policy (ARCHITECTURE.md's registration
+    # recipe puts user policies in the comparison automatically), with the
+    # baseline pinned first.
+    if policies is None:
+        policies = ["fifo-static"] + sorted(
+            n for n in POLICIES if n != "fifo-static"
+        )
+    for name in policies:
+        # Only the predictive base class takes seed=; a user-registered
+        # minimal SchedulingPolicy must construct bare.
+        predictive = issubclass(POLICIES[name], PredictivePolicy)
+        kwargs = {"seed": seed} if predictive else {}
+        result = cluster.run(jobs, get_policy(name, **kwargs))
+        out[name] = result.metrics()
+    return out
+
+
+def main(tokens: int, repeats: int) -> tuple[list[str], dict]:
+    """Section entry point; (tokens, repeats) follow the harness convention
+    (tokens scales the max job size, repeats is unused — one shared trace
+    keeps every policy comparable)."""
+    del repeats
+    size_hi = max(1 << 15, tokens)
+    metrics = run_trace(size_range=(1 << 14, size_hi))
+    rows = [
+        "cluster,policy,makespan_s,mean_wait_s,mean_turnaround_s,"
+        "utilization,slo_attainment,n_rejected,pred_mae_pct,"
+        "pred_mae_pct_first_half,pred_mae_pct_second_half"
+    ]
+
+    def fmt(x, nd=3):
+        return "" if x is None else f"{x:.{nd}f}"
+
+    for name, m in metrics.items():
+        rows.append(
+            f"cluster,{name},{fmt(m['makespan_s'])},{fmt(m['mean_wait_s'])},"
+            f"{fmt(m['mean_turnaround_s'])},{fmt(m['utilization'])},"
+            f"{fmt(m['slo_attainment'])},{m['n_rejected']},"
+            f"{fmt(m['pred_mae_pct'])},{fmt(m['pred_mae_pct_first_half'])},"
+            f"{fmt(m['pred_mae_pct_second_half'])}"
+        )
+
+    baseline = metrics["fifo-static"]["makespan_s"]
+    predictive = {
+        n: m for n, m in metrics.items() if n != "fifo-static"
+    }
+    best_name = min(predictive, key=lambda n: predictive[n]["makespan_s"])
+    refined = [
+        (n, m) for n, m in predictive.items()
+        if m["pred_mae_pct_first_half"] is not None
+        and m["pred_mae_pct_second_half"] is not None
+    ]
+    summary = {
+        "n_jobs": N_JOBS,
+        "workers": WORKERS,
+        "per_policy": metrics,
+        "baseline_makespan_s": baseline,
+        "best_predictive_policy": best_name,
+        "best_predictive_makespan_s": predictive[best_name]["makespan_s"],
+        "predictive_beats_baseline_makespan": (
+            predictive[best_name]["makespan_s"] < baseline
+        ),
+        "online_refinement": {
+            n: {
+                "mae_pct_first_half": m["pred_mae_pct_first_half"],
+                "mae_pct_second_half": m["pred_mae_pct_second_half"],
+                "improved": (
+                    m["pred_mae_pct_second_half"]
+                    < m["pred_mae_pct_first_half"]
+                ),
+            }
+            for n, m in refined
+        },
+    }
+    rows.append(
+        f"cluster,_summary,best={best_name},"
+        f"beats_baseline={summary['predictive_beats_baseline_makespan']},"
+        f"baseline_makespan={baseline:.3f},"
+        f"best_makespan={predictive[best_name]['makespan_s']:.3f}"
+    )
+    return rows, summary

@@ -8,7 +8,6 @@ import glob
 import json
 import os
 
-from repro.core.costmodel import format_seconds
 
 
 def load_reports(dryrun_dir: str = "experiments/dryrun") -> list[dict]:

@@ -1,4 +1,4 @@
-"""Benchmark harness: one section per paper table/figure + roofline.
+"""Benchmark harness: one section per paper table/figure + beyond-paper.
 
 ``PYTHONPATH=src python -m benchmarks.run [--quick] [--tokens N]``
 
@@ -8,15 +8,29 @@ Sections (CSV rows on stdout):
   fig4    — Fig. 4: execution-time surface over (M, R) + observed optimum
   tuner   — beyond-paper: regression autotuner vs exhaustive search
   backends— beyond-paper: reduce-backend (jnp/pallas/xla) timing comparison
+  cluster — beyond-paper: predictive multi-job scheduling vs FIFO baseline
   roofline— §Roofline table from the dry-run artifacts
   kernels — per-kernel microbench (us/call, interpret mode)
+
+Every section also lands machine-readable artifacts in ``--outdir``
+(default ``experiments/bench/``): ``bench_<section>.csv`` with the
+section's rows and ``BENCH_<section>.json`` with summary stats (row count,
+wall time, status, and any section-provided summary dict) — the repo's
+perf trajectory, trackable PR-over-PR.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
+
+ALL_SECTIONS = (
+    "table1", "fig3", "fig4", "tuner", "backends", "cluster", "roofline",
+    "kernels",
+)
 
 
 def _kernel_micro() -> list[str]:
@@ -61,49 +75,91 @@ def _kernel_micro() -> list[str]:
     return rows
 
 
+def run_section(sec: str, tokens: int, repeats: int):
+    """Dispatch one section; returns (rows, summary_dict_or_None)."""
+    if sec == "table1":
+        from benchmarks import table1_prediction_error
+        return table1_prediction_error.main(tokens, repeats), None
+    if sec == "fig3":
+        from benchmarks import fig3_accuracy
+        return fig3_accuracy.main(tokens, max(2, repeats - 2)), None
+    if sec == "fig4":
+        from benchmarks import fig4_surface
+        return fig4_surface.main(tokens, max(2, repeats - 2)), None
+    if sec == "tuner":
+        from benchmarks import tuner_vs_exhaustive
+        return tuner_vs_exhaustive.main(tokens), None
+    if sec == "backends":
+        from benchmarks import backends_compare
+        return backends_compare.main(tokens, max(2, repeats - 2)), None
+    if sec == "cluster":
+        from benchmarks import cluster_bench
+        return cluster_bench.main(tokens, repeats)
+    if sec == "roofline":
+        from benchmarks import roofline
+        return roofline.main(), None
+    if sec == "kernels":
+        return _kernel_micro(), None
+    raise ValueError(f"unknown section {sec!r}; expected {ALL_SECTIONS}")
+
+
+def write_artifacts(
+    outdir: str, sec: str, rows: list[str], summary: dict
+) -> None:
+    os.makedirs(outdir, exist_ok=True)
+    with open(os.path.join(outdir, f"bench_{sec}.csv"), "w") as f:
+        f.write("\n".join(rows) + ("\n" if rows else ""))
+    path = os.path.join(outdir, f"BENCH_{sec}.json")
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(summary, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="smaller corpora / fewer repeats")
     ap.add_argument("--tokens", type=int, default=None)
     ap.add_argument("--sections", default="all",
-                    help="comma list: table1,fig3,fig4,tuner,backends,"
-                         "roofline,kernels")
+                    help="comma list: " + ",".join(ALL_SECTIONS))
+    ap.add_argument("--outdir", default="experiments/bench",
+                    help="where bench_<sec>.csv + BENCH_<sec>.json land "
+                         "(empty string disables)")
     args = ap.parse_args()
     tokens = args.tokens or (1 << 14 if args.quick else 1 << 16)
     repeats = 2 if args.quick else 5
     sections = (
-        ["table1", "fig3", "fig4", "tuner", "backends", "roofline", "kernels"]
-        if args.sections == "all" else args.sections.split(",")
+        list(ALL_SECTIONS) if args.sections == "all"
+        else args.sections.split(",")
     )
     rows: list[str] = []
     t_start = time.time()
     for sec in sections:
         t0 = time.time()
+        sec_rows: list[str] = []
+        summary: dict = {
+            "section": sec,
+            "quick": args.quick,
+            "tokens": tokens,
+            "status": "ok",
+        }
         try:
-            if sec == "table1":
-                from benchmarks import table1_prediction_error
-                rows += table1_prediction_error.main(tokens, repeats)
-            elif sec == "fig3":
-                from benchmarks import fig3_accuracy
-                rows += fig3_accuracy.main(tokens, max(2, repeats - 2))
-            elif sec == "fig4":
-                from benchmarks import fig4_surface
-                rows += fig4_surface.main(tokens, max(2, repeats - 2))
-            elif sec == "tuner":
-                from benchmarks import tuner_vs_exhaustive
-                rows += tuner_vs_exhaustive.main(tokens)
-            elif sec == "backends":
-                from benchmarks import backends_compare
-                rows += backends_compare.main(tokens, max(2, repeats - 2))
-            elif sec == "roofline":
-                from benchmarks import roofline
-                rows += roofline.main()
-            elif sec == "kernels":
-                rows += _kernel_micro()
-            rows.append(f"_timing,{sec},{time.time() - t0:.1f}s,")
+            sec_rows, sec_summary = run_section(sec, tokens, repeats)
+            if sec_summary:
+                summary["summary"] = sec_summary
         except Exception as e:  # noqa: BLE001
-            rows.append(f"_error,{sec},{type(e).__name__},{e}")
+            summary["status"] = "error"
+            summary["error"] = f"{type(e).__name__}: {e}"
+            sec_rows = sec_rows or []
+            sec_rows.append(f"_error,{sec},{type(e).__name__},{e}")
+        summary["n_rows"] = len(sec_rows)
+        summary["wall_seconds"] = round(time.time() - t0, 3)
+        rows += sec_rows
+        if summary["status"] == "ok":
+            rows.append(f"_timing,{sec},{summary['wall_seconds']:.1f}s,")
+        if args.outdir:
+            write_artifacts(args.outdir, sec, sec_rows, summary)
     rows.append(f"_timing,total,{time.time() - t_start:.1f}s,")
     print("\n".join(rows))
     if any(r.startswith("_error") for r in rows):

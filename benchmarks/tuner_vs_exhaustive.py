@@ -9,7 +9,6 @@ regret (% time lost relative to the true optimum).
 
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import make_app, JobRunner, DEFAULT_TOKENS
 from repro.core import grid, tune, validate

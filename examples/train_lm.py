@@ -17,7 +17,7 @@ import shutil
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import fit, prediction_error_stats
+from repro.core import fit
 from repro.data import DataConfig
 from repro.launch.train import TrainLoopConfig, run_training
 from repro.train import StepConfig

@@ -1,0 +1,74 @@
+"""Predictive cluster scheduling: the multi-job layer the paper motivates.
+
+The paper models (config → total execution time) so that a scheduler can
+make smarter decisions; this package is that scheduler.  Layering:
+
+    workload.py — deterministic heterogeneous job traces (arrival
+                  processes, log-uniform sizes, optional deadlines)
+    oracle.py   — "true" runtime sources: AnalyticOracle (closed-form,
+                  Hadoop-shaped, per-job deterministic noise) and
+                  EngineOracle (wall-clocks the live MapReduce engine)
+    cluster.py  — event-driven simulator: W shared workers, per-job
+                  grants, lifecycle accounting, invariant enforcement
+    policies.py — FIFO baseline + prediction-driven policies (SJF,
+                  deadline admission control) on a shared ModelDatabase,
+                  with a name registry
+    online.py   — continuous profiling: completed jobs refit the models
+
+Entry points: ``python -m repro.launch.cluster`` (CLI),
+``python -m benchmarks.run --sections cluster`` (policy comparison),
+``examples/cluster_sim.py`` (walkthrough).
+"""
+
+from repro.cluster.cluster import (
+    Cluster,
+    Dispatch,
+    JobRecord,
+    Plan,
+    Reject,
+    TraceResult,
+)
+from repro.cluster.online import OnlineRefiner
+from repro.cluster.oracle import AnalyticOracle, EngineOracle
+from repro.cluster.policies import (
+    POLICIES,
+    DeadlineAware,
+    PredictedSJF,
+    PredictiveFIFO,
+    PredictivePolicy,
+    SchedulingPolicy,
+    StaticFIFO,
+    get_policy,
+    register_policy,
+)
+from repro.cluster.workload import (
+    APPS,
+    JobSpec,
+    assign_deadlines,
+    generate_workload,
+)
+
+__all__ = [
+    "APPS",
+    "AnalyticOracle",
+    "Cluster",
+    "DeadlineAware",
+    "Dispatch",
+    "EngineOracle",
+    "JobRecord",
+    "JobSpec",
+    "OnlineRefiner",
+    "POLICIES",
+    "Plan",
+    "PredictedSJF",
+    "PredictiveFIFO",
+    "PredictivePolicy",
+    "Reject",
+    "SchedulingPolicy",
+    "StaticFIFO",
+    "TraceResult",
+    "assign_deadlines",
+    "generate_workload",
+    "get_policy",
+    "register_policy",
+]

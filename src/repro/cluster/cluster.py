@@ -1,0 +1,250 @@
+"""Job queue + cluster state: an event-driven multi-job simulator.
+
+``Cluster`` owns W worker slots shared across concurrent jobs.  Time
+advances event-to-event (job arrival / job completion); at every event the
+active :mod:`scheduling policy <repro.cluster.policies>` is offered the
+queue of arrived-but-undispatched jobs and the free-worker count, and
+answers with dispatch decisions (job + :class:`Plan`) or admission-control
+rejections until nothing more fits.  A dispatched job's *true* runtime
+comes from the :mod:`runtime oracle <repro.cluster.oracle>`; the policy's
+*predicted* runtime is recorded next to it, which is how every trace doubles
+as an accuracy experiment (paper Fig. 3, per job instead of per config).
+
+Invariants enforced here, not trusted to policies: a plan never exceeds
+free workers, every job ends exactly once, worker accounting conserves, and
+a policy that strands undispatchable jobs fails loudly instead of spinning.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+
+from repro.cluster.workload import JobSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """Dispatch decision for one job: execution config + worker grant."""
+
+    backend: str
+    mappers: int
+    reducers: int
+    workers: int                      # worker slots granted from the pool
+    predicted_time: float | None = None  # policy's prediction, if it made one
+
+    def __post_init__(self):
+        if self.mappers < 1 or self.reducers < 1 or self.workers < 1:
+            raise ValueError(f"bad plan {self}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Dispatch:
+    """Policy answer: run ``job`` now under ``plan``."""
+
+    job: JobSpec
+    plan: Plan
+
+
+@dataclasses.dataclass(frozen=True)
+class Reject:
+    """Policy answer: admission control refuses ``job`` (e.g. its deadline
+    is infeasible at every configuration)."""
+
+    job: JobSpec
+    reason: str
+
+
+@dataclasses.dataclass
+class JobRecord:
+    """Full lifecycle accounting for one job."""
+
+    spec: JobSpec
+    plan: Plan | None = None
+    admitted: bool = True
+    reject_reason: str | None = None
+    start: float | None = None
+    finish: float | None = None
+    true_time: float | None = None
+
+    @property
+    def completed(self) -> bool:
+        return self.finish is not None
+
+    @property
+    def wait(self) -> float | None:
+        return None if self.start is None else self.start - self.spec.arrival
+
+    @property
+    def turnaround(self) -> float | None:
+        return None if self.finish is None else self.finish - self.spec.arrival
+
+    @property
+    def met_deadline(self) -> bool | None:
+        """True/False for deadline jobs (rejected/unfinished = missed);
+        None when the job has no deadline."""
+        if self.spec.deadline is None:
+            return None
+        return self.completed and self.finish <= self.spec.deadline
+
+    @property
+    def prediction_error_pct(self) -> float | None:
+        """|predicted - true| / true in percent (paper's error metric)."""
+        if (
+            self.plan is None
+            or self.plan.predicted_time is None
+            or self.true_time is None
+        ):
+            return None
+        return abs(self.plan.predicted_time - self.true_time) / max(
+            self.true_time, 1e-12
+        ) * 100.0
+
+
+@dataclasses.dataclass
+class TraceResult:
+    """One policy's run over one trace, plus derived summary metrics."""
+
+    policy: str
+    total_workers: int
+    records: list[JobRecord]          # arrival order
+
+    def completed(self) -> list[JobRecord]:
+        return [r for r in self.records if r.completed]
+
+    def rejected(self) -> list[JobRecord]:
+        return [r for r in self.records if not r.admitted]
+
+    def prediction_errors(self) -> list[float]:
+        """Per-job |pred-true|/true %, in completion order — the in-trace
+        error trajectory the online-refinement loop is judged on."""
+        done = sorted(self.completed(), key=lambda r: r.finish)
+        return [
+            e for r in done if (e := r.prediction_error_pct) is not None
+        ]
+
+    def metrics(self) -> dict:
+        done = self.completed()
+        if not done:
+            raise RuntimeError(f"policy {self.policy!r} completed no jobs")
+        t0 = min(r.spec.arrival for r in self.records)
+        t_end = max(r.finish for r in done)
+        makespan = t_end - t0
+        busy_area = sum(r.true_time * r.plan.workers for r in done)
+        deadline_jobs = [
+            r for r in self.records if r.spec.deadline is not None
+        ]
+        errs = self.prediction_errors()
+        half = len(errs) // 2
+        mean = lambda xs: sum(xs) / len(xs) if xs else None  # noqa: E731
+        return {
+            "policy": self.policy,
+            "n_jobs": len(self.records),
+            "n_completed": len(done),
+            "n_rejected": len(self.rejected()),
+            "makespan_s": makespan,
+            "mean_wait_s": mean([r.wait for r in done]),
+            "mean_turnaround_s": mean([r.turnaround for r in done]),
+            "utilization": busy_area / (self.total_workers * makespan),
+            "slo_attainment": (
+                mean([1.0 if r.met_deadline else 0.0 for r in deadline_jobs])
+                if deadline_jobs else None
+            ),
+            "n_deadline_jobs": len(deadline_jobs),
+            "pred_mae_pct": mean(errs),
+            "pred_mae_pct_first_half": mean(errs[:half]),
+            "pred_mae_pct_second_half": mean(errs[half:]),
+        }
+
+
+class Cluster:
+    """W worker slots + a runtime oracle; runs (trace, policy) -> result."""
+
+    def __init__(self, total_workers: int, oracle):
+        if total_workers < 1:
+            raise ValueError("total_workers must be >= 1")
+        self.total_workers = int(total_workers)
+        self.oracle = oracle
+
+    def run(self, jobs: list[JobSpec], policy) -> TraceResult:
+        jobs = sorted(jobs, key=lambda j: (j.arrival, j.job_id))
+        if len({j.job_id for j in jobs}) != len(jobs):
+            raise ValueError("duplicate job_id in trace")
+        records = {j.job_id: JobRecord(spec=j) for j in jobs}
+        policy.prepare(self, sorted({j.app for j in jobs}))
+
+        pending: list[JobSpec] = []   # arrived, not yet dispatched (FIFO order)
+        running: list[tuple[float, int, int]] = []  # (finish, seq, job_id)
+        free = self.total_workers
+        i = 0       # next arrival index
+        seq = 0     # heap tiebreak
+        now = jobs[0].arrival if jobs else 0.0
+
+        while i < len(jobs) or pending or running:
+            next_arrival = jobs[i].arrival if i < len(jobs) else math.inf
+            next_finish = running[0][0] if running else math.inf
+            if pending and not running and next_arrival == math.inf:
+                # Nothing can ever free workers or arrive: the policy has
+                # stranded jobs it will never dispatch.
+                stuck = [j.job_id for j in pending]
+                raise RuntimeError(
+                    f"policy {policy.name!r} stranded jobs {stuck}: no "
+                    f"dispatch at free={free}/{self.total_workers} workers"
+                )
+            now = min(next_arrival, next_finish)
+
+            while i < len(jobs) and jobs[i].arrival <= now:
+                pending.append(jobs[i])
+                i += 1
+            while running and running[0][0] <= now:
+                _, _, done_id = heapq.heappop(running)
+                rec = records[done_id]
+                rec.finish = rec.start + rec.true_time
+                free += rec.plan.workers
+                policy.observe(rec)
+
+            while pending:
+                decision = policy.select(tuple(pending), free, now)
+                if decision is None:
+                    break
+                if isinstance(decision, Reject):
+                    rec = records[decision.job.job_id]
+                    rec.admitted = False
+                    rec.reject_reason = decision.reason
+                    pending.remove(decision.job)
+                    continue
+                if not isinstance(decision, Dispatch):
+                    raise TypeError(
+                        f"policy returned {type(decision).__name__}; "
+                        "expected Dispatch, Reject, or None"
+                    )
+                job, plan = decision.job, decision.plan
+                if job not in pending:
+                    raise ValueError(
+                        f"policy dispatched job {job.job_id} not in queue"
+                    )
+                if plan.workers > free:
+                    raise ValueError(
+                        f"plan for job {job.job_id} wants {plan.workers} "
+                        f"workers but only {free} are free"
+                    )
+                pending.remove(job)
+                rec = records[job.job_id]
+                rec.plan = plan
+                rec.start = now
+                rec.true_time = self.oracle.time(
+                    job.app, plan.backend, job.size,
+                    plan.mappers, plan.reducers, plan.workers,
+                    job_id=job.job_id,
+                )
+                free -= plan.workers
+                seq += 1
+                heapq.heappush(running, (now + rec.true_time, seq, job.job_id))
+
+        assert free == self.total_workers, "worker accounting leaked"
+        return TraceResult(
+            policy=policy.name,
+            total_workers=self.total_workers,
+            records=[records[j.job_id] for j in jobs],
+        )

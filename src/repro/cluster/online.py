@@ -1,0 +1,123 @@
+"""Online model refinement: the paper's profiling phase made continuous.
+
+The paper profiles, fits, predicts — once.  A running cluster gets a free
+profiling experiment with *every completed job*: the (config, observed
+runtime) pair is exactly one row of the paper's experiment set.
+``OnlineRefiner`` accumulates those rows per (application, backend), refits
+the regression incrementally, and republishes the model into the shared
+:class:`~repro.core.predictor.ModelDatabase` — so the very next scheduling
+decision uses a model trained on everything the cluster has seen so far,
+and prediction error shrinks over the trace (measured by
+``TraceResult.metrics()['pred_mae_pct_first_half' / '_second_half']``).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import regression
+from repro.core.features import fit_feature_spec
+from repro.core.predictor import ModelDatabase
+
+#: fit options shared with ``core.tuner.tune`` defaults: the refiner must be
+#: robust unattended, so scaling + tiny ridge + cross terms are on.
+DEFAULT_FIT_KWARGS = dict(degree=3, scale=True, lam=1e-6, cross_terms=True)
+
+
+class OnlineRefiner:
+    """Accumulate per-(app, backend) observations; refit into the shared db.
+
+    ``seed_profiles`` installs the bootstrap profiling set (the offline
+    phase); ``observe`` appends one completed job and refits every
+    ``refit_every`` observations once the running total can determine the
+    feature count.  ``max_points`` optionally keeps only the most recent
+    window (bootstrap rows are never evicted — they anchor the fit in
+    regions the live workload hasn't visited yet).
+    """
+
+    def __init__(
+        self,
+        db: ModelDatabase,
+        platform: str,
+        *,
+        refit_every: int = 1,
+        max_points: int | None = None,
+        fit_kwargs: dict | None = None,
+    ):
+        if refit_every < 1:
+            raise ValueError("refit_every must be >= 1")
+        self.db = db
+        self.platform = platform
+        self.refit_every = refit_every
+        self.max_points = max_points
+        self.fit_kwargs = dict(fit_kwargs or DEFAULT_FIT_KWARGS)
+        # (app, backend) -> [bootstrap rows (np.ndarray), ...], observations
+        self._seed: dict[tuple[str, str], tuple[np.ndarray, np.ndarray]] = {}
+        self._obs: dict[tuple[str, str], list[tuple[np.ndarray, float]]] = {}
+        self._since_refit: dict[tuple[str, str], int] = {}
+        self.n_refits = 0
+
+    def seed_profiles(
+        self, app: str, backend: str, params: np.ndarray, times: np.ndarray
+    ) -> None:
+        self._seed[(app, backend)] = (
+            np.asarray(params, dtype=np.float64),
+            np.asarray(times, dtype=np.float64),
+        )
+        self._obs.setdefault((app, backend), [])
+
+    def training_set(
+        self, app: str, backend: str
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Bootstrap profiles + live observations, as fit-ready arrays."""
+        key = (app, backend)
+        obs = self._obs.get(key, [])
+        if self.max_points is not None:
+            obs = obs[-self.max_points:]
+        rows = [row for row, _ in obs]
+        times = [t for _, t in obs]
+        if key in self._seed:
+            seed_p, seed_t = self._seed[key]
+            rows = list(seed_p) + rows
+            times = list(seed_t) + times
+        return np.asarray(rows, dtype=np.float64), np.asarray(
+            times, dtype=np.float64
+        )
+
+    def n_observations(self, app: str, backend: str) -> int:
+        return len(self._obs.get((app, backend), []))
+
+    def observe(
+        self, app: str, backend: str, params_row, observed_time: float
+    ) -> bool:
+        """Record one completed job; refit + republish when due.
+
+        Returns True when the database model was actually updated, so the
+        caller (a scheduling policy) can invalidate cached predictions.
+        """
+        key = (app, backend)
+        self._obs.setdefault(key, []).append(
+            (np.asarray(params_row, dtype=np.float64), float(observed_time))
+        )
+        self._since_refit[key] = self._since_refit.get(key, 0) + 1
+        if self._since_refit[key] < self.refit_every:
+            return False
+        params, times = self.training_set(app, backend)
+        spec_probe = fit_feature_spec(
+            params,
+            degree=self.fit_kwargs.get("degree", 3),
+            cross_terms=self.fit_kwargs.get("cross_terms", False),
+        )
+        # Without bootstrap rows to anchor the fit (warm-started from a
+        # saved ModelDatabase), live observations cluster at the few
+        # argmin-chosen configs and can leave the design matrix badly
+        # rank-deficient even once it is square — demand a 2x margin
+        # before replacing a loaded model.
+        min_rows = spec_probe.n_features * (1 if key in self._seed else 2)
+        if params.shape[0] < min_rows:
+            return False  # still underdetermined; keep the current model
+        model = regression.fit(params, times, **self.fit_kwargs)
+        self.db.put(app, self.platform, model, backend=backend)
+        self._since_refit[key] = 0
+        self.n_refits += 1
+        return True

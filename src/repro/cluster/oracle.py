@@ -1,0 +1,191 @@
+"""Runtime oracles: the "true" job execution time the scheduler observes.
+
+The paper's loop is profile → model → predict against a *real* cluster.  In
+this repo the real thing is the TPU-native MapReduce engine, but an
+event-driven scheduling study needs thousands of job executions per trace,
+so two interchangeable time sources implement one interface
+(``time(app, backend, size, mappers, reducers, workers, job_id)``):
+
+* :class:`AnalyticOracle` — a Hadoop-shaped closed-form cost with wave
+  quantization, per-task startup, shuffle imbalance, and backend
+  throughput/launch-overhead tradeoffs, plus deterministic-per-job
+  multiplicative noise.  Interior optima in both M and R (more tasks
+  amortize the spill sort but pay more startup — the paper's observed
+  non-monotonicity) make configuration choice genuinely matter.
+* :class:`EngineOracle` — wall-clocks :func:`repro.mapreduce.build_job` on
+  the live engine (compile-cached, one warmup), for small demo traces where
+  the simulated cluster IS the real engine.
+
+Policies never see oracle internals: they only get profiled samples and
+completed-job observations, exactly the paper's black-box treatment.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+#: stable small ints for seeding noise streams (strings don't hash stably).
+_APP_IDS = {"wordcount": 1, "eximparse": 2}
+_BACKEND_IDS = {"jnp": 1, "pallas": 2, "xla": 3}
+
+
+class AnalyticOracle:
+    """Closed-form Hadoop-shaped job time; deterministic per (job, config).
+
+    Terms (seconds; ``n`` = input tokens, ``S = n/M`` split size):
+
+    * map:     ``ceil(M/W) * (setup_b + c_map_app*S + c_sort*S*log2(S))``
+    * shuffle: ``c_shuf * n * (1 + 0.5/sqrt(R) + c_part*R)``
+    * reduce:  ``ceil(R/W) * (setup_b + c_red * thr_b * n/R)``
+
+    Backend ``b`` trades fixed launch overhead against throughput (pallas:
+    high setup, best throughput — wins big jobs; jnp: the reverse), so the
+    optimal (backend, M, R) shifts with job size, which is what gives a
+    prediction-driven policy something to exploit.
+    """
+
+    platform = "sim-analytic-v1"
+
+    #: per-token map cost by application (eximparse parses records: pricier).
+    MAP_COST = {"wordcount": 8.0e-6, "eximparse": 1.2e-5}
+    #: backend -> (per-wave launch overhead s, reduce throughput multiplier)
+    BACKENDS = {"jnp": (0.05, 1.0), "xla": (0.065, 0.72), "pallas": (0.13, 0.5)}
+    C_SORT = 4.0e-7     # map-side spill sort, per token per log2(split)
+    C_SHUF = 2.0e-6     # shuffle bytes moved, per token
+    C_PART = 0.004      # per-reducer partition/merge overhead
+    C_RED = 6.0e-6      # reduce aggregation, per token
+
+    def __init__(self, *, noise: float = 0.02, seed: int = 0):
+        self.noise = float(noise)
+        self.seed = int(seed)
+
+    def backends(self) -> tuple[str, ...]:
+        return tuple(self.BACKENDS)
+
+    def time(
+        self,
+        app: str,
+        backend: str,
+        size: int,
+        mappers: int,
+        reducers: int,
+        workers: int,
+        job_id: int = 0,
+        _noiseless: bool = False,
+    ) -> float:
+        if app not in _APP_IDS:
+            raise ValueError(f"unknown app {app!r}")
+        if backend not in self.BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}")
+        M, R, W = int(mappers), int(reducers), int(workers)
+        if M < 1 or R < 1 or W < 1:
+            raise ValueError(f"bad config M={M} R={R} W={W}")
+        n = float(size)
+        setup, thr = self.BACKENDS[backend]
+        S = n / M
+        map_waves = math.ceil(M / W)
+        red_waves = math.ceil(R / W)
+        t_map = map_waves * (
+            setup
+            + self.MAP_COST[app] * S
+            + self.C_SORT * S * math.log2(max(S, 2.0))
+        )
+        t_shuffle = self.C_SHUF * n * (1.0 + 0.5 / math.sqrt(R) + self.C_PART * R)
+        t_reduce = red_waves * (setup + self.C_RED * thr * n / R)
+        t = t_map + t_shuffle + t_reduce
+        if self.noise > 0.0 and not _noiseless:
+            ss = np.random.SeedSequence(
+                [self.seed, int(job_id), M, R, W,
+                 _APP_IDS[app], _BACKEND_IDS[backend]]
+            )
+            rng = np.random.default_rng(ss)
+            t *= float(np.exp(rng.normal(0.0, self.noise)))
+        return t
+
+    def nominal_time(self, app: str, size: int) -> float:
+        """Noise-free time at a nominal mid-range config — the service-time
+        estimate :func:`repro.cluster.workload.assign_deadlines` needs."""
+        return self.time(app, "jnp", size, 16, 16, 4, _noiseless=True)
+
+
+class EngineOracle:
+    """Wall-clock the real MapReduce engine (compile-cached, one warmup).
+
+    Every distinct (app, size, backend, M, R, W) costs a compile, so this is
+    for small demonstration traces (see ``examples/cluster_sim.py --real``),
+    not 50-job benchmark sweeps.  Sizes are snapped to multiples of 1024 to
+    bound the compile-cache cardinality.
+    """
+
+    platform = "engine-wallclock"
+
+    def __init__(self, *, warmup: int = 1, size_quantum: int = 1024):
+        self.warmup = warmup
+        self.size_quantum = size_quantum
+        self._corpora: dict = {}
+        self._jobs: dict = {}
+
+    def backends(self) -> tuple[str, ...]:
+        return ("jnp", "xla")
+
+    def _corpus(self, app: str, size: int):
+        key = (app, size)
+        if key not in self._corpora:
+            from repro.mapreduce import exim_mainlog, eximparse, wordcount, \
+                wordcount_corpus
+
+            if app == "wordcount":
+                self._corpora[key] = (
+                    wordcount(4096), wordcount_corpus(size, vocab_size=4096)
+                )
+            elif app == "eximparse":
+                self._corpora[key] = (
+                    eximparse(1024), exim_mainlog(size, n_transactions=1024)
+                )
+            else:
+                raise ValueError(f"unknown app {app!r}")
+        return self._corpora[key]
+
+    def time(
+        self,
+        app: str,
+        backend: str,
+        size: int,
+        mappers: int,
+        reducers: int,
+        workers: int,
+        job_id: int = 0,
+    ) -> float:
+        import time as _time
+
+        import jax
+
+        from repro.mapreduce import JobConfig, build_job
+
+        size = max(self.size_quantum,
+                   (int(size) // self.size_quantum) * self.size_quantum)
+        key = (app, size, backend, int(mappers), int(reducers), int(workers))
+        if key not in self._jobs:
+            mr_app, corpus = self._corpus(app, size)
+            job = build_job(
+                mr_app,
+                JobConfig(
+                    num_mappers=int(mappers),
+                    num_reducers=int(reducers),
+                    num_workers=int(workers),
+                    reduce_backend=backend,
+                ),
+                len(corpus),
+            )
+            for _ in range(self.warmup):
+                jax.block_until_ready(job(corpus))
+            self._jobs[key] = (job, corpus)
+        job, corpus = self._jobs[key]
+        t0 = _time.perf_counter()
+        jax.block_until_ready(job(corpus))
+        return _time.perf_counter() - t0
+
+    def nominal_time(self, app: str, size: int) -> float:
+        return self.time(app, "jnp", size, 8, 8, 4)

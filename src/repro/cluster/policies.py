@@ -1,0 +1,422 @@
+"""Scheduling policies: where a prediction becomes a decision.
+
+Every policy answers one question at every scheduling event: *given the
+queue of arrived jobs and the free workers, what runs next and under which
+configuration?*  The baseline answers it the way the paper's motivation
+section says real clusters do — first-come-first-served with a static
+config.  The prediction-driven policies close the paper's loop instead:
+
+* bootstrap: :func:`repro.core.tuner.tune_categorical` profiles the runtime
+  oracle per (application, backend) over a (M, R, W-share, size) space and
+  publishes the per-backend fitted models into a shared
+  :class:`~repro.core.predictor.ModelDatabase` (paper Fig. 2a+2b, one slot
+  per category);
+* per job: the stored models are evaluated over the configuration grid at
+  the job's size and the joint (backend, M, R, W) argmin becomes the
+  dispatch :class:`~repro.cluster.cluster.Plan`, with its predicted time
+  attached — prediction before dispatch, the paper's "smarter scheduler";
+* online: every completion flows through
+  :class:`~repro.cluster.online.OnlineRefiner`, so the models sharpen as
+  the cluster runs.
+
+Policies register by name (same idiom as the MapReduce backend
+registries): ``@register_policy`` + ``get_policy(name, **kwargs)``.
+"""
+
+from __future__ import annotations
+
+import itertools
+
+import numpy as np
+
+from repro.cluster.cluster import Dispatch, Plan, Reject
+from repro.cluster.online import DEFAULT_FIT_KWARGS, OnlineRefiner
+from repro.cluster.workload import JobSpec
+from repro.core.predictor import ModelDatabase
+from repro.core.regression import RegressionModel
+from repro.core.tuner import tune_categorical
+
+#: size feature is in kilotokens: same order of magnitude as M/R/W, which
+#: keeps the scaled polynomial basis well-conditioned.
+SIZE_UNIT = 1024.0
+
+
+def _np_design(spec, rows: np.ndarray) -> np.ndarray:
+    """Numpy twin of ``features.design_matrix`` for hot scheduler loops.
+
+    The jnp version pays device-dispatch latency per call; the scheduler
+    evaluates tiny (≤ a few hundred rows) grids thousands of times per
+    trace, where numpy is orders of magnitude faster.  Kept in lockstep
+    with ``FeatureSpec`` by ``tests/test_cluster.py``.
+    """
+    p = np.asarray(rows, dtype=np.float64)
+    if p.ndim == 1:
+        p = p[None, :]
+    if spec.scale:
+        lo = np.asarray(spec.lo)
+        hi = np.asarray(spec.hi)
+        p = (p - lo) / (hi - lo)
+    cols = [np.ones((p.shape[0], 1))]
+    for i in range(spec.n_params):
+        pi = p[:, i:i + 1]
+        acc = pi
+        for _ in range(spec.degree):
+            cols.append(acc)
+            acc = acc * pi
+    if spec.cross_terms:
+        for i in range(spec.n_params):
+            for j in range(i + 1, spec.n_params):
+                cols.append(p[:, i:i + 1] * p[:, j:j + 1])
+    return np.concatenate(cols, axis=1)
+
+
+def _np_predict(model: RegressionModel, rows: np.ndarray) -> np.ndarray:
+    return _np_design(model.spec, rows) @ np.asarray(
+        model.coef, dtype=np.float64
+    )
+
+
+class SchedulingPolicy:
+    """Interface the :class:`~repro.cluster.cluster.Cluster` drives."""
+
+    name: str = "abstract"
+
+    def prepare(self, cluster, apps: list[str]) -> None:
+        """Called once before the trace with the cluster and its app set."""
+
+    def select(self, queue: tuple[JobSpec, ...], free_workers: int, now: float):
+        """Return Dispatch/Reject/None for the current queue state."""
+        raise NotImplementedError
+
+    def observe(self, record) -> None:
+        """Called on every job completion (online-refinement hook)."""
+
+
+POLICIES: dict[str, type[SchedulingPolicy]] = {}
+
+
+def register_policy(cls: type[SchedulingPolicy]) -> type[SchedulingPolicy]:
+    if not cls.name or cls.name == "abstract":
+        raise ValueError(f"policy {cls.__name__} needs a concrete name")
+    POLICIES[cls.name] = cls
+    return cls
+
+
+def get_policy(name: str, **kwargs) -> SchedulingPolicy:
+    if name not in POLICIES:
+        raise KeyError(
+            f"unknown policy {name!r}; registered: {sorted(POLICIES)}"
+        )
+    return POLICIES[name](**kwargs)
+
+
+@register_policy
+class StaticFIFO(SchedulingPolicy):
+    """Baseline: first-come-first-served, one static config for every job.
+
+    The static (M, R) defaults sit mid-range of the paper's [5, 40] sweep —
+    a "reasonable operator default", which is precisely what the paper
+    argues against.  Head-of-line blocking included, as in a plain FIFO
+    submit queue."""
+
+    name = "fifo-static"
+
+    def __init__(self, *, mappers: int = 20, reducers: int = 20,
+                 workers: int = 4, backend: str = "jnp"):
+        self._plan = Plan(
+            backend=backend, mappers=mappers, reducers=reducers,
+            workers=workers,
+        )
+
+    def prepare(self, cluster, apps):
+        if self._plan.workers > cluster.total_workers:
+            raise ValueError(
+                f"static worker grant {self._plan.workers} exceeds cluster "
+                f"size {cluster.total_workers}"
+            )
+
+    def select(self, queue, free_workers, now):
+        if self._plan.workers > free_workers:
+            return None  # head-of-line blocking: FIFO never reorders
+        return Dispatch(queue[0], self._plan)
+
+
+class PredictivePolicy(SchedulingPolicy):
+    """Shared machinery for prediction-driven policies.
+
+    Owns the ModelDatabase, the bootstrap profiling pass (via
+    ``tune_categorical``), per-job plan selection from the stored models,
+    and the online-refinement hookup.  Subclasses only choose *which* job
+    goes next.
+    """
+
+    def __init__(
+        self,
+        *,
+        db: ModelDatabase | None = None,
+        backends: tuple[str, ...] | None = None,
+        mapper_grid: tuple[int, ...] = (4, 8, 16, 24, 32),
+        reducer_grid: tuple[int, ...] = (4, 8, 16, 24, 32),
+        worker_grid: tuple[int, ...] = (2, 4, 8),
+        bootstrap_sizes: tuple[int, ...] = (1 << 14, 1 << 16, 1 << 18),
+        n_bootstrap: int | None = None,
+        bootstrap_repeats: int = 1,
+        online: bool = True,
+        refit_every: int = 1,
+        seed: int = 0,
+        fit_kwargs: dict | None = None,
+    ):
+        self.db = db if db is not None else ModelDatabase()
+        self._backends_arg = backends
+        self.mapper_grid = tuple(mapper_grid)
+        self.reducer_grid = tuple(reducer_grid)
+        self.worker_grid = tuple(sorted(worker_grid))
+        self.bootstrap_sizes = tuple(bootstrap_sizes)
+        self.n_bootstrap = n_bootstrap
+        self.bootstrap_repeats = bootstrap_repeats
+        self.online = online
+        self.refit_every = refit_every
+        self.seed = seed
+        self.fit_kwargs = dict(fit_kwargs or DEFAULT_FIT_KWARGS)
+        self.refiner: OnlineRefiner | None = None
+        self._model_version = 0
+        self._plan_cache: dict = {}
+
+    # ---- bootstrap profiling (paper Fig. 2a + 2b) -----------------------
+
+    def prepare(self, cluster, apps):
+        self.cluster = cluster
+        oracle = cluster.oracle
+        self.platform = oracle.platform
+        self.backends = tuple(self._backends_arg or oracle.backends())
+        self.worker_grid = tuple(
+            w for w in self.worker_grid if w <= cluster.total_workers
+        ) or (cluster.total_workers,)
+        self.refiner = OnlineRefiner(
+            self.db, self.platform,
+            refit_every=self.refit_every, fit_kwargs=self.fit_kwargs,
+        )
+        space = np.asarray(
+            [
+                (m, r, w, s / SIZE_UNIT)
+                for m, r, w, s in itertools.product(
+                    self.mapper_grid, self.reducer_grid, self.worker_grid,
+                    self.bootstrap_sizes,
+                )
+            ],
+            dtype=np.float64,
+        )
+        profile_seq = itertools.count()  # distinct noise draw per profile run
+        for app in apps:
+            if all(
+                (app, self.platform, b) in self.db for b in self.backends
+            ):
+                continue  # warm start: models reloaded from disk
+
+            def make_run_fn(app_name, backend_name):
+                def run(row):
+                    return oracle.time(
+                        app_name, backend_name, int(row[3] * SIZE_UNIT),
+                        int(row[0]), int(row[1]), int(row[2]),
+                        job_id=1_000_000 + next(profile_seq),
+                    )
+                return run
+
+            result = tune_categorical(
+                {b: make_run_fn(app, b) for b in self.backends},
+                space,
+                n_samples=self.n_bootstrap,
+                repeats=self.bootstrap_repeats,
+                seed=self.seed,
+                **self.fit_kwargs,
+            )
+            for backend, tr in result.per_category.items():
+                self.db.put(app, self.platform, tr.model, backend=backend)
+                self.refiner.seed_profiles(
+                    app, backend, tr.sampled_configs, tr.sampled_times
+                )
+
+    # ---- per-job planning (paper Fig. 2b: predict before dispatch) ------
+
+    def _w_bucket(self, free_workers: int) -> int | None:
+        """Largest grant in the worker grid that fits the free pool."""
+        fitting = [w for w in self.worker_grid if w <= free_workers]
+        return max(fitting) if fitting else None
+
+    def best_plan(self, job: JobSpec, free_workers: int) -> Plan | None:
+        """Joint (backend, M, R, W) argmin of predicted time at this job's
+        size, over grants that fit ``free_workers``.  None = nothing fits."""
+        bucket = self._w_bucket(free_workers)
+        if bucket is None:
+            return None
+        key = (job.job_id, bucket, self._model_version)
+        if key not in self._plan_cache:
+            self._plan_cache[key] = self._argmin_plan(
+                job, [w for w in self.worker_grid if w <= bucket]
+            )
+        return self._plan_cache[key]
+
+    def _candidate_rows(self, job: JobSpec, w_options) -> np.ndarray:
+        return np.asarray(
+            [
+                (m, r, w, job.size / SIZE_UNIT)
+                for m, r, w in itertools.product(
+                    self.mapper_grid, self.reducer_grid, w_options
+                )
+            ],
+            dtype=np.float64,
+        )
+
+    def _predict_grid(
+        self, job: JobSpec, w_options
+    ) -> tuple[np.ndarray, dict[str, np.ndarray]]:
+        rows = self._candidate_rows(job, w_options)
+        preds = {}
+        for backend in self.backends:
+            model = self.db.get(job.app, self.platform, backend=backend)
+            # A polynomial happily predicts <= 0 outside its training mass;
+            # floor it so rankings and deadline math stay sane.
+            preds[backend] = np.maximum(_np_predict(model, rows), 1e-3)
+        return rows, preds
+
+    def _argmin_plan(self, job: JobSpec, w_options) -> Plan:
+        rows, preds = self._predict_grid(job, w_options)
+        best = None
+        for backend, pred in preds.items():
+            i = int(np.argmin(pred))
+            if best is None or pred[i] < best[0]:
+                best = (float(pred[i]), backend, rows[i])
+        t, backend, row = best
+        return Plan(
+            backend=backend, mappers=int(row[0]), reducers=int(row[1]),
+            workers=int(row[2]), predicted_time=t,
+        )
+
+    # ---- online refinement ----------------------------------------------
+
+    def observe(self, record):
+        if not self.online or record.plan is None:
+            return
+        plan, spec = record.plan, record.spec
+        row = (plan.mappers, plan.reducers, plan.workers,
+               spec.size / SIZE_UNIT)
+        refitted = self.refiner.observe(
+            spec.app, plan.backend, row, record.true_time
+        )
+        if refitted:
+            self._model_version += 1
+            self._plan_cache.clear()
+
+
+@register_policy
+class PredictiveFIFO(PredictivePolicy):
+    """FIFO order, but each job runs at its model-chosen configuration.
+
+    Isolates the value of per-job configuration tuning from the value of
+    reordering (compare against ``predict-sjf`` on the same trace)."""
+
+    name = "predict-fifo"
+
+    def select(self, queue, free_workers, now):
+        plan = self.best_plan(queue[0], free_workers)
+        if plan is None:
+            return None
+        return Dispatch(queue[0], plan)
+
+
+@register_policy
+class PredictedSJF(PredictivePolicy):
+    """Shortest-predicted-job-first with backfilling.
+
+    Among queued jobs whose best plan fits the free pool, dispatch the one
+    with the smallest predicted completion time — the classic SJF
+    wait-time win, made possible *only* by the config→time model (true
+    service times are unknown before execution)."""
+
+    name = "predict-sjf"
+
+    def select(self, queue, free_workers, now):
+        best = None
+        for job in queue:
+            plan = self.best_plan(job, free_workers)
+            if plan is None:
+                continue
+            if best is None or plan.predicted_time < best[1].predicted_time:
+                best = (job, plan)
+        return Dispatch(*best) if best else None
+
+
+@register_policy
+class DeadlineAware(PredictivePolicy):
+    """Earliest-deadline-first + model-based admission control.
+
+    A job whose deadline cannot be met even at the fastest predicted
+    configuration (max worker grant, best backend) is rejected up front —
+    capacity is never burned on a lost cause.  Feasible deadline jobs are
+    served EDF with the *cheapest* grant that still meets the deadline
+    (predicted), leaving workers for the rest; best-effort jobs (no
+    deadline) backfill last at their fastest plan."""
+
+    name = "predict-deadline"
+
+    def __init__(self, *, slo_margin: float = 0.0, **kwargs):
+        super().__init__(**kwargs)
+        self.slo_margin = slo_margin  # fractional safety margin on deadlines
+
+    def _deadline_budget(self, job: JobSpec, now: float) -> float:
+        return (job.deadline - now) / (1.0 + self.slo_margin)
+
+    def _cheapest_feasible(
+        self, job: JobSpec, free_workers: int, budget: float
+    ) -> Plan | None:
+        """Min-grant (then min-time) plan predicted to finish in budget."""
+        w_options = [w for w in self.worker_grid if w <= free_workers]
+        if not w_options:
+            return None
+        rows, preds = self._predict_grid(job, w_options)
+        best = None
+        for backend, pred in preds.items():
+            ok = np.nonzero(pred <= budget)[0]
+            for i in ok:
+                cand = (int(rows[i][2]), float(pred[i]), backend, rows[i])
+                if best is None or cand[:2] < best[:2]:
+                    best = cand
+        if best is None:
+            return None
+        _, t, backend, row = best
+        return Plan(
+            backend=backend, mappers=int(row[0]), reducers=int(row[1]),
+            workers=int(row[2]), predicted_time=t,
+        )
+
+    def select(self, queue, free_workers, now):
+        order = sorted(
+            queue,
+            key=lambda j: (
+                j.deadline if j.deadline is not None else float("inf"),
+                j.arrival, j.job_id,
+            ),
+        )
+        for job in order:
+            if job.deadline is None:
+                plan = self.best_plan(job, free_workers)
+                if plan is not None:
+                    return Dispatch(job, plan)
+                continue
+            budget = self._deadline_budget(job, now)
+            fastest = self.best_plan(job, self.cluster.total_workers)
+            if fastest is None or fastest.predicted_time > budget:
+                return Reject(
+                    job,
+                    f"infeasible: fastest predicted "
+                    f"{fastest.predicted_time if fastest else float('inf'):.3f}s"
+                    f" > budget {budget:.3f}s",
+                )
+            plan = self._cheapest_feasible(job, free_workers, budget)
+            if plan is not None:
+                return Dispatch(job, plan)
+            # Feasible with a bigger grant than is currently free: hold the
+            # workers we have (EDF reservation) rather than backfilling
+            # past an urgent job.
+            return None
+        return None

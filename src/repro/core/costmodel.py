@@ -25,7 +25,6 @@ import dataclasses
 import math
 import re
 
-import numpy as np
 
 # TPU v5e hardware constants (per brief).
 PEAK_FLOPS_BF16 = 197e12       # FLOP/s per chip

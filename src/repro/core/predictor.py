@@ -5,6 +5,14 @@ a model is only ever used for the *same application on the same platform*
 (its stated validity boundary).  ``ModelDatabase`` enforces that key structure
 and persists to JSON so a long-lived scheduler can reload models across
 restarts — the paper's motivating use case (smarter job scheduling).
+
+Beyond the paper's two-part key, the database also carries an optional
+``backend`` component: the MapReduce engine's execution backend is a
+categorical knob (see ``core.tuner.tune_categorical``), and the paper's
+pattern of "one model per category" needs one store slot per
+(application, platform, backend).  ``backend=""`` (the default) is the
+paper-faithful two-part key, so existing call sites are unchanged; JSON
+files written before this extension load transparently.
 """
 
 from __future__ import annotations
@@ -17,52 +25,80 @@ import numpy as np
 
 from repro.core.regression import RegressionModel
 
+_SEP = "\x00"
+
 
 class ModelDatabase:
-    """Per-(application, platform) store of fitted RegressionModels."""
+    """Per-(application, platform[, backend]) store of RegressionModels."""
 
     def __init__(self) -> None:
-        self._models: dict[tuple[str, str], RegressionModel] = {}
+        self._models: dict[tuple[str, str, str], RegressionModel] = {}
 
     @staticmethod
-    def _key(application: str, platform: str) -> tuple[str, str]:
-        return (application, platform)
+    def _key(
+        application: str, platform: str, backend: str = ""
+    ) -> tuple[str, str, str]:
+        return (application, platform, backend)
 
-    def put(self, application: str, platform: str, model: RegressionModel):
-        self._models[self._key(application, platform)] = model
+    def put(
+        self,
+        application: str,
+        platform: str,
+        model: RegressionModel,
+        backend: str = "",
+    ) -> None:
+        self._models[self._key(application, platform, backend)] = model
 
-    def get(self, application: str, platform: str) -> RegressionModel:
-        key = self._key(application, platform)
+    def get(
+        self, application: str, platform: str, backend: str = ""
+    ) -> RegressionModel:
+        key = self._key(application, platform, backend)
         if key not in self._models:
             raise KeyError(
                 f"no model for application={application!r} on "
-                f"platform={platform!r}; the paper's models do not transfer "
-                f"across applications or platforms — profile first."
+                f"platform={platform!r}"
+                + (f" backend={backend!r}" if backend else "")
+                + "; the paper's models do not transfer "
+                "across applications or platforms — profile first."
             )
         return self._models[key]
 
-    def __contains__(self, key: tuple[str, str]) -> bool:
+    def __contains__(self, key: tuple[str, ...]) -> bool:
         return self._key(*key) in self._models
 
     def __len__(self) -> int:
         return len(self._models)
 
-    def applications(self) -> list[tuple[str, str]]:
+    def applications(self) -> list[tuple[str, str, str]]:
         return sorted(self._models)
 
+    def backends_for(self, application: str, platform: str) -> list[str]:
+        """Backend key components stored for one (application, platform).
+
+        This is how a scheduler enumerates the categories available for the
+        joint (backend, config) argmin — see ``repro.cluster.policies``.
+        """
+        return sorted(
+            b for (a, p, b) in self._models if (a, p) == (application, platform)
+        )
+
     def predict(
-        self, application: str, platform: str, params: Sequence[float]
+        self,
+        application: str,
+        platform: str,
+        params: Sequence[float],
+        backend: str = "",
     ) -> float:
         """Paper Fig. 2b: look up the app's model, evaluate Eqn. 5."""
-        model = self.get(application, platform)
+        model = self.get(application, platform, backend)
         return float(np.asarray(model.predict(np.asarray(params))).ravel()[0])
 
     # ---- persistence ----------------------------------------------------
 
     def save(self, path: str) -> None:
         payload = {
-            f"{app}\x00{plat}": model.to_dict()
-            for (app, plat), model in self._models.items()
+            _SEP.join(key): model.to_dict()
+            for key, model in self._models.items()
         }
         tmp = path + ".tmp"
         with open(tmp, "w") as f:
@@ -75,6 +111,11 @@ class ModelDatabase:
         with open(path) as f:
             payload = json.load(f)
         for key, d in payload.items():
-            app, plat = key.split("\x00")
-            db.put(app, plat, RegressionModel.from_dict(d))
+            parts = key.split(_SEP)
+            if len(parts) == 2:  # pre-backend files: (app, platform) only
+                parts.append("")
+            elif len(parts) != 3:
+                raise ValueError(f"malformed model key {key!r} in {path}")
+            app, plat, backend = parts
+            db.put(app, plat, RegressionModel.from_dict(d), backend=backend)
         return db

@@ -17,7 +17,6 @@ the paper's per-application model database pattern, reused per-category.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Callable, Mapping, Sequence
 
 import numpy as np

@@ -17,7 +17,6 @@ Grid: (n_partitions,); blocks: keys/values (1, C) -> out (1, C).
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

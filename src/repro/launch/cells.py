@@ -10,7 +10,6 @@ import dataclasses
 from functools import partial
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ModelConfig, SHAPES, get_config, input_specs

@@ -1,0 +1,148 @@
+"""CLI driver for the predictive cluster scheduler.
+
+    PYTHONPATH=src python -m repro.launch.cluster \
+        --jobs 60 --workers 16 --policies fifo-static,predict-sjf
+
+Runs the named scheduling policies over one shared deterministic trace and
+prints a comparison table plus the online-refinement error trajectory.
+``--save-models`` persists the fitted per-(app, platform, backend) models
+(the paper's model database) so a later run — or a real long-lived
+scheduler — can ``--load-models`` and skip the bootstrap profiling phase.
+``--oracle engine`` wall-clocks the live MapReduce engine instead of the
+analytic cost (small traces only: every distinct config compiles once).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.cluster import (
+    AnalyticOracle,
+    Cluster,
+    EngineOracle,
+    POLICIES,
+    PredictivePolicy,
+    assign_deadlines,
+    generate_workload,
+    get_policy,
+)
+from repro.core.predictor import ModelDatabase
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.cluster",
+        description="Prediction-driven multi-job MapReduce scheduling",
+    )
+    ap.add_argument("--jobs", type=int, default=60)
+    ap.add_argument("--workers", type=int, default=16)
+    ap.add_argument("--policies", default="all",
+                    help="comma list of policy names, or 'all'")
+    ap.add_argument("--arrival", default="poisson",
+                    choices=("poisson", "uniform", "bursty"))
+    ap.add_argument("--mean-interarrival", type=float, default=0.12)
+    ap.add_argument("--size-min", type=int, default=1 << 14)
+    ap.add_argument("--size-max", type=int, default=1 << 18)
+    ap.add_argument("--deadline-fraction", type=float, default=0.6,
+                    help="fraction of jobs carrying an SLO deadline")
+    ap.add_argument("--slack", type=float, nargs=2, default=(1.2, 6.0),
+                    metavar=("LO", "HI"),
+                    help="deadline slack multiplier range")
+    ap.add_argument("--noise", type=float, default=0.02,
+                    help="analytic-oracle runtime noise (lognormal sigma)")
+    ap.add_argument("--seed", type=int, default=1)
+    ap.add_argument("--oracle", default="analytic",
+                    choices=("analytic", "engine"))
+    ap.add_argument("--save-models", metavar="PATH",
+                    help="persist the fitted ModelDatabase as JSON")
+    ap.add_argument("--load-models", metavar="PATH",
+                    help="warm-start predictive policies from a saved "
+                         "ModelDatabase (skips bootstrap profiling)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="also dump per-policy metrics as JSON")
+    return ap
+
+
+def main(argv=None) -> None:
+    args = build_parser().parse_args(argv)
+    if args.oracle == "engine":
+        oracle = EngineOracle()
+        print("[cluster] note: the engine oracle compiles every distinct "
+              "(app, size, backend, M, R, W) once — predictive policies' "
+              "bootstrap profiling alone is ~100+ compiles at the default "
+              "grids; keep traces tiny and grids small")
+    else:
+        oracle = AnalyticOracle(noise=args.noise, seed=args.seed)
+
+    jobs = generate_workload(
+        args.jobs, seed=args.seed, arrival=args.arrival,
+        mean_interarrival=args.mean_interarrival,
+        size_range=(args.size_min, args.size_max),
+    )
+    if args.deadline_fraction > 0:
+        jobs = assign_deadlines(
+            jobs, lambda j: oracle.nominal_time(j.app, j.size),
+            slack_range=tuple(args.slack), fraction=args.deadline_fraction,
+            seed=args.seed + 1,
+        )
+    names = (sorted(POLICIES) if args.policies == "all"
+             else args.policies.split(","))
+    cluster = Cluster(args.workers, oracle)
+
+    header = (
+        f"{'policy':<18} {'makespan':>9} {'wait':>7} {'turnaround':>10} "
+        f"{'util':>5} {'SLO':>5} {'rej':>4} {'MAE%':>6} {'MAE% 1st→2nd half':>18}"
+    )
+    print(f"[cluster] {args.jobs} jobs, {args.workers} workers, "
+          f"arrival={args.arrival}, oracle={oracle.platform}")
+    print(header)
+    print("-" * len(header))
+    all_metrics: dict[str, dict] = {}
+    save_db = None
+    for name in names:
+        kwargs: dict = {}
+        if issubclass(POLICIES[name], PredictivePolicy):
+            kwargs["seed"] = args.seed
+            if args.load_models:
+                # Fresh copy per policy: online refits mutate the db, and
+                # a shared instance would make the comparison depend on
+                # policy iteration order.
+                kwargs["db"] = ModelDatabase.load(args.load_models)
+        policy = get_policy(name, **kwargs)
+        result = cluster.run(jobs, policy)
+        m = result.metrics()
+        all_metrics[name] = m
+
+        def f(x, nd=2):
+            return "  n/a" if x is None else f"{x:.{nd}f}"
+
+        halves = (
+            f"{f(m['pred_mae_pct_first_half'], 1)}→"
+            f"{f(m['pred_mae_pct_second_half'], 1)}"
+            if m["pred_mae_pct"] is not None else "n/a"
+        )
+        print(
+            f"{name:<18} {f(m['makespan_s']):>9} {f(m['mean_wait_s']):>7} "
+            f"{f(m['mean_turnaround_s']):>10} {f(m['utilization']):>5} "
+            f"{f(m['slo_attainment']):>5} {m['n_rejected']:>4} "
+            f"{f(m['pred_mae_pct'], 1):>6} {halves:>18}"
+        )
+        if hasattr(policy, "db"):
+            save_db = policy.db
+    if args.save_models:
+        if save_db is None or len(save_db) == 0:
+            print("[cluster] no fitted models to save (only baseline "
+                  "policies ran)")
+        else:
+            save_db.save(args.save_models)
+            print(f"[cluster] saved {len(save_db)} models -> "
+                  f"{args.save_models}")
+    if args.json:
+        with open(args.json, "w") as fp:
+            json.dump(all_metrics, fp, indent=1, sort_keys=True)
+        print(f"[cluster] wrote metrics -> {args.json}")
+
+
+if __name__ == "__main__":
+    main()

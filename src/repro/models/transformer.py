@@ -16,8 +16,6 @@ index; arctic's dense-residual FFN runs in parallel with its MoE.
 
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,6 @@ specs, so under FSDP the optimizer is ZeRO-3-sharded for free.  ``state_dtype
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

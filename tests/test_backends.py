@@ -3,7 +3,6 @@ produce identical job output (collect_results) and identical overflow
 accounting (dropped) — the execution strategy is a timing axis, never a
 semantics axis."""
 
-import math
 from collections import Counter
 
 import jax
@@ -16,7 +15,6 @@ from repro.mapreduce import (
     PAD_KEY,
     REDUCE_BACKENDS,
     build_job,
-    build_job_sharded,
     collect_results,
     exim_mainlog,
     eximparse,

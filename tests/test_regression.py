@@ -150,3 +150,46 @@ class TestModelDatabase:
         assert db2.predict("wc", "plat", p) == pytest.approx(
             db.predict("wc", "plat", p), rel=1e-9
         )
+
+    def test_backend_keyed_roundtrip(self, tmp_path):
+        """(application, platform, backend) keys survive save/load and stay
+        isolated from the backend-less (paper-faithful) slot."""
+        db = ModelDatabase()
+        space = grid([(5, 40, 5), (5, 40, 5)])
+        m_plain = fit(space, _cubic_surface(space))
+        m_jnp = fit(space, 2.0 * _cubic_surface(space))
+        m_xla = fit(space, 3.0 * _cubic_surface(space))
+        db.put("wc", "plat", m_plain)
+        db.put("wc", "plat", m_jnp, backend="jnp")
+        db.put("wc", "plat", m_xla, backend="xla")
+        assert len(db) == 3
+        assert db.backends_for("wc", "plat") == ["", "jnp", "xla"]
+        assert ("wc", "plat", "jnp") in db
+        with pytest.raises(KeyError, match="backend"):
+            db.get("wc", "plat", backend="pallas")
+        path = str(tmp_path / "models.json")
+        db.save(path)
+        db2 = ModelDatabase.load(path)
+        p = [17.0, 23.0]
+        for backend in ("", "jnp", "xla"):
+            assert db2.predict("wc", "plat", p, backend=backend) == (
+                pytest.approx(db.predict("wc", "plat", p, backend=backend),
+                              rel=1e-9)
+            )
+
+    def test_load_legacy_two_part_keys(self, tmp_path):
+        """JSON written before the backend extension loads into backend=''."""
+        import json
+
+        space = grid([(5, 40, 5), (5, 40, 5)])
+        model = fit(space, _cubic_surface(space))
+        legacy = {"wc\x00plat": model.to_dict()}
+        path = str(tmp_path / "legacy.json")
+        with open(path, "w") as f:
+            json.dump(legacy, f)
+        db = ModelDatabase.load(path)
+        assert db.applications() == [("wc", "plat", "")]
+        assert db.predict("wc", "plat", [17.0, 23.0]) == pytest.approx(
+            float(np.asarray(model.predict(np.asarray([17.0, 23.0]))).ravel()[0]),
+            rel=1e-9,
+        )

@@ -15,7 +15,6 @@ from repro.data import DataConfig, TokenPipeline
 from repro.optim import (
     AdamWConfig,
     apply_updates,
-    global_norm,
     grad_compress,
     init_state,
 )

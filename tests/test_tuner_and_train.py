@@ -1,6 +1,5 @@
 """Tuner (beyond-paper autotuning) + end-to-end training-loop integration."""
 
-import shutil
 
 import numpy as np
 import pytest
@@ -13,7 +12,7 @@ from repro.core import (
     tune_categorical,
     validate,
 )
-from repro.data import DataConfig, TokenPipeline
+from repro.data import DataConfig
 from repro.launch.train import TrainLoopConfig, run_training
 
 
