@@ -3,7 +3,8 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast bench-quick bench-backends bench-cluster lint
+.PHONY: test test-fast bench-quick bench-backends bench-cluster \
+	bench-phases lint
 
 # Tier-1 verify (ROADMAP.md).
 test:
@@ -22,9 +23,10 @@ lint:
 test-fast:
 	$(PYTHON) -m pytest -x -q -m "not slow"
 
-# Full benchmark harness at reduced size.
+# Full benchmark harness at reduced size.  BENCH_FLAGS passes extra
+# harness args (e.g. the CI bench-smoke job's tiny --tokens grid).
 bench-quick:
-	$(PYTHON) -m benchmarks.run --quick
+	$(PYTHON) -m benchmarks.run --quick $(BENCH_FLAGS)
 
 # Just the reduce-backend comparison section.
 bench-backends:
@@ -33,3 +35,7 @@ bench-backends:
 # Just the predictive-scheduler policy comparison.
 bench-cluster:
 	$(PYTHON) -m benchmarks.run --quick --sections cluster
+
+# Just the per-phase telemetry + decomposed-models section.
+bench-phases:
+	$(PYTHON) -m benchmarks.run --quick --sections phases

@@ -96,6 +96,18 @@ def main(tokens: int, repeats: int) -> tuple[list[str], dict]:
         n: m for n, m in metrics.items() if n != "fifo-static"
     }
     best_name = min(predictive, key=lambda n: predictive[n]["makespan_s"])
+    # Telemetry-driven policy: on an unconstrained fabric (the default)
+    # predict-resource must match predict-sjf decision-for-decision — any
+    # makespan gap is a regression.
+    resource_vs_sjf = None
+    if "predict-resource" in metrics and "predict-sjf" in metrics:
+        ms_res = metrics["predict-resource"]["makespan_s"]
+        ms_sjf = metrics["predict-sjf"]["makespan_s"]
+        resource_vs_sjf = {
+            "makespan_resource_s": ms_res,
+            "makespan_sjf_s": ms_sjf,
+            "no_regression": ms_res <= ms_sjf * 1.001,
+        }
     refined = [
         (n, m) for n, m in predictive.items()
         if m["pred_mae_pct_first_half"] is not None
@@ -111,6 +123,7 @@ def main(tokens: int, repeats: int) -> tuple[list[str], dict]:
         "predictive_beats_baseline_makespan": (
             predictive[best_name]["makespan_s"] < baseline
         ),
+        "resource_vs_sjf": resource_vs_sjf,
         "online_refinement": {
             n: {
                 "mae_pct_first_half": m["pred_mae_pct_first_half"],

@@ -8,6 +8,7 @@ Sections (CSV rows on stdout):
   fig4    — Fig. 4: execution-time surface over (M, R) + observed optimum
   tuner   — beyond-paper: regression autotuner vs exhaustive search
   backends— beyond-paper: reduce-backend (jnp/pallas/xla) timing comparison
+  phases  — beyond-paper: per-phase telemetry, composed-vs-monolithic models
   cluster — beyond-paper: predictive multi-job scheduling vs FIFO baseline
   roofline— §Roofline table from the dry-run artifacts
   kernels — per-kernel microbench (us/call, interpret mode)
@@ -15,8 +16,9 @@ Sections (CSV rows on stdout):
 Every section also lands machine-readable artifacts in ``--outdir``
 (default ``experiments/bench/``): ``bench_<section>.csv`` with the
 section's rows and ``BENCH_<section>.json`` with summary stats (row count,
-wall time, status, and any section-provided summary dict) — the repo's
-perf trajectory, trackable PR-over-PR.
+wall time, status, any section-provided summary dict, and a provenance
+stamp — git SHA, jax version, platform — so ``experiments/bench/``
+trajectories are comparable across PRs).
 """
 
 from __future__ import annotations
@@ -24,13 +26,42 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import subprocess
 import sys
 import time
 
 ALL_SECTIONS = (
-    "table1", "fig3", "fig4", "tuner", "backends", "cluster", "roofline",
-    "kernels",
+    "table1", "fig3", "fig4", "tuner", "backends", "phases", "cluster",
+    "roofline", "kernels",
 )
+
+
+def provenance() -> dict:
+    """Who/what produced this artifact: git SHA, jax version, platform."""
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or "unknown"
+    except Exception:  # noqa: BLE001 - provenance must never kill a bench
+        sha = "unknown"
+    try:
+        import jax
+
+        jax_version = jax.__version__
+        backend = jax.default_backend()
+    except Exception:  # noqa: BLE001
+        jax_version = backend = "unknown"
+    import platform as _platform
+
+    return {
+        "git_sha": sha,
+        "jax_version": jax_version,
+        "jax_backend": backend,
+        "python_version": _platform.python_version(),
+        "platform": _platform.platform(),
+    }
 
 
 def _kernel_micro() -> list[str]:
@@ -92,6 +123,9 @@ def run_section(sec: str, tokens: int, repeats: int):
     if sec == "backends":
         from benchmarks import backends_compare
         return backends_compare.main(tokens, max(2, repeats - 2)), None
+    if sec == "phases":
+        from benchmarks import phase_bench
+        return phase_bench.main(tokens, max(2, repeats - 2))
     if sec == "cluster":
         from benchmarks import cluster_bench
         return cluster_bench.main(tokens, repeats)
@@ -135,6 +169,7 @@ def main() -> None:
     )
     rows: list[str] = []
     t_start = time.time()
+    stamp = provenance()
     for sec in sections:
         t0 = time.time()
         sec_rows: list[str] = []
@@ -143,6 +178,7 @@ def main() -> None:
             "quick": args.quick,
             "tokens": tokens,
             "status": "ok",
+            "provenance": stamp,
         }
         try:
             sec_rows, sec_summary = run_section(sec, tokens, repeats)

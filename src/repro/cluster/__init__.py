@@ -36,6 +36,7 @@ from repro.cluster.policies import (
     PredictedSJF,
     PredictiveFIFO,
     PredictivePolicy,
+    ResourceAware,
     SchedulingPolicy,
     StaticFIFO,
     get_policy,
@@ -64,6 +65,7 @@ __all__ = [
     "PredictiveFIFO",
     "PredictivePolicy",
     "Reject",
+    "ResourceAware",
     "SchedulingPolicy",
     "StaticFIFO",
     "TraceResult",

@@ -67,6 +67,9 @@ class JobRecord:
     start: float | None = None
     finish: float | None = None
     true_time: float | None = None
+    #: per-phase JobTrace from the oracle (when it supports take_trace),
+    #: consumed by the online per-phase refit loop.
+    trace: object | None = None
 
     @property
     def completed(self) -> bool:
@@ -238,6 +241,9 @@ class Cluster:
                     plan.mappers, plan.reducers, plan.workers,
                     job_id=job.job_id,
                 )
+                take_trace = getattr(self.oracle, "take_trace", None)
+                if take_trace is not None:
+                    rec.trace = take_trace()
                 free -= plan.workers
                 seq += 1
                 heapq.heappush(running, (now + rec.true_time, seq, job.job_id))

@@ -23,6 +23,14 @@ from repro.core.predictor import ModelDatabase
 #: robust unattended, so scaling + tiny ridge + cross terms are on.
 DEFAULT_FIT_KWARGS = dict(degree=3, scale=True, lam=1e-6, cross_terms=True)
 
+#: per-phase time models use a leaner basis: each phase is individually
+#: smoother than the total (the non-monotonic wave-quantization kinks live
+#: mostly in map/reduce, not in every phase), and live traces accumulate
+#: slowly — a quadratic no-cross basis (9 features for 4 params) reaches
+#: the 2x determinacy margin within a realistic trace.
+DEFAULT_PHASE_FIT_KWARGS = dict(degree=2, scale=True, lam=1e-6,
+                                cross_terms=False)
+
 
 class OnlineRefiner:
     """Accumulate per-(app, backend) observations; refit into the shared db.
@@ -43,6 +51,8 @@ class OnlineRefiner:
         refit_every: int = 1,
         max_points: int | None = None,
         fit_kwargs: dict | None = None,
+        phase_fit_kwargs: dict | None = None,
+        phase_refit_every: int | None = None,
     ):
         if refit_every < 1:
             raise ValueError("refit_every must be >= 1")
@@ -51,11 +61,29 @@ class OnlineRefiner:
         self.refit_every = refit_every
         self.max_points = max_points
         self.fit_kwargs = dict(fit_kwargs or DEFAULT_FIT_KWARGS)
+        self.phase_fit_kwargs = dict(
+            phase_fit_kwargs or DEFAULT_PHASE_FIT_KWARGS
+        )
+        # Phase models never drive plan selection, so they refit at a
+        # slower cadence than the dispatch-critical total-time model —
+        # one fit per phase per cadence, on the full history, is the cost.
+        self.phase_refit_every = (
+            max(5, refit_every) if phase_refit_every is None
+            else phase_refit_every
+        )
+        if self.phase_refit_every < 1:
+            raise ValueError("phase_refit_every must be >= 1")
         # (app, backend) -> [bootstrap rows (np.ndarray), ...], observations
         self._seed: dict[tuple[str, str], tuple[np.ndarray, np.ndarray]] = {}
         self._obs: dict[tuple[str, str], list[tuple[np.ndarray, float]]] = {}
         self._since_refit: dict[tuple[str, str], int] = {}
         self.n_refits = 0
+        # (app, backend, phase) -> per-phase time observations (telemetry).
+        self._phase_obs: dict[
+            tuple[str, str, str], list[tuple[np.ndarray, float]]
+        ] = {}
+        self._phase_since_refit: dict[tuple[str, str], int] = {}
+        self.n_phase_refits = 0
 
     def seed_profiles(
         self, app: str, backend: str, params: np.ndarray, times: np.ndarray
@@ -121,3 +149,67 @@ class OnlineRefiner:
         self._since_refit[key] = 0
         self.n_refits += 1
         return True
+
+    # ---- per-phase refinement (telemetry traces) ------------------------
+
+    def observe_phases(
+        self,
+        app: str,
+        backend: str,
+        params_row,
+        phase_times: dict[str, float],
+    ) -> bool:
+        """Record one completed job's per-phase wall times; refit the
+        decomposed per-phase time models when due.
+
+        Every completed job whose oracle returns a
+        :class:`repro.telemetry.JobTrace` contributes one row per phase;
+        once enough rows accumulate, one
+        :class:`~repro.core.regression.RegressionModel` per phase is
+        (re)fitted and published into the database under the telemetry
+        layer's resource-qualified keys (``"<phase>:time_s"``) — the
+        continuous analogue of ``telemetry.models.fit_phase_models``.
+        Returns True when the models were republished.
+        """
+        from repro.telemetry.models import phase_resource_key
+
+        row = np.asarray(params_row, dtype=np.float64)
+        for phase, t in phase_times.items():
+            self._phase_obs.setdefault((app, backend, phase), []).append(
+                (row, float(t))
+            )
+        key = (app, backend)
+        self._phase_since_refit[key] = self._phase_since_refit.get(key, 0) + 1
+        if self._phase_since_refit[key] < self.phase_refit_every:
+            return False
+        phases = sorted(
+            p for (a, b, p) in self._phase_obs if (a, b) == key
+        )
+        if not phases:
+            return False
+        refitted = False
+        for phase in phases:
+            obs = self._phase_obs[(app, backend, phase)]
+            if self.max_points is not None:
+                obs = obs[-self.max_points:]
+            params = np.asarray([r for r, _ in obs], dtype=np.float64)
+            times = np.asarray([t for _, t in obs], dtype=np.float64)
+            spec_probe = fit_feature_spec(
+                params,
+                degree=self.phase_fit_kwargs.get("degree", 2),
+                cross_terms=self.phase_fit_kwargs.get("cross_terms", False),
+            )
+            # No bootstrap anchor rows exist for phases: always demand the
+            # 2x determinacy margin (see ``observe``).
+            if params.shape[0] < 2 * spec_probe.n_features:
+                continue
+            model = regression.fit(params, times, **self.phase_fit_kwargs)
+            self.db.put(
+                app, self.platform, model, backend=backend,
+                resource=phase_resource_key(phase),
+            )
+            refitted = True
+        if refitted:
+            self._phase_since_refit[key] = 0
+            self.n_phase_refits += 1
+        return refitted

@@ -30,6 +30,48 @@ import numpy as np
 _APP_IDS = {"wordcount": 1, "eximparse": 2}
 _BACKEND_IDS = {"jnp": 1, "pallas": 2, "xla": 3}
 
+#: map-output pairs emitted per input token (wordcount: one pair per word;
+#: eximparse: one pair per 3-token record) — sizes the shuffle traffic.
+_PAIRS_PER_TOKEN = {"wordcount": 1.0, "eximparse": 1.0 / 3.0}
+
+
+def _analytic_trace(app, backend, size, M, R, W, phase_s, noise_factor):
+    """Build a JobTrace-shaped record from closed-form phase components.
+
+    The analytic oracle has no real arrays to count, so the counters are
+    the closed-form expectations (shuffle bytes = pairs x PAIR_BYTES, no
+    overflow); the *shape* matches the engine's traces exactly, which is
+    what lets the online per-phase refit path treat both oracles alike.
+    """
+    from repro.telemetry.trace import PAIR_BYTES, JobTrace
+
+    pairs = _PAIRS_PER_TOKEN[app] * float(size)
+    nbytes = pairs * PAIR_BYTES
+    trace = JobTrace(
+        app=app,
+        config={
+            "num_mappers": M, "num_reducers": R, "num_workers": W,
+            "reduce_backend": backend, "input_len": int(size),
+        },
+    )
+    trace.record_phase(
+        "map", phase_s["map"] * noise_factor,
+        tasks=M, waves=math.ceil(M / W), records_in=size,
+        pairs_emitted=pairs,
+    )
+    trace.record_phase(
+        "shuffle", phase_s["shuffle"] * noise_factor,
+        pairs_in=pairs, pairs_out=pairs, pairs_dropped=0,
+        bytes_in=nbytes, bytes_out=nbytes, bytes_dropped=0,
+        partitions=R,
+    )
+    trace.record_phase(
+        "reduce", phase_s["reduce"] * noise_factor,
+        tasks=R, waves=math.ceil(R / W),
+    )
+    trace.finish(sum(p.wall_s for p in trace.phases))
+    return trace
+
 
 class AnalyticOracle:
     """Closed-form Hadoop-shaped job time; deterministic per (job, config).
@@ -60,21 +102,16 @@ class AnalyticOracle:
     def __init__(self, *, noise: float = 0.02, seed: int = 0):
         self.noise = float(noise)
         self.seed = int(seed)
+        self._last_call: tuple | None = None
 
     def backends(self) -> tuple[str, ...]:
         return tuple(self.BACKENDS)
 
-    def time(
-        self,
-        app: str,
-        backend: str,
-        size: int,
-        mappers: int,
-        reducers: int,
-        workers: int,
-        job_id: int = 0,
-        _noiseless: bool = False,
-    ) -> float:
+    def _phase_components(
+        self, app: str, backend: str, size: int,
+        mappers: int, reducers: int, workers: int,
+    ) -> dict[str, float]:
+        """Noise-free per-phase seconds — the closed-form decomposition."""
         if app not in _APP_IDS:
             raise ValueError(f"unknown app {app!r}")
         if backend not in self.BACKENDS:
@@ -92,17 +129,85 @@ class AnalyticOracle:
             + self.MAP_COST[app] * S
             + self.C_SORT * S * math.log2(max(S, 2.0))
         )
-        t_shuffle = self.C_SHUF * n * (1.0 + 0.5 / math.sqrt(R) + self.C_PART * R)
+        t_shuffle = self.C_SHUF * n * (
+            1.0 + 0.5 / math.sqrt(R) + self.C_PART * R
+        )
         t_reduce = red_waves * (setup + self.C_RED * thr * n / R)
-        t = t_map + t_shuffle + t_reduce
-        if self.noise > 0.0 and not _noiseless:
-            ss = np.random.SeedSequence(
-                [self.seed, int(job_id), M, R, W,
-                 _APP_IDS[app], _BACKEND_IDS[backend]]
+        return {"map": t_map, "shuffle": t_shuffle, "reduce": t_reduce}
+
+    def _noise_factor(
+        self, app, backend, M, R, W, job_id
+    ) -> float:
+        if self.noise <= 0.0:
+            return 1.0
+        ss = np.random.SeedSequence(
+            [self.seed, int(job_id), int(M), int(R), int(W),
+             _APP_IDS[app], _BACKEND_IDS[backend]]
+        )
+        rng = np.random.default_rng(ss)
+        return float(np.exp(rng.normal(0.0, self.noise)))
+
+    def time(
+        self,
+        app: str,
+        backend: str,
+        size: int,
+        mappers: int,
+        reducers: int,
+        workers: int,
+        job_id: int = 0,
+        _noiseless: bool = False,
+    ) -> float:
+        phase_s = self._phase_components(
+            app, backend, size, mappers, reducers, workers
+        )
+        t = sum(phase_s.values())
+        self._last_call = (
+            app, backend, int(size), int(mappers), int(reducers),
+            int(workers), int(job_id), bool(_noiseless),
+        )
+        if not _noiseless:
+            t *= self._noise_factor(
+                app, backend, mappers, reducers, workers, job_id
             )
-            rng = np.random.default_rng(ss)
-            t *= float(np.exp(rng.normal(0.0, self.noise)))
         return t
+
+    def take_trace(self):
+        """Per-phase trace of the most recent :meth:`time` call (or None).
+
+        Computed lazily from the stored call signature so the hot path
+        (thousands of bootstrap-profiling calls per trace) pays one tuple
+        assignment, not a trace construction.
+        """
+        if self._last_call is None:
+            return None
+        app, backend, size, M, R, W, job_id, noiseless = self._last_call
+        phase_s = self._phase_components(app, backend, size, M, R, W)
+        factor = 1.0 if noiseless else self._noise_factor(
+            app, backend, M, R, W, job_id
+        )
+        return _analytic_trace(app, backend, size, M, R, W, phase_s, factor)
+
+    def phase_profile(
+        self,
+        app: str,
+        backend: str,
+        size: int,
+        mappers: int,
+        reducers: int,
+        workers: int,
+    ) -> dict:
+        """Noise-free per-phase times + shuffle bytes for one config — the
+        profiling source for decomposed (per-phase, per-resource) models."""
+        phase_s = self._phase_components(
+            app, backend, size, mappers, reducers, workers
+        )
+        from repro.telemetry.trace import PAIR_BYTES
+
+        return {
+            "time_s": dict(phase_s),
+            "shuffle_bytes": _PAIRS_PER_TOKEN[app] * float(size) * PAIR_BYTES,
+        }
 
     def nominal_time(self, app: str, size: int) -> float:
         """Noise-free time at a nominal mid-range config — the service-time
@@ -121,11 +226,30 @@ class EngineOracle:
 
     platform = "engine-wallclock"
 
-    def __init__(self, *, warmup: int = 1, size_quantum: int = 1024):
+    def __init__(
+        self, *, warmup: int = 1, size_quantum: int = 1024,
+        traced: bool = False,
+    ):
         self.warmup = warmup
         self.size_quantum = size_quantum
+        #: with traced=True, jobs run through the phase-split telemetry
+        #: path: every execution appends a JobTrace to ``recorder`` and
+        #: ``take_trace`` exposes the latest to the cluster, so completed
+        #: jobs carry per-phase observations (the online per-phase refit
+        #: loop).  Timing then includes per-phase fencing overhead —
+        #: consistent across configs, so models stay comparable.
+        self.traced = bool(traced)
+        self.recorder = None
+        if traced:
+            from repro.telemetry import PhaseRecorder
+
+            # Consumers only read recent traces (``take_trace``); bound
+            # retention so bootstrap profiling (thousands of runs) doesn't
+            # grow the recorder without limit over a long simulation.
+            self.recorder = PhaseRecorder(max_traces=64)
         self._corpora: dict = {}
         self._jobs: dict = {}
+        self._traced_jobs: dict = {}
 
     def backends(self) -> tuple[str, ...]:
         return ("jnp", "xla")
@@ -148,6 +272,30 @@ class EngineOracle:
                 raise ValueError(f"unknown app {app!r}")
         return self._corpora[key]
 
+    def _get_job(self, app, backend, size, mappers, reducers, workers):
+        import jax
+
+        from repro.mapreduce import JobConfig, build_job
+
+        key = (app, size, backend, int(mappers), int(reducers), int(workers))
+        if key not in self._jobs:
+            mr_app, corpus = self._corpus(app, size)
+            job = build_job(
+                mr_app,
+                JobConfig(
+                    num_mappers=int(mappers),
+                    num_reducers=int(reducers),
+                    num_workers=int(workers),
+                    reduce_backend=backend,
+                ),
+                len(corpus),
+                recorder=self.recorder,
+            )
+            for _ in range(self.warmup):
+                jax.block_until_ready(job(corpus))
+            self._jobs[key] = (job, corpus)
+        return self._jobs[key]
+
     def time(
         self,
         app: str,
@@ -162,13 +310,52 @@ class EngineOracle:
 
         import jax
 
+        size = max(self.size_quantum,
+                   (int(size) // self.size_quantum) * self.size_quantum)
+        job, corpus = self._get_job(
+            app, backend, size, mappers, reducers, workers
+        )
+        t0 = _time.perf_counter()
+        jax.block_until_ready(job(corpus))
+        return _time.perf_counter() - t0
+
+    def take_trace(self):
+        """JobTrace of the most recent execution (traced mode), else None."""
+        if self.recorder is None or not len(self.recorder):
+            return None
+        return self.recorder.last
+
+    def phase_profile(
+        self,
+        app: str,
+        backend: str,
+        size: int,
+        mappers: int,
+        reducers: int,
+        workers: int,
+    ) -> dict:
+        """Measured per-phase times + shuffle bytes for one config.
+
+        Runs the real engine through the telemetry path (one compile per
+        distinct config — same cost caveat as :meth:`time`).  Available
+        regardless of ``traced``: an untraced oracle keeps a separate
+        traced-job cache so :meth:`time` stays on the fused path.
+        """
+        if self.recorder is not None:
+            self.time(app, backend, size, mappers, reducers, workers)
+            return self._profile_from(self.recorder.last)
+
+        import jax
+
         from repro.mapreduce import JobConfig, build_job
+        from repro.telemetry import PhaseRecorder
 
         size = max(self.size_quantum,
                    (int(size) // self.size_quantum) * self.size_quantum)
         key = (app, size, backend, int(mappers), int(reducers), int(workers))
-        if key not in self._jobs:
+        if key not in self._traced_jobs:
             mr_app, corpus = self._corpus(app, size)
+            rec = PhaseRecorder(max_traces=4)
             job = build_job(
                 mr_app,
                 JobConfig(
@@ -178,14 +365,21 @@ class EngineOracle:
                     reduce_backend=backend,
                 ),
                 len(corpus),
+                recorder=rec,
             )
             for _ in range(self.warmup):
                 jax.block_until_ready(job(corpus))
-            self._jobs[key] = (job, corpus)
-        job, corpus = self._jobs[key]
-        t0 = _time.perf_counter()
+            self._traced_jobs[key] = (job, corpus, rec)
+        job, corpus, rec = self._traced_jobs[key]
         jax.block_until_ready(job(corpus))
-        return _time.perf_counter() - t0
+        return self._profile_from(rec.last)
+
+    @staticmethod
+    def _profile_from(trace) -> dict:
+        return {
+            "time_s": trace.phase_times(),
+            "shuffle_bytes": trace.counter("shuffle", "bytes_out"),
+        }
 
     def nominal_time(self, app: str, size: int) -> float:
         return self.time(app, "jnp", size, 8, 8, 4)

@@ -26,6 +26,7 @@ registries): ``@register_policy`` + ``get_policy(name, **kwargs)``.
 from __future__ import annotations
 
 import itertools
+import math
 
 import numpy as np
 
@@ -33,7 +34,7 @@ from repro.cluster.cluster import Dispatch, Plan, Reject
 from repro.cluster.online import DEFAULT_FIT_KWARGS, OnlineRefiner
 from repro.cluster.workload import JobSpec
 from repro.core.predictor import ModelDatabase
-from repro.core.regression import RegressionModel
+from repro.core.regression import RegressionModel, fit as regression_fit
 from repro.core.tuner import tune_categorical
 
 #: size feature is in kilotokens: same order of magnitude as M/R/W, which
@@ -306,6 +307,13 @@ class PredictivePolicy(SchedulingPolicy):
         if refitted:
             self._model_version += 1
             self._plan_cache.clear()
+        # Oracles that return per-phase traces (telemetry layer) feed the
+        # decomposed models too; phase models don't drive plan selection,
+        # so no cache invalidation is needed.
+        if record.trace is not None:
+            self.refiner.observe_phases(
+                spec.app, plan.backend, row, record.trace.phase_times()
+            )
 
 
 @register_policy
@@ -352,19 +360,36 @@ class DeadlineAware(PredictivePolicy):
 
     A job whose deadline cannot be met even at the fastest predicted
     configuration (max worker grant, best backend) is rejected up front —
-    capacity is never burned on a lost cause.  Feasible deadline jobs are
-    served EDF with the *cheapest* grant that still meets the deadline
-    (predicted), leaving workers for the rest; best-effort jobs (no
-    deadline) backfill last at their fastest plan."""
+    capacity is never burned on a lost cause.  Admission is *queue-aware*:
+    before declaring a deadline infeasible, the estimated queue wait (the
+    predicted service times of jobs ahead in dispatch order, scaled by
+    their share of the worker pool) is added to the job's own predicted
+    service time — a job that is feasible at dispatch but queued behind
+    enough work is a lost cause too (ROADMAP "smarter admission").
+    Feasible deadline jobs are served EDF with the *cheapest* grant that
+    still meets the deadline (predicted), leaving workers for the rest;
+    best-effort jobs (no deadline) backfill last at their fastest plan."""
 
     name = "predict-deadline"
 
-    def __init__(self, *, slo_margin: float = 0.0, **kwargs):
+    def __init__(self, *, slo_margin: float = 0.0,
+                 queue_aware: bool = True, **kwargs):
         super().__init__(**kwargs)
         self.slo_margin = slo_margin  # fractional safety margin on deadlines
+        self.queue_aware = queue_aware
 
     def _deadline_budget(self, job: JobSpec, now: float) -> float:
         return (job.deadline - now) / (1.0 + self.slo_margin)
+
+    def _queue_share(self, plan: Plan | None) -> float:
+        """Estimated pool-time one queued job consumes before those behind
+        it can expect workers: predicted service time weighted by its share
+        of the pool (W jobs at grant w each overlap ~ total/w ways)."""
+        if plan is None or plan.predicted_time is None:
+            return 0.0
+        return plan.predicted_time * (
+            plan.workers / self.cluster.total_workers
+        )
 
     def _cheapest_feasible(
         self, job: JobSpec, free_workers: int, budget: float
@@ -389,6 +414,51 @@ class DeadlineAware(PredictivePolicy):
             workers=int(row[2]), predicted_time=t,
         )
 
+    def _admission_sweep(self, order, free_workers, now):
+        """Queue-aware admission: walk the dispatch order accumulating the
+        estimated queue wait; return a Reject for the first deadline job
+        whose own fastest service time plus that wait overruns its budget.
+
+        The dispatch loop below alone cannot do this — it returns at the
+        first dispatch/hold, so jobs queued behind others would only be
+        re-examined (and rejected) after their budget had silently burned
+        down.  The sweep rejects them up front instead.
+
+        Parallelism-aware: a virtual free-worker pool (seeded with the
+        currently free workers) is drained by the grants of jobs ahead;
+        a job that still fits the pool runs *concurrently* with the queue
+        ahead and experiences no queue wait.  Only once the pool is
+        exhausted do the accumulated pool-shares of the jobs ahead count
+        as estimated wait.
+        """
+        wait_ahead = 0.0    # pool-share of everything ahead (worker-time)
+        virtual_free = free_workers
+        for job in order:
+            fastest = self.best_plan(job, self.cluster.total_workers)
+            grant = fastest.workers if fastest is not None else 0
+            fits_now = 0 < grant <= virtual_free
+            if job.deadline is not None:
+                budget = self._deadline_budget(job, now)
+                t_fast = (
+                    fastest.predicted_time if fastest is not None
+                    else float("inf")
+                )
+                queue_wait = 0.0 if fits_now else wait_ahead
+                if t_fast + queue_wait > budget:
+                    return Reject(
+                        job,
+                        f"infeasible: fastest predicted {t_fast:.3f}s"
+                        + (
+                            f" + est. queue wait {queue_wait:.3f}s"
+                            if queue_wait > 0 else ""
+                        )
+                        + f" > budget {budget:.3f}s",
+                    )
+            if fits_now:
+                virtual_free -= grant
+            wait_ahead += self._queue_share(fastest)
+        return None
+
     def select(self, queue, free_workers, now):
         order = sorted(
             queue,
@@ -397,6 +467,10 @@ class DeadlineAware(PredictivePolicy):
                 j.arrival, j.job_id,
             ),
         )
+        if self.queue_aware:
+            reject = self._admission_sweep(order, free_workers, now)
+            if reject is not None:
+                return reject
         for job in order:
             if job.deadline is None:
                 plan = self.best_plan(job, free_workers)
@@ -420,3 +494,143 @@ class DeadlineAware(PredictivePolicy):
             # past an urgent job.
             return None
         return None
+
+
+@register_policy
+class ResourceAware(PredictedSJF):
+    """SJF with network-bottleneck-aware dispatch (telemetry-driven).
+
+    Beyond the total-time model, this policy fits one *shuffle-bytes*
+    model per (application, backend) from the oracle's per-phase profiles
+    (``phase_profile``, backed by the telemetry layer's decomposed
+    counters) and tracks the aggregate predicted shuffle bandwidth of the
+    jobs currently running.  A candidate whose predicted shuffle traffic
+    would push that aggregate past ``net_capacity`` bytes/s has its score
+    inflated by ``contention_alpha`` x the fractional overload, steering
+    dispatch toward shuffle-light jobs while the fabric is saturated —
+    co-scheduling two shuffle-heavy jobs is what a network-provisioning
+    model (arXiv:1206.2016) says to avoid.
+
+    ``net_capacity=None`` (default) means an unconstrained fabric: scoring
+    reduces exactly to predicted time and the policy is decision-for-
+    decision identical to ``predict-sjf`` — the safe default for oracles
+    that do not model network contention.  Operators set it to their
+    fabric's sustained bytes/s.  The policy is work-conserving either
+    way: contention re-orders dispatch, it never idles workers.
+    """
+
+    name = "predict-resource"
+
+    def __init__(self, *, net_capacity: float | None = None,
+                 contention_alpha: float = 4.0, **kwargs):
+        super().__init__(**kwargs)
+        self.net_capacity = (
+            float("inf") if net_capacity is None else float(net_capacity)
+        )
+        if self.net_capacity <= 0:
+            raise ValueError("net_capacity must be positive")
+        self.contention_alpha = float(contention_alpha)
+        self._bytes_models: dict[tuple[str, str], RegressionModel] = {}
+        self._running_bw: dict[int, float] = {}
+        self.n_contention_deferrals = 0
+
+    # ---- bootstrap: fit shuffle-bytes models from phase profiles --------
+
+    def prepare(self, cluster, apps):
+        super().prepare(cluster, apps)
+        self._running_bw.clear()
+        profile = getattr(cluster.oracle, "phase_profile", None)
+        if profile is None:
+            return  # no per-phase source: behave as plain predict-sjf
+        from repro.telemetry.models import phase_resource_key
+
+        res_key = phase_resource_key("shuffle", "bytes")
+        # A compact profiling set suffices: shuffle bytes are ~linear in
+        # size and barely config-dependent, but we keep the full feature
+        # row so the stored model composes with everything else.
+        rows = np.asarray(
+            [
+                (m, r, self.worker_grid[-1], s / SIZE_UNIT)
+                for m, r, s in itertools.product(
+                    self.mapper_grid[:: max(1, len(self.mapper_grid) - 1)],
+                    self.reducer_grid[:: max(1, len(self.reducer_grid) - 1)],
+                    self.bootstrap_sizes,
+                )
+            ],
+            dtype=np.float64,
+        )
+        for app in apps:
+            for backend in self.backends:
+                if (app, self.platform, backend, res_key) in self.db:
+                    self._bytes_models[(app, backend)] = self.db.get(
+                        app, self.platform, backend, resource=res_key
+                    )
+                    continue
+                targets = np.asarray(
+                    [
+                        profile(
+                            app, backend, int(row[3] * SIZE_UNIT),
+                            int(row[0]), int(row[1]), int(row[2]),
+                        )["shuffle_bytes"]
+                        for row in rows
+                    ],
+                    dtype=np.float64,
+                )
+                # Shuffle traffic is ~linear in input size and barely
+                # config-dependent: a degree-1 basis fits the 12-point
+                # profile set exactly and never goes underdetermined.
+                model = regression_fit(
+                    rows, targets, degree=1, cross_terms=False,
+                    scale=True, lam=1e-9,
+                )
+                self.db.put(
+                    app, self.platform, model, backend=backend,
+                    resource=res_key,
+                )
+                self._bytes_models[(app, backend)] = model
+
+    # ---- dispatch scoring ------------------------------------------------
+
+    def _shuffle_bandwidth(self, job: JobSpec, plan: Plan) -> float:
+        """Predicted shuffle bytes/s this job sustains while running."""
+        model = self._bytes_models.get((job.app, plan.backend))
+        if model is None or plan.predicted_time is None:
+            return 0.0
+        row = (plan.mappers, plan.reducers, plan.workers,
+               job.size / SIZE_UNIT)
+        nbytes = max(float(_np_predict(model, np.asarray(row))[0]), 0.0)
+        return nbytes / max(plan.predicted_time, 1e-9)
+
+    def _score(self, plan: Plan, bandwidth: float, load: float) -> float:
+        if not math.isfinite(self.net_capacity):
+            return plan.predicted_time
+        overload = max(0.0, load + bandwidth - self.net_capacity)
+        return plan.predicted_time * (
+            1.0 + self.contention_alpha * overload / self.net_capacity
+        )
+
+    def select(self, queue, free_workers, now):
+        load = sum(self._running_bw.values())
+        best = None
+        best_sjf = None  # what plain SJF would pick (deferral accounting)
+        for job in queue:
+            plan = self.best_plan(job, free_workers)
+            if plan is None:
+                continue
+            bw = self._shuffle_bandwidth(job, plan)
+            score = self._score(plan, bw, load)
+            if best is None or score < best[0]:
+                best = (score, job, plan, bw)
+            if best_sjf is None or plan.predicted_time < best_sjf:
+                best_sjf = plan.predicted_time
+        if best is None:
+            return None
+        _, job, plan, bw = best
+        if best_sjf is not None and plan.predicted_time > best_sjf:
+            self.n_contention_deferrals += 1
+        self._running_bw[job.job_id] = bw
+        return Dispatch(job, plan)
+
+    def observe(self, record):
+        self._running_bw.pop(record.spec.job_id, None)
+        super().observe(record)

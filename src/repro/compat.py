@@ -57,3 +57,21 @@ def cost_analysis_dict(compiled) -> dict:
     if isinstance(cost, (list, tuple)):
         cost = cost[0] if cost else {}
     return cost
+
+
+def compiled_cost_analysis(fn, *abstract_args) -> dict:
+    """Lower + compile ``fn`` for abstract (shape/dtype-only) arguments and
+    return its XLA cost analysis as a dict.
+
+    Returns ``{}`` when the backend/version provides no cost analysis (some
+    CPU builds) or compilation of the probe fails — callers treat an empty
+    dict as "estimates unavailable", never as an error (telemetry must not
+    take the engine down).
+    """
+    import jax
+
+    try:
+        compiled = jax.jit(fn).lower(*abstract_args).compile()
+        return dict(cost_analysis_dict(compiled) or {})
+    except Exception:  # pragma: no cover - backend/version dependent
+        return {}

@@ -6,13 +6,22 @@ a model is only ever used for the *same application on the same platform*
 and persists to JSON so a long-lived scheduler can reload models across
 restarts — the paper's motivating use case (smarter job scheduling).
 
-Beyond the paper's two-part key, the database also carries an optional
-``backend`` component: the MapReduce engine's execution backend is a
-categorical knob (see ``core.tuner.tune_categorical``), and the paper's
-pattern of "one model per category" needs one store slot per
-(application, platform, backend).  ``backend=""`` (the default) is the
-paper-faithful two-part key, so existing call sites are unchanged; JSON
-files written before this extension load transparently.
+Beyond the paper's two-part key, the database carries two optional key
+components:
+
+* ``backend`` — the MapReduce engine's execution backend is a categorical
+  knob (see ``core.tuner.tune_categorical``), and the paper's pattern of
+  "one model per category" needs one store slot per
+  (application, platform, backend);
+* ``resource`` — the telemetry layer (``repro.telemetry``) decomposes the
+  total time into per-(phase, resource) models ("map:time_s",
+  "shuffle:bytes_out", ...); the empty resource ``""`` is the monolithic
+  total-time model.
+
+Both default to ``""`` (the paper-faithful two-part key), so existing call
+sites are unchanged; JSON files written with 2-part or 3-part keys load
+transparently, and databases containing no resource-qualified models write
+the same 3-part format PR 2 produced.
 """
 
 from __future__ import annotations
@@ -29,16 +38,19 @@ _SEP = "\x00"
 
 
 class ModelDatabase:
-    """Per-(application, platform[, backend]) store of RegressionModels."""
+    """Per-(application, platform[, backend[, resource]]) RegressionModels."""
 
     def __init__(self) -> None:
-        self._models: dict[tuple[str, str, str], RegressionModel] = {}
+        self._models: dict[tuple[str, str, str, str], RegressionModel] = {}
 
     @staticmethod
     def _key(
-        application: str, platform: str, backend: str = ""
-    ) -> tuple[str, str, str]:
-        return (application, platform, backend)
+        application: str,
+        platform: str,
+        backend: str = "",
+        resource: str = "",
+    ) -> tuple[str, str, str, str]:
+        return (application, platform, backend, resource)
 
     def put(
         self,
@@ -46,18 +58,26 @@ class ModelDatabase:
         platform: str,
         model: RegressionModel,
         backend: str = "",
+        resource: str = "",
     ) -> None:
-        self._models[self._key(application, platform, backend)] = model
+        self._models[
+            self._key(application, platform, backend, resource)
+        ] = model
 
     def get(
-        self, application: str, platform: str, backend: str = ""
+        self,
+        application: str,
+        platform: str,
+        backend: str = "",
+        resource: str = "",
     ) -> RegressionModel:
-        key = self._key(application, platform, backend)
+        key = self._key(application, platform, backend, resource)
         if key not in self._models:
             raise KeyError(
                 f"no model for application={application!r} on "
                 f"platform={platform!r}"
                 + (f" backend={backend!r}" if backend else "")
+                + (f" resource={resource!r}" if resource else "")
                 + "; the paper's models do not transfer "
                 "across applications or platforms — profile first."
             )
@@ -69,17 +89,36 @@ class ModelDatabase:
     def __len__(self) -> int:
         return len(self._models)
 
-    def applications(self) -> list[tuple[str, str, str]]:
-        return sorted(self._models)
+    def applications(self) -> list[tuple[str, ...]]:
+        """Stored keys; the resource component is elided when empty, so
+        resource-less databases keep the PR 2 three-part shape."""
+        return sorted(
+            key if key[3] else key[:3] for key in self._models
+        )
 
     def backends_for(self, application: str, platform: str) -> list[str]:
-        """Backend key components stored for one (application, platform).
+        """Backend key components stored for one (application, platform),
+        over total-time (resource ``""``) models only.
 
         This is how a scheduler enumerates the categories available for the
         joint (backend, config) argmin — see ``repro.cluster.policies``.
         """
         return sorted(
-            b for (a, p, b) in self._models if (a, p) == (application, platform)
+            b
+            for (a, p, b, res) in self._models
+            if (a, p, res) == (application, platform, "")
+        )
+
+    def resources_for(
+        self, application: str, platform: str, backend: str = ""
+    ) -> list[str]:
+        """Non-empty resource key components stored for one
+        (application, platform, backend) — the telemetry layer's decomposed
+        per-(phase, resource) models."""
+        return sorted(
+            res
+            for (a, p, b, res) in self._models
+            if (a, p, b) == (application, platform, backend) and res
         )
 
     def predict(
@@ -88,18 +127,22 @@ class ModelDatabase:
         platform: str,
         params: Sequence[float],
         backend: str = "",
+        resource: str = "",
     ) -> float:
         """Paper Fig. 2b: look up the app's model, evaluate Eqn. 5."""
-        model = self.get(application, platform, backend)
+        model = self.get(application, platform, backend, resource)
         return float(np.asarray(model.predict(np.asarray(params))).ravel()[0])
 
     # ---- persistence ----------------------------------------------------
 
     def save(self, path: str) -> None:
-        payload = {
-            _SEP.join(key): model.to_dict()
-            for key, model in self._models.items()
-        }
+        payload = {}
+        for key, model in self._models.items():
+            app, plat, backend, resource = key
+            # Resource-less keys keep the PR 2 3-part wire format so older
+            # readers (and existing fixtures) stay compatible.
+            parts = [app, plat, backend] + ([resource] if resource else [])
+            payload[_SEP.join(parts)] = model.to_dict()
         tmp = path + ".tmp"
         with open(tmp, "w") as f:
             json.dump(payload, f)
@@ -112,10 +155,13 @@ class ModelDatabase:
             payload = json.load(f)
         for key, d in payload.items():
             parts = key.split(_SEP)
-            if len(parts) == 2:  # pre-backend files: (app, platform) only
-                parts.append("")
-            elif len(parts) != 3:
+            if len(parts) < 2 or len(parts) > 4:
                 raise ValueError(f"malformed model key {key!r} in {path}")
-            app, plat, backend = parts
-            db.put(app, plat, RegressionModel.from_dict(d), backend=backend)
+            # Legacy files: 2-part (app, platform) and 3-part (+backend).
+            parts = parts + [""] * (4 - len(parts))
+            app, plat, backend, resource = parts
+            db.put(
+                app, plat, RegressionModel.from_dict(d),
+                backend=backend, resource=resource,
+            )
         return db

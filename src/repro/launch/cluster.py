@@ -53,7 +53,14 @@ def build_parser() -> argparse.ArgumentParser:
                     help="analytic-oracle runtime noise (lognormal sigma)")
     ap.add_argument("--seed", type=int, default=1)
     ap.add_argument("--oracle", default="analytic",
-                    choices=("analytic", "engine"))
+                    choices=("analytic", "engine", "engine-traced"),
+                    help="'engine-traced' wall-clocks the live engine "
+                         "through the telemetry path: completed jobs carry "
+                         "per-phase traces and the online refiner fits "
+                         "decomposed per-phase models")
+    ap.add_argument("--net-capacity", type=float, default=None,
+                    help="fabric bytes/s budget for the predict-resource "
+                         "policy (default: unconstrained = pure SJF)")
     ap.add_argument("--save-models", metavar="PATH",
                     help="persist the fitted ModelDatabase as JSON")
     ap.add_argument("--load-models", metavar="PATH",
@@ -66,8 +73,8 @@ def build_parser() -> argparse.ArgumentParser:
 
 def main(argv=None) -> None:
     args = build_parser().parse_args(argv)
-    if args.oracle == "engine":
-        oracle = EngineOracle()
+    if args.oracle in ("engine", "engine-traced"):
+        oracle = EngineOracle(traced=args.oracle == "engine-traced")
         print("[cluster] note: the engine oracle compiles every distinct "
               "(app, size, backend, M, R, W) once — predictive policies' "
               "bootstrap profiling alone is ~100+ compiles at the default "
@@ -104,6 +111,8 @@ def main(argv=None) -> None:
         kwargs: dict = {}
         if issubclass(POLICIES[name], PredictivePolicy):
             kwargs["seed"] = args.seed
+            if name == "predict-resource" and args.net_capacity is not None:
+                kwargs["net_capacity"] = args.net_capacity
             if args.load_models:
                 # Fresh copy per policy: online refits mutate the db, and
                 # a shared instance would make the comparison depend on

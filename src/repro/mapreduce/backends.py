@@ -170,6 +170,15 @@ class ShuffleBackend:
     def exchange(self, cfg, axis, keys, values, pvalid):
         raise NotImplementedError(f"{self.name} is not a collective shuffle")
 
+    def capacity_for(self, cfg, n_pairs: int) -> int:
+        """Per-partition slot capacity this backend will allocate for a job
+        with ``n_pairs`` total map-output pairs.  The telemetry layer reads
+        this to size its counters; must match what :meth:`partition` /
+        :meth:`exchange` actually use."""
+        return phases.partition_capacity(
+            n_pairs, cfg.num_reducers, cfg.capacity_factor
+        )
+
 
 class LexsortShuffle(ShuffleBackend):
     """Single-controller shuffle: global sort by (reducer, key) + scatter."""

@@ -36,6 +36,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time as _time
 from typing import Callable
 
 import jax
@@ -43,6 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.mapreduce import backends as _backends
+from repro.mapreduce import phases
 from repro.mapreduce.phases import PAD_KEY, map_phase, reduce_local, reduce_phase
 
 from repro.compat import shard_map as _shard_map
@@ -101,8 +103,85 @@ def _resolve_reduce_backend(app: MapReduceApp, cfg: JobConfig):
     return backend
 
 
+def build_stage_fns(app: MapReduceApp, cfg: JobConfig, input_len: int):
+    """The single-controller pipeline as separately-composable stage fns.
+
+    Returns ``(stages, meta)`` where ``stages`` maps phase name -> pure
+    function (``map``: tokens -> flat (keys, values, pvalid); ``shuffle``:
+    those -> (part_keys, part_vals, dropped); ``reduce``: partitions ->
+    (out_keys (R, C), out_vals (R, C))) and ``meta`` carries the static
+    shape facts telemetry and the cost estimator need (task/wave counts,
+    pair counts, partition capacity).
+
+    ``build_job`` composes the stages under one ``jit`` (the fused hot
+    path); the traced path jits each stage separately so phases can be
+    fenced and wall-clocked; ``telemetry.estimator`` lowers each stage to
+    read XLA's flops/bytes cost analysis per phase.
+    """
+    shuffle = _backends.get_shuffle_backend(cfg.shuffle_backend)
+    if shuffle.collective:
+        raise ValueError(
+            f"stage decomposition needs a single-controller shuffle; "
+            f"{shuffle.name!r} is a mesh collective"
+        )
+    reduce_backend = _resolve_reduce_backend(app, cfg)
+
+    M, R, W = cfg.num_mappers, cfg.num_reducers, cfg.num_workers
+    S = math.ceil(input_len / M)
+    waves_m = cfg.map_waves
+    M_pad = waves_m * W
+    P = S * app.pairs_per_token
+    n_pairs = M_pad * P
+
+    def stage_map(tokens):
+        if tokens.shape != (input_len,):
+            raise ValueError(
+                f"expected ({input_len},), got {tokens.shape}"
+            )
+        pad_to = M_pad * S
+        padded = jnp.full((pad_to,), 0, dtype=jnp.int32)
+        padded = padded.at[:input_len].set(tokens)
+        valid = (jnp.arange(pad_to) < input_len).reshape(waves_m, W, S)
+        splits = padded.reshape(waves_m, W, S)
+        keys, values, pvalid = map_phase(app, cfg, splits, valid)
+        return (
+            keys.reshape(n_pairs),
+            values.reshape(n_pairs),
+            pvalid.reshape(n_pairs),
+        )
+
+    def stage_shuffle(keys, values, pvalid):
+        return shuffle.partition(cfg, keys, values, pvalid)
+
+    def stage_reduce(part_keys, part_vals):
+        out_keys, out_vals = reduce_phase(
+            app, cfg, part_keys, part_vals, reduce_backend
+        )
+        return out_keys[:R], out_vals[:R]
+
+    meta = {
+        "input_len": input_len,
+        "mappers": M,
+        "reducers": R,
+        "workers": W,
+        "split_size": S,
+        "map_waves": waves_m,
+        "reduce_waves": cfg.reduce_waves,
+        "n_pairs": n_pairs,
+        "partition_capacity": shuffle.capacity_for(cfg, n_pairs),
+        "r_pad": cfg.reduce_waves * W,
+    }
+    stages = {
+        "map": stage_map,
+        "shuffle": stage_shuffle,
+        "reduce": stage_reduce,
+    }
+    return stages, meta
+
+
 def build_job(app: MapReduceApp, cfg: JobConfig, input_len: int,
-              mesh: jax.sharding.Mesh | None = None, axis: str = "workers"):
+              mesh: jax.sharding.Mesh | None = None, axis: str = "workers",
+              recorder=None):
     """Compile a full MapReduce job for one (app, config, input size).
 
     Returns jitted ``job(tokens (input_len,) int32) ->
@@ -112,9 +191,22 @@ def build_job(app: MapReduceApp, cfg: JobConfig, input_len: int,
     backend ("all_to_all") requires ``mesh`` and routes through
     :func:`build_job_sharded`; the default "lexsort" backend compiles the
     single-controller pipeline below.
+
+    ``recorder`` (optional) enables per-phase telemetry: any object with
+    the :class:`repro.telemetry.PhaseRecorder` protocol
+    (``start_job(app_name, cfg, input_len) -> trace`` where the trace has
+    ``record_phase(name, wall_s, **counters)`` / ``finish(total_s)``).
+    With a recorder the phases are jitted separately and each call of the
+    returned job appends one trace; with ``recorder=None`` (default) the
+    fused single-``jit`` path compiles — telemetry off costs nothing.
     """
     shuffle = _backends.get_shuffle_backend(cfg.shuffle_backend)
     if shuffle.collective:
+        if recorder is not None:
+            raise ValueError(
+                "per-phase telemetry is single-controller only; the "
+                "sharded path reports aggregate dropped counts instead"
+            )
         if mesh is None:
             raise ValueError(
                 f"shuffle backend {shuffle.name!r} is a mesh collective; "
@@ -127,38 +219,93 @@ def build_job(app: MapReduceApp, cfg: JobConfig, input_len: int,
             "single-controller; use shuffle_backend=\"all_to_all\" for a "
             "distributed job"
         )
-    reduce_backend = _resolve_reduce_backend(app, cfg)
-
-    M, R, W = cfg.num_mappers, cfg.num_reducers, cfg.num_workers
-    S = math.ceil(input_len / M)
-    waves_m = cfg.map_waves
-    M_pad = waves_m * W
-    P = S * app.pairs_per_token
+    stages, meta = build_stage_fns(app, cfg, input_len)
+    if recorder is not None:
+        return _build_job_traced(app, cfg, stages, meta, recorder)
 
     def job(tokens):
-        if tokens.shape != (input_len,):
-            raise ValueError(
-                f"expected ({input_len},), got {tokens.shape}"
-            )
-        pad_to = M_pad * S
-        padded = jnp.full((pad_to,), 0, dtype=jnp.int32)
-        padded = padded.at[:input_len].set(tokens)
-        valid = (jnp.arange(pad_to) < input_len).reshape(waves_m, W, S)
-        splits = padded.reshape(waves_m, W, S)
-        keys, values, pvalid = map_phase(app, cfg, splits, valid)
-        n_pairs = M_pad * P
-        part_keys, part_vals, dropped = shuffle.partition(
-            cfg,
-            keys.reshape(n_pairs),
-            values.reshape(n_pairs),
-            pvalid.reshape(n_pairs),
+        keys, values, pvalid = stages["map"](tokens)
+        part_keys, part_vals, dropped = stages["shuffle"](
+            keys, values, pvalid
         )
-        out_keys, out_vals = reduce_phase(
-            app, cfg, part_keys, part_vals, reduce_backend
-        )
-        return out_keys[:R], out_vals[:R], dropped
+        out_keys, out_vals = stages["reduce"](part_keys, part_vals)
+        return out_keys, out_vals, dropped
 
     return jax.jit(job)
+
+
+def _build_job_traced(app, cfg, stages, meta, recorder):
+    """Phase-fenced execution: jit each stage, wall-clock + count each phase.
+
+    Counters are measured from the actual stage outputs (host-side numpy
+    reductions), so conservation laws are checkable invariants rather than
+    config-derived tautologies.  See ``repro.telemetry.trace``.
+    """
+    jit_map = jax.jit(stages["map"])
+    jit_shuffle = jax.jit(stages["shuffle"])
+    jit_reduce = jax.jit(stages["reduce"])
+    pair_bytes = phases.PAIR_BYTES
+
+    def job(tokens):
+        trace = recorder.start_job(app.name, cfg, meta["input_len"])
+        try:
+            return _run(tokens, trace)
+        except Exception:
+            # A failed run must not leave a phantom/partial trace for
+            # recorder.last / take_trace consumers to misread as complete.
+            if trace in recorder.traces:
+                recorder.traces.remove(trace)
+            raise
+
+    def _run(tokens, trace):
+        t_job = _time.perf_counter()
+
+        t0 = _time.perf_counter()
+        keys, values, pvalid = jax.block_until_ready(jit_map(tokens))
+        dt = _time.perf_counter() - t0
+        pairs_emitted = int(np.asarray(pvalid).sum())
+        trace.record_phase(
+            "map", dt,
+            tasks=meta["mappers"], waves=meta["map_waves"],
+            records_in=meta["input_len"],
+            pairs_emitted=pairs_emitted, pairs_capacity=meta["n_pairs"],
+        )
+
+        t0 = _time.perf_counter()
+        part_keys, part_vals, dropped = jax.block_until_ready(
+            jit_shuffle(keys, values, pvalid)
+        )
+        dt = _time.perf_counter() - t0
+        n_dropped = int(dropped)
+        pairs_out = int((np.asarray(part_keys) != int(PAD_KEY)).sum())
+        trace.record_phase(
+            "shuffle", dt,
+            pairs_in=pairs_emitted, pairs_out=pairs_out,
+            pairs_dropped=n_dropped,
+            bytes_in=pairs_emitted * pair_bytes,
+            bytes_out=pairs_out * pair_bytes,
+            bytes_dropped=n_dropped * pair_bytes,
+            partitions=meta["reducers"],
+            partition_capacity=meta["partition_capacity"],
+        )
+
+        t0 = _time.perf_counter()
+        out_keys, out_vals = jax.block_until_ready(
+            jit_reduce(part_keys, part_vals)
+        )
+        dt = _time.perf_counter() - t0
+        segments = int((np.asarray(out_keys) != int(PAD_KEY)).sum())
+        trace.record_phase(
+            "reduce", dt,
+            tasks=meta["reducers"], waves=meta["reduce_waves"],
+            segments_out=segments,
+            segment_slots=meta["r_pad"] * meta["partition_capacity"],
+        )
+
+        trace.finish(_time.perf_counter() - t_job)
+        return out_keys, out_vals, dropped
+
+    return job
 
 
 # ---------------------------------------------------------------------------

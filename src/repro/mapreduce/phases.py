@@ -28,6 +28,17 @@ import jax.numpy as jnp
 
 PAD_KEY = jnp.iinfo(jnp.int32).max  # sorts to the end
 
+#: bytes per (key, value) pair moving between phases: two int32s.  The
+#: telemetry layer's byte counters (shuffle bytes_in/out/dropped) are pair
+#: counts scaled by this, so conservation in pairs and bytes coincide.
+PAIR_BYTES = 8
+
+
+def count_live(keys) -> jnp.ndarray:
+    """Number of live (non-PAD) slots in a key array — the counter primitive
+    shared by the telemetry layer and the conservation tests."""
+    return (jnp.asarray(keys) != PAD_KEY).sum()
+
 
 def task_setup(dim: int, rounds: int, seed_val):
     """Fixed per-task startup compute — the JVM-start analogue.

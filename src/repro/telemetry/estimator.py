@@ -1,0 +1,79 @@
+"""Static per-phase flops/bytes estimates from XLA's cost analysis.
+
+Wall-clock telemetry (``trace.py``) answers "what did this run cost"; this
+module answers "what does XLA *think* each phase costs" — without running
+anything.  Each pipeline stage from
+:func:`repro.mapreduce.engine.build_stage_fns` is lowered and compiled for
+abstract (shape-only) inputs, and the compiled executable's cost analysis
+(flops, bytes accessed) is read through the version-compat shim
+:func:`repro.compat.compiled_cost_analysis`.
+
+The estimates feed two consumers:
+
+* the ``phases`` benchmark section reports them next to measured wall
+  times, giving a roofline-style sanity check per phase;
+* arithmetic-intensity ratios (flops/byte) distinguish compute-bound
+  phases (map's per-task setup matmuls) from memory/sort-bound ones
+  (shuffle), which is the qualitative split the paper's companion CPU- and
+  network-modeling papers draw.
+
+Cost analysis availability varies by backend/jax version; estimates carry
+an ``available`` flag and all consumers degrade gracefully.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.compat import compiled_cost_analysis
+from repro.mapreduce.engine import build_stage_fns
+
+#: cost_analysis key for bytes moved (XLA's name, with fallbacks).
+_BYTES_KEYS = ("bytes accessed", "bytes_accessed")
+
+
+def _pick(cost: dict, *keys, default: float = 0.0) -> float:
+    for k in keys:
+        if k in cost:
+            return float(cost[k])
+    return default
+
+
+def stage_cost_estimates(app, cfg, input_len: int) -> dict[str, dict]:
+    """Per-phase {flops, bytes, flops_per_byte, available} via XLA.
+
+    Phases are the engine's compute stages (map, shuffle, reduce); collect
+    is host-side and has no XLA program.  ``available=False`` (with zeroed
+    numbers) means the backend reported no cost model for that stage.
+    """
+    stages, meta = build_stage_fns(app, cfg, input_len)
+    i32 = jnp.int32
+    tok = jax.ShapeDtypeStruct((input_len,), i32)
+    flat = jax.ShapeDtypeStruct((meta["n_pairs"],), i32)
+    flat_b = jax.ShapeDtypeStruct((meta["n_pairs"],), jnp.bool_)
+    part = jax.ShapeDtypeStruct(
+        (meta["r_pad"], meta["partition_capacity"]), i32
+    )
+    abstract_args = {
+        "map": (tok,),
+        "shuffle": (flat, flat, flat_b),
+        "reduce": (part, part),
+    }
+    out: dict[str, dict] = {}
+    for phase, fn in stages.items():
+        cost = compiled_cost_analysis(fn, *abstract_args[phase])
+        flops = _pick(cost, "flops")
+        nbytes = _pick(cost, *_BYTES_KEYS)
+        out[phase] = {
+            "flops": flops,
+            "bytes": nbytes,
+            "flops_per_byte": flops / nbytes if nbytes > 0 else 0.0,
+            "available": bool(cost),
+        }
+    return out
+
+
+def estimates_available(estimates: dict[str, dict]) -> bool:
+    """True when at least one phase reported a real XLA cost model."""
+    return any(e.get("available") for e in estimates.values())

@@ -1,0 +1,265 @@
+"""Per-phase execution traces: the observability substrate.
+
+A :class:`JobTrace` is one job execution decomposed into the engine's four
+phases (map → shuffle → reduce → collect), each carrying a wall time and a
+dict of resource counters (records/pairs moved, shuffle bytes, spill/drop
+accounting, wave counts, segment-reduce work).  A :class:`PhaseRecorder`
+accumulates traces across runs — thread one through
+:func:`repro.mapreduce.build_job` via its ``recorder=`` argument and every
+call of the returned job appends a trace.
+
+Telemetry is strictly opt-in: with ``recorder=None`` (the default) the
+engine compiles the usual fused pipeline and pays zero overhead.  With a
+recorder, the pipeline is compiled as separately-jitted stages so each
+phase can be fenced (``block_until_ready``) and wall-clocked — same
+semantics, same outputs, slightly different timing profile (three dispatches
+instead of one), which is why traced time is recorded per phase *and* as an
+outer total.
+
+Counters are computed from the actual phase outputs, not from the
+configuration, so conservation laws are real invariants:
+
+* ``shuffle.bytes_in == shuffle.bytes_out + shuffle.bytes_dropped``
+* ``map.pairs_emitted == shuffle.pairs_in``
+* per-phase wall times sum to ~the outer job wall time.
+
+``JobTrace.check_conservation`` verifies all of them and returns the list
+of violations (empty = healthy); the per-backend property tests in
+``tests/test_telemetry.py`` assert it stays empty for every reduce backend.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Iterable
+
+# One source of truth for the pair wire size (int32 key + int32 value):
+# the engine's measured counters and the oracles' analytic counters must
+# use the same constant or shuffle-bytes models silently diverge.
+from repro.mapreduce.phases import PAIR_BYTES
+
+__all__ = [
+    "PAIR_BYTES",
+    "PhaseStats",
+    "JobTrace",
+    "PhaseRecorder",
+    "collect_traced",
+]
+
+
+@dataclasses.dataclass
+class PhaseStats:
+    """One phase of one job execution: wall time + resource counters."""
+
+    phase: str
+    wall_s: float
+    counters: dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def to_dict(self) -> dict:
+        return {
+            "phase": self.phase,
+            "wall_s": self.wall_s,
+            "counters": dict(self.counters),
+        }
+
+
+@dataclasses.dataclass
+class JobTrace:
+    """One job execution, decomposed per phase.
+
+    ``config`` carries the JobConfig fields plus ``input_len`` and the app
+    name, so a trace is self-describing (it IS one row of the paper's
+    experiment set, with the total broken into its parts).
+    """
+
+    app: str
+    config: dict
+    phases: list[PhaseStats] = dataclasses.field(default_factory=list)
+    total_s: float | None = None
+
+    # ---- recording (the engine-facing protocol) -------------------------
+
+    def record_phase(self, phase: str, wall_s: float, **counters) -> None:
+        self.phases.append(
+            PhaseStats(
+                phase=phase,
+                wall_s=float(wall_s),
+                counters={k: float(v) for k, v in counters.items()},
+            )
+        )
+
+    def finish(self, total_s: float) -> None:
+        self.total_s = float(total_s)
+
+    # ---- queries --------------------------------------------------------
+
+    def phase(self, name: str) -> PhaseStats:
+        for p in self.phases:
+            if p.phase == name:
+                return p
+        raise KeyError(
+            f"no phase {name!r} in trace; recorded: "
+            f"{[p.phase for p in self.phases]}"
+        )
+
+    def phase_names(self) -> list[str]:
+        return [p.phase for p in self.phases]
+
+    def phase_times(self) -> dict[str, float]:
+        return {p.phase: p.wall_s for p in self.phases}
+
+    def phase_time_sum(self) -> float:
+        return sum(p.wall_s for p in self.phases)
+
+    def counter(self, phase: str, name: str, default: float = 0.0) -> float:
+        return self.phase(phase).counters.get(name, default)
+
+    # ---- invariants ------------------------------------------------------
+
+    def check_conservation(
+        self, *, time_rel_tol: float = 0.5, time_abs_tol: float = 0.1
+    ) -> list[str]:
+        """Verify counter conservation laws; return violations (empty = ok).
+
+        Byte/pair conservation is exact (counters are integers measured from
+        the actual arrays).  The timing check is tolerant: per-phase fencing
+        measures the same work as the outer total but adds host-side counter
+        reads between phases, so the sum is compared within
+        ``max(time_rel_tol * total, time_abs_tol)`` seconds.
+        """
+        bad: list[str] = []
+        names = set(self.phase_names())
+        if "shuffle" in names:
+            c = self.phase("shuffle").counters
+            if c.get("bytes_in") != c.get("bytes_out", 0.0) + c.get(
+                "bytes_dropped", 0.0
+            ):
+                bad.append(
+                    "shuffle bytes_in != bytes_out + bytes_dropped "
+                    f"({c.get('bytes_in')} != {c.get('bytes_out')} + "
+                    f"{c.get('bytes_dropped')})"
+                )
+            if c.get("pairs_in") != c.get("pairs_out", 0.0) + c.get(
+                "pairs_dropped", 0.0
+            ):
+                bad.append("shuffle pairs_in != pairs_out + pairs_dropped")
+            if "map" in names:
+                emitted = self.counter("map", "pairs_emitted")
+                if emitted != c.get("pairs_in"):
+                    bad.append(
+                        f"map pairs_emitted {emitted} != shuffle pairs_in "
+                        f"{c.get('pairs_in')}"
+                    )
+        if self.total_s is not None and self.phases:
+            gap = abs(self.total_s - self.phase_time_sum())
+            if gap > max(time_rel_tol * self.total_s, time_abs_tol):
+                bad.append(
+                    f"phase times sum {self.phase_time_sum():.4f}s far from "
+                    f"total {self.total_s:.4f}s"
+                )
+        return bad
+
+    # ---- (de)serialization ----------------------------------------------
+
+    def to_dict(self) -> dict:
+        return {
+            "app": self.app,
+            "config": dict(self.config),
+            "total_s": self.total_s,
+            "phases": [p.to_dict() for p in self.phases],
+        }
+
+    @staticmethod
+    def from_dict(d: dict) -> "JobTrace":
+        return JobTrace(
+            app=d["app"],
+            config=dict(d["config"]),
+            total_s=d.get("total_s"),
+            phases=[
+                PhaseStats(
+                    phase=p["phase"],
+                    wall_s=float(p["wall_s"]),
+                    counters=dict(p["counters"]),
+                )
+                for p in d.get("phases", ())
+            ],
+        )
+
+
+class PhaseRecorder:
+    """Accumulates :class:`JobTrace` objects across job executions.
+
+    The engine only uses the narrow protocol ``start_job(...) -> trace`` +
+    ``trace.record_phase/finish`` (duck-typed, so the engine never imports
+    this package).  Everything else here is analysis convenience.
+
+    ``max_traces`` bounds retention (oldest dropped first) for long-lived
+    recorders whose consumers only read recent traces — e.g. a traced
+    cluster oracle executing thousands of profiling runs but handing only
+    ``last`` to the scheduler.  ``None`` (default) keeps everything, which
+    is what profiling harnesses that aggregate over all traces want.
+    """
+
+    def __init__(self, max_traces: int | None = None) -> None:
+        if max_traces is not None and max_traces < 1:
+            raise ValueError("max_traces must be >= 1")
+        self.max_traces = max_traces
+        self.traces: list[JobTrace] = []
+
+    def __len__(self) -> int:
+        return len(self.traces)
+
+    @property
+    def last(self) -> JobTrace:
+        if not self.traces:
+            raise IndexError("no traces recorded yet")
+        return self.traces[-1]
+
+    def start_job(self, app_name: str, cfg, input_len: int) -> JobTrace:
+        config = dataclasses.asdict(cfg)
+        config["input_len"] = int(input_len)
+        trace = JobTrace(app=app_name, config=config)
+        self.traces.append(trace)
+        if self.max_traces is not None and len(self.traces) > self.max_traces:
+            del self.traces[: len(self.traces) - self.max_traces]
+        return trace
+
+    def clear(self) -> None:
+        self.traces.clear()
+
+    def mean_phase_times(
+        self, traces: Iterable[JobTrace] | None = None
+    ) -> dict[str, float]:
+        """Mean wall time per phase over ``traces`` (default: all)."""
+        traces = list(self.traces if traces is None else traces)
+        if not traces:
+            return {}
+        acc: dict[str, list[float]] = {}
+        for t in traces:
+            for p in t.phases:
+                acc.setdefault(p.phase, []).append(p.wall_s)
+        return {k: sum(v) / len(v) for k, v in acc.items()}
+
+
+def collect_traced(trace: JobTrace, out_keys, out_vals) -> dict[int, int]:
+    """Host-side collect phase, recorded into ``trace`` as phase 4.
+
+    The engine's job output stops at the reduce partitions; gathering the
+    (key -> value) dict is the collect phase, timed and counted here so a
+    trace covers the full map → shuffle → reduce → collect pipeline.
+    """
+    from repro.mapreduce.engine import collect_results
+
+    t0 = time.perf_counter()
+    result = collect_results(out_keys, out_vals)
+    wall = time.perf_counter() - t0
+    trace.record_phase(
+        "collect",
+        wall,
+        unique_keys=len(result),
+        bytes_out=len(result) * PAIR_BYTES,
+    )
+    if trace.total_s is not None:
+        trace.finish(trace.total_s + wall)
+    return result

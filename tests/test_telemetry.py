@@ -1,0 +1,402 @@
+"""Telemetry layer: traced execution, counter conservation, decomposed
+models, resource-qualified ModelDatabase keys, XLA cost estimates."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.predictor import ModelDatabase
+from repro.core.regression import fit
+from repro.mapreduce import (
+    JobConfig,
+    REDUCE_BACKENDS,
+    build_job,
+    collect_results,
+    wordcount,
+    wordcount_corpus,
+)
+from repro.mapreduce.phases import PAIR_BYTES, count_live
+from repro.telemetry import (
+    JobTrace,
+    PhaseRecorder,
+    PhaseModelSet,
+    collect_traced,
+    composed_vs_monolithic,
+    fit_phase_models,
+    phase_resource_key,
+    split_resource_key,
+    stage_cost_estimates,
+    targets_from_traces,
+)
+
+ALL_REDUCE = sorted(REDUCE_BACKENDS)
+
+
+def traced_run(app, corpus, *, collect=False, **cfg_kwargs):
+    """One traced execution; returns (trace, job output)."""
+    recorder = PhaseRecorder()
+    cfg = JobConfig(**cfg_kwargs)
+    job = build_job(app, cfg, len(corpus), recorder=recorder)
+    out = job(corpus)
+    trace = recorder.last
+    if collect:
+        collect_traced(trace, out[0], out[1])
+    return trace, out
+
+
+class TestTracedExecution:
+    def test_traced_output_matches_fused(self):
+        corpus = wordcount_corpus(3000, vocab_size=211, seed=1)
+        app = wordcount(211)
+        kw = dict(num_mappers=5, num_reducers=4, capacity_factor=8.0)
+        fused = build_job(app, JobConfig(**kw), len(corpus))(corpus)
+        trace, traced = traced_run(app, corpus, **kw)
+        assert collect_results(*fused[:2]) == collect_results(*traced[:2])
+        assert int(fused[2]) == int(traced[2])
+        assert trace.phase_names() == ["map", "shuffle", "reduce"]
+
+    def test_recorder_accumulates_per_call(self):
+        corpus = wordcount_corpus(1000, vocab_size=64, seed=0)
+        app = wordcount(64)
+        recorder = PhaseRecorder()
+        job = build_job(app, JobConfig(num_mappers=2, num_reducers=2),
+                        len(corpus), recorder=recorder)
+        for _ in range(3):
+            job(corpus)
+        assert len(recorder) == 3
+        assert recorder.last is recorder.traces[-1]
+
+    def test_trace_counters_measured_not_config_derived(self):
+        corpus = wordcount_corpus(2000, vocab_size=97, seed=2)
+        app = wordcount(97)
+        trace, (ok, ov, dropped) = traced_run(
+            app, corpus, num_mappers=4, num_reducers=3, capacity_factor=8.0
+        )
+        assert trace.counter("map", "pairs_emitted") == 2000
+        assert trace.counter("shuffle", "pairs_out") == 2000 - int(dropped)
+        assert trace.counter("shuffle", "bytes_out") == (
+            trace.counter("shuffle", "pairs_out") * PAIR_BYTES
+        )
+        assert trace.counter("reduce", "segments_out") == float(
+            count_live(ok)
+        )
+
+    def test_collect_traced_appends_phase(self):
+        corpus = wordcount_corpus(1000, vocab_size=64, seed=0)
+        app = wordcount(64)
+        trace, _ = traced_run(
+            app, corpus, collect=True, num_mappers=2, num_reducers=2,
+            capacity_factor=8.0,
+        )
+        assert trace.phase_names() == ["map", "shuffle", "reduce", "collect"]
+        assert trace.counter("collect", "unique_keys") > 0
+
+    def test_recorder_rejected_on_collective_shuffle(self):
+        cfg = JobConfig(num_mappers=2, num_reducers=2,
+                        shuffle_backend="all_to_all")
+        with pytest.raises(ValueError, match="single-controller"):
+            build_job(wordcount(16), cfg, 100, recorder=PhaseRecorder())
+
+    def test_phase_times_sum_to_total(self):
+        corpus = wordcount_corpus(4000, vocab_size=211, seed=3)
+        app = wordcount(211)
+        trace, _ = traced_run(
+            app, corpus, num_mappers=6, num_reducers=5, capacity_factor=8.0
+        )
+        assert trace.total_s is not None
+        assert trace.phase_time_sum() <= trace.total_s * 1.01
+        assert abs(trace.total_s - trace.phase_time_sum()) <= max(
+            0.5 * trace.total_s, 0.1
+        )
+
+
+class TestConservation:
+    @pytest.mark.parametrize("backend", ALL_REDUCE)
+    def test_no_overflow_conserves(self, backend):
+        corpus = wordcount_corpus(1500, vocab_size=97, seed=4)
+        trace, _ = traced_run(
+            wordcount(97), corpus, num_mappers=4, num_reducers=3,
+            capacity_factor=8.0, reduce_backend=backend,
+        )
+        assert trace.check_conservation() == []
+        assert trace.counter("shuffle", "pairs_dropped") == 0
+
+    @pytest.mark.parametrize("backend", ALL_REDUCE)
+    def test_overflow_accounted_in_bytes(self, backend):
+        corpus = np.zeros(600, dtype=np.int32)  # one key: max skew
+        trace, (_, _, dropped) = traced_run(
+            wordcount(16), corpus, num_mappers=2, num_reducers=4,
+            capacity_factor=1.0, reduce_backend=backend,
+        )
+        assert int(dropped) > 0
+        assert trace.counter("shuffle", "bytes_dropped") == (
+            int(dropped) * PAIR_BYTES
+        )
+        assert trace.check_conservation() == []
+
+    def test_counters_identical_across_reduce_backends(self):
+        corpus = wordcount_corpus(1200, vocab_size=64, seed=5)
+        app = wordcount(64)
+        per_backend = {}
+        for backend in ALL_REDUCE:
+            trace, _ = traced_run(
+                app, corpus, collect=True, num_mappers=5, num_reducers=4,
+                capacity_factor=4.0, reduce_backend=backend,
+            )
+            per_backend[backend] = {
+                p.phase: dict(p.counters) for p in trace.phases
+            }
+        ref = per_backend[ALL_REDUCE[0]]
+        for backend, counters in per_backend.items():
+            assert counters == ref, backend
+
+    @given(
+        n=st.integers(300, 1500),
+        m=st.integers(1, 8),
+        r=st.integers(1, 8),
+        vocab=st.integers(2, 48),
+        capf=st.sampled_from([1.0, 2.0, 8.0]),
+    )
+    @settings(max_examples=6, deadline=None)
+    def test_property_conservation_all_backends(self, n, m, r, vocab, capf):
+        corpus = wordcount_corpus(n, vocab_size=vocab, seed=n + m + r)
+        app = wordcount(vocab)
+        per_backend = {}
+        for backend in ALL_REDUCE:
+            trace, (_, _, dropped) = traced_run(
+                app, corpus, num_mappers=m, num_reducers=r,
+                capacity_factor=capf, reduce_backend=backend,
+            )
+            assert trace.check_conservation() == [], backend
+            assert (
+                trace.counter("shuffle", "pairs_out") + int(dropped) == n
+            ), backend
+            per_backend[backend] = {
+                p.phase: dict(p.counters) for p in trace.phases
+            }
+        ref = per_backend[ALL_REDUCE[0]]
+        assert all(c == ref for c in per_backend.values())
+
+    def test_check_conservation_flags_violations(self):
+        trace = JobTrace(app="x", config={})
+        trace.record_phase("map", 0.0, pairs_emitted=10)
+        trace.record_phase(
+            "shuffle", 0.0, pairs_in=10, pairs_out=3, pairs_dropped=2,
+            bytes_in=80, bytes_out=24, bytes_dropped=16,
+        )
+        bad = trace.check_conservation()
+        assert any("bytes" in b for b in bad)
+        assert any("pairs" in b for b in bad)
+
+    def test_trace_round_trips_through_dict(self):
+        corpus = wordcount_corpus(800, vocab_size=32, seed=6)
+        trace, _ = traced_run(
+            wordcount(32), corpus, collect=True, num_mappers=2,
+            num_reducers=2, capacity_factor=8.0,
+        )
+        clone = JobTrace.from_dict(trace.to_dict())
+        assert clone.phase_times() == trace.phase_times()
+        assert clone.config == trace.config
+        assert clone.check_conservation() == []
+
+
+class TestEstimator:
+    def test_estimates_cover_compute_phases(self):
+        app = wordcount(64)
+        cfg = JobConfig(num_mappers=4, num_reducers=4, capacity_factor=4.0)
+        est = stage_cost_estimates(app, cfg, 1024)
+        assert set(est) == {"map", "shuffle", "reduce"}
+        for phase, e in est.items():
+            assert e["flops"] >= 0 and e["bytes"] >= 0, phase
+            assert isinstance(e["available"], bool)
+            if e["available"]:
+                assert e["bytes"] > 0, phase
+
+    def test_more_setup_rounds_cost_more_map_flops(self):
+        app = wordcount(64)
+        small = stage_cost_estimates(
+            app, JobConfig(num_mappers=4, num_reducers=4, setup_rounds=1),
+            1024,
+        )
+        big = stage_cost_estimates(
+            app, JobConfig(num_mappers=4, num_reducers=4, setup_rounds=16),
+            1024,
+        )
+        if small["map"]["available"] and big["map"]["available"]:
+            assert big["map"]["flops"] > small["map"]["flops"]
+
+
+def synthetic_phase_data(n=25, seed=0):
+    """Analytic per-phase targets over a 2-param config space."""
+    rng = np.random.default_rng(seed)
+    params = rng.uniform(5, 40, size=(n, 2))
+    m, r = params[:, 0], params[:, 1]
+    times = {
+        "map": 0.2 + 0.01 * m + 1e-4 * m**2,
+        "shuffle": 0.5 + 0.02 * r,
+        "reduce": 0.1 + 30.0 / r,
+    }
+    targets = {(p, "time_s"): v for p, v in times.items()}
+    targets[("shuffle", "bytes_out")] = 8000.0 + 10.0 * r
+    return params, targets
+
+
+class TestPhaseModels:
+    def test_resource_key_round_trip(self):
+        key = phase_resource_key("shuffle", "bytes_out")
+        assert key == "shuffle:bytes_out"
+        assert split_resource_key(key) == ("shuffle", "bytes_out")
+        with pytest.raises(ValueError):
+            phase_resource_key("a:b", "c")
+        with pytest.raises(ValueError):
+            split_resource_key("no-separator")
+
+    def test_composed_equals_monolithic_on_shared_basis(self):
+        params, targets = synthetic_phase_data()
+        pms = fit_phase_models(params, targets)
+        totals = sum(
+            targets[(p, "time_s")] for p in ("map", "shuffle", "reduce")
+        )
+        mono = fit(params, totals)
+        stats = composed_vs_monolithic(pms, mono, params, totals)
+        assert stats["composed_le_monolithic"]
+        np.testing.assert_allclose(
+            pms.predict_total(params),
+            np.asarray(mono.predict(params)).ravel(),
+            rtol=1e-6, atol=1e-9,
+        )
+
+    def test_predict_total_sums_phases(self):
+        params, targets = synthetic_phase_data()
+        pms = fit_phase_models(params, targets)
+        assert pms.time_phases() == ["map", "shuffle", "reduce"]
+        per_phase = pms.predict_phase_times(params)
+        np.testing.assert_allclose(
+            pms.predict_total(params),
+            np.sum(list(per_phase.values()), axis=0),
+        )
+
+    def test_resource_model_not_in_total(self):
+        params, targets = synthetic_phase_data()
+        pms = fit_phase_models(params, targets)
+        bytes_pred = pms.predict("shuffle", "bytes_out", params)
+        assert bytes_pred.mean() > 1000  # bytes scale, not seconds
+        assert pms.predict_total(params).mean() < 100
+
+    def test_publish_and_load_via_database(self, tmp_path):
+        params, targets = synthetic_phase_data()
+        pms = fit_phase_models(params, targets)
+        db = ModelDatabase()
+        db.put("wc", "plat", fit(params, targets[("map", "time_s")]))
+        pms.publish(db, "wc", "plat", backend="jnp")
+        assert set(db.resources_for("wc", "plat", "jnp")) == {
+            "map:time_s", "shuffle:time_s", "reduce:time_s",
+            "shuffle:bytes_out",
+        }
+        # resource keys don't leak into the backend enumeration
+        assert db.backends_for("wc", "plat") == [""]
+
+        path = str(tmp_path / "db.json")
+        db.save(path)
+        loaded = ModelDatabase.load(path)
+        assert len(loaded) == len(db)
+        pms2 = PhaseModelSet.load(loaded, "wc", "plat", backend="jnp")
+        np.testing.assert_allclose(
+            pms2.predict_total(params), pms.predict_total(params),
+            rtol=1e-12,
+        )
+
+    def test_targets_from_traces_means_repeats(self):
+        def mk(t_map, nbytes):
+            tr = JobTrace(app="wc", config={})
+            tr.record_phase("map", t_map, pairs_emitted=100)
+            tr.record_phase(
+                "shuffle", 0.5, pairs_in=100, pairs_out=100,
+                pairs_dropped=0, bytes_in=800, bytes_out=nbytes,
+                bytes_dropped=800 - nbytes,
+            )
+            tr.record_phase("reduce", 0.1, segments_out=10)
+            return tr
+
+        targets = targets_from_traces(
+            [[mk(1.0, 800), mk(3.0, 800)], [mk(2.0, 400), mk(2.0, 400)]]
+        )
+        np.testing.assert_allclose(
+            targets[("map", "time_s")], [2.0, 2.0]
+        )
+        np.testing.assert_allclose(
+            targets[("shuffle", "bytes_out")], [800.0, 400.0]
+        )
+
+    def test_fit_phase_models_shape_mismatch_rejected(self):
+        params, targets = synthetic_phase_data()
+        targets[("map", "time_s")] = targets[("map", "time_s")][:-1]
+        with pytest.raises(ValueError, match="shape"):
+            fit_phase_models(params, targets)
+
+
+class TestDatabaseResourceKeys:
+    def test_legacy_two_and_three_part_keys_load(self, tmp_path):
+        import json
+
+        params = np.random.default_rng(0).uniform(1, 40, size=(20, 2))
+        model = fit(params, params.sum(axis=1))
+        payload = {
+            "wc\x00plat": model.to_dict(),
+            "wc\x00plat\x00jnp": model.to_dict(),
+        }
+        path = tmp_path / "legacy.json"
+        path.write_text(json.dumps(payload))
+        db = ModelDatabase.load(str(path))
+        assert ("wc", "plat") in db
+        assert ("wc", "plat", "jnp") in db
+        assert ("wc", "plat", "jnp", "") in db
+        assert db.resources_for("wc", "plat", "jnp") == []
+
+    def test_resourceless_save_format_unchanged(self, tmp_path):
+        import json
+
+        params = np.random.default_rng(0).uniform(1, 40, size=(20, 2))
+        db = ModelDatabase()
+        db.put("wc", "plat", fit(params, params.sum(axis=1)), backend="jnp")
+        path = str(tmp_path / "db.json")
+        db.save(path)
+        keys = list(json.load(open(path)))
+        assert keys == ["wc\x00plat\x00jnp"]  # PR 2 wire format
+
+    def test_get_error_names_resource(self):
+        db = ModelDatabase()
+        with pytest.raises(KeyError, match="resource='map:time_s'"):
+            db.get("wc", "plat", "jnp", resource="map:time_s")
+
+
+class TestRecorderRetention:
+    def test_max_traces_bounds_retention(self):
+        rec = PhaseRecorder(max_traces=3)
+        cfg = JobConfig(num_mappers=1, num_reducers=1)
+        traces = [rec.start_job("wc", cfg, 10) for _ in range(7)]
+        assert len(rec) == 3
+        assert rec.traces == traces[-3:]
+        with pytest.raises(ValueError, match="max_traces"):
+            PhaseRecorder(max_traces=0)
+
+    def test_pair_bytes_single_source(self):
+        from repro.mapreduce import phases
+        from repro import telemetry
+
+        assert telemetry.PAIR_BYTES is phases.PAIR_BYTES
+
+
+class TestTracedFailureCleanup:
+    def test_failed_run_leaves_no_phantom_trace(self):
+        corpus = wordcount_corpus(1000, vocab_size=64, seed=0)
+        app = wordcount(64)
+        recorder = PhaseRecorder()
+        job = build_job(app, JobConfig(num_mappers=2, num_reducers=2),
+                        len(corpus), recorder=recorder)
+        job(corpus)
+        assert len(recorder) == 1
+        with pytest.raises(ValueError, match="expected"):
+            job(corpus[:-10])  # wrong shape: fails inside the map stage
+        assert len(recorder) == 1  # no phantom/partial trace retained
+        assert recorder.last.total_s is not None
