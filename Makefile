@@ -3,8 +3,8 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast bench-quick bench-backends bench-cluster \
-	bench-phases lint
+.PHONY: test test-fast test-elastic bench-quick bench-backends \
+	bench-cluster bench-phases bench-elastic lint
 
 # Tier-1 verify (ROADMAP.md).
 test:
@@ -23,6 +23,11 @@ lint:
 test-fast:
 	$(PYTHON) -m pytest -x -q -m "not slow"
 
+# Just the elastic subsystem (resumable engine, snapshots, regrant
+# scheduling); skips the slow wave-stepping EngineOracle tests.
+test-elastic:
+	$(PYTHON) -m pytest -x -q -m "not slow" tests/test_elastic.py
+
 # Full benchmark harness at reduced size.  BENCH_FLAGS passes extra
 # harness args (e.g. the CI bench-smoke job's tiny --tokens grid).
 bench-quick:
@@ -39,3 +44,7 @@ bench-cluster:
 # Just the per-phase telemetry + decomposed-models section.
 bench-phases:
 	$(PYTHON) -m benchmarks.run --quick --sections phases
+
+# Just the elastic regrant-scheduling comparison.
+bench-elastic:
+	$(PYTHON) -m benchmarks.run --quick --sections elastic

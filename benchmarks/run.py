@@ -10,6 +10,7 @@ Sections (CSV rows on stdout):
   backends— beyond-paper: reduce-backend (jnp/pallas/xla) timing comparison
   phases  — beyond-paper: per-phase telemetry, composed-vs-monolithic models
   cluster — beyond-paper: predictive multi-job scheduling vs FIFO baseline
+  elastic — beyond-paper: preemptive regrant scheduling vs admission-only
   roofline— §Roofline table from the dry-run artifacts
   kernels — per-kernel microbench (us/call, interpret mode)
 
@@ -32,7 +33,7 @@ import time
 
 ALL_SECTIONS = (
     "table1", "fig3", "fig4", "tuner", "backends", "phases", "cluster",
-    "roofline", "kernels",
+    "elastic", "roofline", "kernels",
 )
 
 
@@ -129,6 +130,9 @@ def run_section(sec: str, tokens: int, repeats: int):
     if sec == "cluster":
         from benchmarks import cluster_bench
         return cluster_bench.main(tokens, repeats)
+    if sec == "elastic":
+        from benchmarks import elastic_bench
+        return elastic_bench.main(tokens, repeats)
     if sec == "roofline":
         from benchmarks import roofline
         return roofline.main(), None

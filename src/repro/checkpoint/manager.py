@@ -40,6 +40,32 @@ def _flatten_with_paths(tree):
     return leaves, treedef
 
 
+def _dict_key_paths(tree) -> list[list[str]] | None:
+    """Leaf key-paths for pure nested-dict trees (leaf order = flatten
+    order), or None when the tree mixes in other containers.
+
+    Stored in the manifest so :meth:`CheckpointManager.restore` can
+    rebuild the tree without a ``like`` template — which is what the
+    elastic snapshot layer needs: a resuming job learns its buffer shapes
+    *from* the checkpoint (they depend on the grant the job held when it
+    was preempted), so it cannot supply them up front.
+    """
+    paths_leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    paths: list[list[str]] = []
+    for path, _leaf in paths_leaves:
+        if not path:
+            return None   # bare leaf at the root: no dict to rebuild
+        keys = []
+        for entry in path:
+            if not isinstance(entry, jax.tree_util.DictKey) or not isinstance(
+                entry.key, str
+            ):
+                return None
+            keys.append(entry.key)
+        paths.append(keys)
+    return paths
+
+
 class CheckpointManager:
     def __init__(self, directory: str, *, keep: int = 3):
         self.directory = directory
@@ -111,6 +137,9 @@ class CheckpointManager:
                 {"shape": list(np.shape(l)), "dtype": str(np.asarray(l).dtype)}
                 for l in leaves
             ],
+            # Key-paths for nested-dict trees (None otherwise): enables
+            # template-free restore (restore(step, like=None)).
+            "paths": _dict_key_paths(host_tree),
         }
         for i, leaf in enumerate(leaves):
             np.save(os.path.join(tmp, f"arr_{i:06d}.npy"),
@@ -133,11 +162,23 @@ class CheckpointManager:
 
     # ------------------------------------------------------------- restore
 
-    def restore(self, step: int | None, like, shardings=None):
+    def restore(self, step: int | None, like=None, shardings=None):
         """Load a checkpoint into the structure of ``like``.
+
+        ``like=None``: rebuild the tree from the manifest's stored
+        key-paths instead (nested-dict checkpoints only) — the caller
+        learns shapes/dtypes from the checkpoint rather than supplying
+        them, which is how elastic job snapshots are reloaded (a resuming
+        job's buffer shapes depend on the grant it was preempted under).
 
         ``shardings``: optional pytree of jax.sharding.Sharding — arrays are
         device_put with these (elastic re-shard onto the current mesh).
+
+        Dtypes are part of the contract: with a ``like`` template every
+        loaded leaf must match its template leaf's dtype exactly (the
+        MapReduce snapshot pytrees mix int32/bool/unicode leaves, and a
+        silent int32<->float32 or bool<->int8 coercion would corrupt
+        bit-exact resume guarantees).
         """
         if step is None:
             step = self.latest_step()
@@ -146,25 +187,54 @@ class CheckpointManager:
         d = self._step_dir(step)
         with open(os.path.join(d, "MANIFEST.json")) as f:
             manifest = json.load(f)
-        like_leaves, treedef = jax.tree_util.tree_flatten(like)
-        if manifest["n_leaves"] != len(like_leaves):
-            raise ValueError(
-                f"checkpoint has {manifest['n_leaves']} leaves, target "
-                f"structure has {len(like_leaves)} — structure mismatch"
-            )
-        arrays = []
-        for i, ref in enumerate(like_leaves):
-            arr = np.load(os.path.join(d, f"arr_{i:06d}.npy"))
-            want_shape = tuple(np.shape(ref))
-            if tuple(arr.shape) != want_shape:
+        if like is None:
+            tree = self._restore_from_paths(d, manifest)
+        else:
+            like_leaves, treedef = jax.tree_util.tree_flatten(like)
+            if manifest["n_leaves"] != len(like_leaves):
                 raise ValueError(
-                    f"leaf {i}: checkpoint shape {arr.shape} != expected "
-                    f"{want_shape}"
+                    f"checkpoint has {manifest['n_leaves']} leaves, target "
+                    f"structure has {len(like_leaves)} — structure mismatch"
                 )
-            arrays.append(arr)
-        tree = jax.tree_util.tree_unflatten(treedef, arrays)
+            arrays = []
+            for i, ref in enumerate(like_leaves):
+                arr = np.load(os.path.join(d, f"arr_{i:06d}.npy"))
+                want_shape = tuple(np.shape(ref))
+                if tuple(arr.shape) != want_shape:
+                    raise ValueError(
+                        f"leaf {i}: checkpoint shape {arr.shape} != expected "
+                        f"{want_shape}"
+                    )
+                want_dtype = np.asarray(ref).dtype
+                if arr.dtype != want_dtype:
+                    raise ValueError(
+                        f"leaf {i}: checkpoint dtype {arr.dtype} != expected "
+                        f"{want_dtype} — refusing a silent cast"
+                    )
+                arrays.append(arr)
+            tree = jax.tree_util.tree_unflatten(treedef, arrays)
         if shardings is not None:
             tree = jax.tree.map(
                 lambda a, s: jax.device_put(a, s), tree, shardings
             )
         return tree, step
+
+    def _restore_from_paths(self, d: str, manifest: dict):
+        """Template-free restore: rebuild a nested-dict tree from the
+        manifest's key-paths (written by this manager for dict trees)."""
+        paths = manifest.get("paths")
+        if paths is None:
+            raise ValueError(
+                "checkpoint was not saved as a nested-dict tree (or "
+                "predates path manifests); pass like= to restore it"
+            )
+        if len(paths) != manifest["n_leaves"]:
+            raise ValueError("manifest paths/leaves count mismatch")
+        tree: dict = {}
+        for i, keys in enumerate(paths):
+            arr = np.load(os.path.join(d, f"arr_{i:06d}.npy"))
+            node = tree
+            for k in keys[:-1]:
+                node = node.setdefault(k, {})
+            node[keys[-1]] = arr
+        return tree

@@ -33,6 +33,7 @@ from repro.cluster.oracle import AnalyticOracle, EngineOracle
 from repro.cluster.policies import (
     POLICIES,
     DeadlineAware,
+    ElasticDeadline,
     PredictedSJF,
     PredictiveFIFO,
     PredictivePolicy,
@@ -55,6 +56,7 @@ __all__ = [
     "Cluster",
     "DeadlineAware",
     "Dispatch",
+    "ElasticDeadline",
     "EngineOracle",
     "JobRecord",
     "JobSpec",

@@ -70,6 +70,13 @@ class JobRecord:
     #: per-phase JobTrace from the oracle (when it supports take_trace),
     #: consumed by the online per-phase refit loop.
     trace: object | None = None
+    #: elastic accounting (ElasticCluster): execution segments as
+    #: [t_start, t_end, workers] triples (grant changes split segments;
+    #: checkpoint/restore gaps between them hold workers but do no work),
+    #: the number of regrants applied, and the total overhead paid.
+    segments: list | None = None
+    n_regrants: int = 0
+    overhead_s: float = 0.0
 
     @property
     def completed(self) -> bool:
@@ -134,7 +141,14 @@ class TraceResult:
         t0 = min(r.spec.arrival for r in self.records)
         t_end = max(r.finish for r in done)
         makespan = t_end - t0
-        busy_area = sum(r.true_time * r.plan.workers for r in done)
+        # Elastic jobs carry per-segment grants; busy area sums actual
+        # (duration x granted workers) per segment, excluding the
+        # checkpoint/restore gaps (workers held but idle).
+        busy_area = sum(
+            sum((t1 - ts) * w for ts, t1, w in r.segments)
+            if r.segments else r.true_time * r.plan.workers
+            for r in done
+        )
         deadline_jobs = [
             r for r in self.records if r.spec.deadline is not None
         ]
@@ -158,6 +172,12 @@ class TraceResult:
             "pred_mae_pct": mean(errs),
             "pred_mae_pct_first_half": mean(errs[:half]),
             "pred_mae_pct_second_half": mean(errs[half:]),
+            # Elastic accounting (0 / 0.0 on inelastic runs).
+            "n_regrants": sum(r.n_regrants for r in self.records),
+            "n_preempted_jobs": sum(
+                1 for r in self.records if r.n_regrants > 0
+            ),
+            "regrant_overhead_s": sum(r.overhead_s for r in self.records),
         }
 
 

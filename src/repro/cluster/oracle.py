@@ -188,6 +188,60 @@ class AnalyticOracle:
         )
         return _analytic_trace(app, backend, size, M, R, W, phase_s, factor)
 
+    # ---- partial execution (elastic layer) ------------------------------
+
+    def remaining_segments(
+        self,
+        app: str,
+        backend: str,
+        size: int,
+        mappers: int,
+        reducers: int,
+        workers: int,
+        *,
+        map_tasks_done: int = 0,
+        shuffled: bool = False,
+        reduce_tasks_done: int = 0,
+        job_id: int = 0,
+        _noiseless: bool = False,
+    ) -> list[tuple[str, float]]:
+        """Per-wave-boundary segment costs of the *remaining* work.
+
+        Returns ``[(kind, seconds), ...]`` with kind in
+        ``{"map", "shuffle", "reduce"}`` — one entry per remaining map
+        wave, one for the shuffle barrier (if not yet passed), one per
+        remaining reduce wave, all under grant ``workers``.  The closed
+        form is the exact per-wave decomposition of :meth:`time`: each map
+        wave costs ``setup + c_map*S + c_sort*S*log2(S)``, the shuffle its
+        full closed-form term, each reduce wave ``setup + c_red*thr*n/R``,
+        scaled by the same per-(job, config) noise factor — so with zero
+        progress the segment walls sum to :meth:`time` (modulo float
+        associativity).  This is what prices partial execution for the
+        elastic scheduler: regrants requantize the remaining tasks into
+        waves of the *new* grant.
+        """
+        phase_s = self._phase_components(
+            app, backend, size, mappers, reducers, workers
+        )
+        M, R, W = int(mappers), int(reducers), int(workers)
+        factor = 1.0 if _noiseless else self._noise_factor(
+            app, backend, M, R, W, job_id
+        )
+        segs: list[tuple[str, float]] = []
+        map_waves_left = math.ceil(max(0, M - int(map_tasks_done)) / W)
+        per_map_wave = phase_s["map"] / math.ceil(M / W)
+        segs += [("map", per_map_wave * factor)] * map_waves_left
+        if not shuffled:
+            segs.append(("shuffle", phase_s["shuffle"] * factor))
+        red_waves_left = math.ceil(max(0, R - int(reduce_tasks_done)) / W)
+        per_red_wave = phase_s["reduce"] / math.ceil(R / W)
+        segs += [("reduce", per_red_wave * factor)] * red_waves_left
+        return segs
+
+    def remaining_time(self, *args, **kwargs) -> float:
+        """Total remaining seconds (sum of :meth:`remaining_segments`)."""
+        return sum(t for _, t in self.remaining_segments(*args, **kwargs))
+
     def phase_profile(
         self,
         app: str,
@@ -250,6 +304,7 @@ class EngineOracle:
         self._corpora: dict = {}
         self._jobs: dict = {}
         self._traced_jobs: dict = {}
+        self._warmed: set = set()   # (resumable id, grant) stepper warmups
 
     def backends(self) -> tuple[str, ...]:
         return ("jnp", "xla")
@@ -383,3 +438,106 @@ class EngineOracle:
 
     def nominal_time(self, app: str, size: int) -> float:
         return self.time(app, "jnp", size, 8, 8, 4)
+
+    # ---- partial execution (elastic layer) ------------------------------
+
+    def _get_resumable(self, app, backend, size, mappers, reducers):
+        from repro.elastic.resumable import ResumableJob
+        from repro.mapreduce import JobConfig
+
+        key = ("resumable", app, size, backend, int(mappers), int(reducers))
+        if key not in self._jobs:
+            mr_app, corpus = self._corpus(app, size)
+            job = ResumableJob(
+                mr_app,
+                JobConfig(
+                    num_mappers=int(mappers),
+                    num_reducers=int(reducers),
+                    num_workers=1,
+                    reduce_backend=backend,
+                ),
+                len(corpus),
+            )
+            self._jobs[key] = (job, corpus)
+        return self._jobs[key]
+
+    def remaining_segments(
+        self,
+        app: str,
+        backend: str,
+        size: int,
+        mappers: int,
+        reducers: int,
+        workers: int,
+        *,
+        map_tasks_done: int = 0,
+        shuffled: bool = False,
+        reduce_tasks_done: int = 0,
+        job_id: int = 0,
+    ) -> list[tuple[str, float]]:
+        """Wave-step the *real* engine over the remaining work, wall-
+        clocking each step — the engine-backed twin of
+        :meth:`AnalyticOracle.remaining_segments`.
+
+        A fresh resumable state is advanced (untimed) to the cursor, then
+        each remaining wave-boundary step is executed and fenced.  A done
+        count that is not a multiple of ``workers`` is snapped *down* to
+        the last reachable boundary, so the partially-covered wave is
+        priced as a full remaining wave — the same conservative wave
+        quantization as :meth:`AnalyticOracle.remaining_segments`, and
+        never an under-estimate.  Every distinct (app, size, backend,
+        M, R) compiles its steppers once per grant — small demo traces
+        and tests only (mark slow).
+        """
+        import time as _time
+
+        import jax
+
+        size = max(self.size_quantum,
+                   (int(size) // self.size_quantum) * self.size_quantum)
+        job, corpus = self._get_resumable(
+            app, backend, size, mappers, reducers
+        )
+        # Warm the steppers for this grant once, untimed (compile fence).
+        warm_key = (id(job), int(workers))
+        if warm_key not in self._warmed:
+            job.run(corpus, state=job.regrant(job.initial_state(),
+                                              int(workers)))
+            self._warmed.add(warm_key)
+        state = job.regrant(job.initial_state(), int(workers))
+        # Advance untimed to the cursor, never past it: only take a step
+        # whose (clamped) endpoint still lies within the done counts.
+        W = int(workers)
+        M, R = int(mappers), int(reducers)
+        target_m = min(int(map_tasks_done), M)
+        target_r = min(int(reduce_tasks_done), R)
+        while not state.cursor.done:
+            c = state.cursor
+            if not c.map_done:
+                if min(M, c.map_tasks_done + W) > target_m:
+                    break
+            elif not c.shuffled:
+                if not shuffled:
+                    break
+            elif min(R, c.reduce_tasks_done + W) > target_r:
+                break
+            state = job.step(state, corpus)
+        segs: list[tuple[str, float]] = []
+        while not state.cursor.done:
+            before = state.cursor
+            t0 = _time.perf_counter()
+            state = job.step(state, corpus)
+            for leaf in state.arrays.values():
+                jax.block_until_ready(leaf)
+            dt = _time.perf_counter() - t0
+            if before.map_tasks_done != state.cursor.map_tasks_done:
+                segs.append(("map", dt))
+            elif before.shuffled != state.cursor.shuffled:
+                segs.append(("shuffle", dt))
+            else:
+                segs.append(("reduce", dt))
+        return segs
+
+    def remaining_time(self, *args, **kwargs) -> float:
+        """Total remaining seconds (sum of :meth:`remaining_segments`)."""
+        return sum(t for _, t in self.remaining_segments(*args, **kwargs))

@@ -634,3 +634,233 @@ class ResourceAware(PredictedSJF):
     def observe(self, record):
         self._running_bw.pop(record.spec.job_id, None)
         super().observe(record)
+
+
+@register_policy
+class ElasticDeadline(DeadlineAware):
+    """Deadline EDF + preemptive, regrant-aware elasticity.
+
+    On a plain :class:`~repro.cluster.cluster.Cluster` this is exactly
+    ``predict-deadline``.  On an
+    :class:`~repro.elastic.sim.ElasticCluster` it adds two moves, each
+    gated by the :class:`~repro.elastic.regrant.RegrantCostModel` on the
+    same regression basis every other decision uses:
+
+    * **rescue (shrink)** — when a deadline job's cheapest feasible plan
+      does not fit the free pool (the base policy would hold it while its
+      budget burns), shrink a running *best-effort* job to the smallest
+      grant in the worker grid at its next wave boundary, freeing workers
+      in wave-time rather than job-time.  The cost model's ``shrink_ok``
+      vetoes moves on nearly-finished victims or where the checkpoint
+      overhead is large relative to the victim's predicted remaining run.
+      While a shrink is in flight, the beneficiary is shielded from
+      rejection and best-effort work is barred from backfilling the
+      workers being freed.
+    * **regrow** — once no queued deadline job needs the pool, previously
+      shrunk jobs are grown back toward their original grant when the
+      cost model predicts the regrant pays for itself
+      (``worth_it``: time saved under W' exceeds the checkpoint cost).
+
+    With no contention neither move triggers and the schedule is
+    decision-for-decision identical to ``predict-deadline`` — which is
+    the benchmark's no-regression guarantee.
+    """
+
+    name = "predict-elastic"
+
+    def __init__(self, *, shrink_floor: int | None = None,
+                 min_remaining_steps: int = 2,
+                 min_remaining_frac: float = 0.15,
+                 max_overhead_frac: float = 0.25,
+                 regrow: bool = True, min_grow_gain_s: float = 1e-3,
+                 **kwargs):
+        super().__init__(**kwargs)
+        self._shrink_floor_arg = shrink_floor
+        if min_remaining_steps < 2:
+            # A regrant can only take effect at a boundary *before* the
+            # final wave; the simulator rejects later requests loudly.
+            raise ValueError("min_remaining_steps must be >= 2")
+        self.min_remaining_steps = int(min_remaining_steps)
+        self.min_remaining_frac = float(min_remaining_frac)
+        self.max_overhead_frac = float(max_overhead_frac)
+        self.regrow = bool(regrow)
+        self.min_grow_gain_s = float(min_grow_gain_s)
+        self.n_shrinks = 0
+        self.n_grows = 0
+        self._awaiting: set[int] = set()
+
+    def prepare(self, cluster, apps):
+        super().prepare(cluster, apps)
+        from repro.elastic.regrant import RegrantCostModel
+
+        self.elastic = bool(getattr(cluster, "supports_elastic", False))
+        self.shrink_floor = (
+            self._shrink_floor_arg if self._shrink_floor_arg is not None
+            else min(self.worker_grid)
+        )
+        self.cost_model = RegrantCostModel(
+            snapshot_overhead_s=getattr(
+                cluster, "snapshot_overhead_s", 0.02
+            ),
+            restore_overhead_s=getattr(
+                cluster, "restore_overhead_s", 0.02
+            ),
+            min_remaining_frac=self.min_remaining_frac,
+            max_overhead_frac=self.max_overhead_frac,
+        )
+        self._awaiting.clear()
+
+    # ---- prediction on the regression basis -----------------------------
+
+    def _predicted_total(self, spec: JobSpec, plan: Plan,
+                         workers: int) -> float:
+        """Model-predicted total time of (spec, plan) at grant ``workers``
+        — the regression evaluated off the plan's frozen (M, R)."""
+        model = self.db.get(spec.app, self.platform, backend=plan.backend)
+        row = np.asarray(
+            (plan.mappers, plan.reducers, workers, spec.size / SIZE_UNIT),
+            dtype=np.float64,
+        )
+        return float(max(_np_predict(model, row)[0], 1e-3))
+
+    def _evaluate_regrant(self, view, new_workers: int):
+        return self.cost_model.evaluate(
+            t_total_current=self._predicted_total(
+                view.spec, view.plan, view.workers
+            ),
+            t_total_new=self._predicted_total(
+                view.spec, view.plan, new_workers
+            ),
+            progress=view.progress,
+            current_workers=view.workers,
+            new_workers=new_workers,
+        )
+
+    # ---- elastic decision layer -----------------------------------------
+
+    def select(self, queue, free_workers, now):
+        if not self.elastic:
+            return super().select(queue, free_workers, now)
+        views = self.cluster.running_jobs(now)
+        pending_free = sum(
+            v.workers - v.pending_workers for v in views
+            if v.pending_workers is not None
+            and v.pending_workers < v.workers
+        )
+        if pending_free == 0:
+            # Nothing in flight: any previous rescue resolved (or died).
+            self._awaiting.clear()
+        action = self._maybe_rescue(queue, free_workers, pending_free,
+                                    views, now)
+        if action is not None:
+            return action
+        if self._awaiting:
+            # Workers are being freed for awaited deadline jobs: other
+            # deadline jobs proceed normally, but best-effort work must
+            # not backfill the grant in flight, and the awaited jobs are
+            # shielded from the base policy's rejection sweep.
+            shielded = tuple(
+                j for j in queue
+                if j.deadline is not None and j.job_id not in self._awaiting
+            )
+            return super().select(shielded, free_workers, now) \
+                if shielded else None
+        action = self._maybe_regrow(queue, free_workers, views)
+        if action is not None:
+            return action
+        return super().select(queue, free_workers, now)
+
+    def idle(self, free_workers, now):
+        """Elastic moves on an empty (or fully held) queue — the
+        simulator calls this after the dispatch loop, which is the only
+        chance to regrow right after the last queued job dispatched."""
+        if not self.elastic or self._awaiting:
+            return None
+        return self._maybe_regrow(
+            (), free_workers, self.cluster.running_jobs(now)
+        )
+
+    def _maybe_rescue(self, queue, free_workers, pending_free, views, now):
+        """Shrink a running best-effort job to free workers for the most
+        urgent deadline job that is feasible in time but starved of pool."""
+        from repro.elastic.sim import Regrant
+
+        deadline_jobs = sorted(
+            (j for j in queue if j.deadline is not None),
+            key=lambda j: (j.deadline, j.arrival, j.job_id),
+        )
+        for job in deadline_jobs:
+            budget = self._deadline_budget(job, now)
+            fastest = self.best_plan(job, self.cluster.total_workers)
+            if fastest is None or fastest.predicted_time > budget:
+                self._awaiting.discard(job.job_id)
+                continue    # hopeless: the base sweep will reject it
+            if self._cheapest_feasible(job, free_workers, budget):
+                self._awaiting.discard(job.job_id)
+                continue    # dispatchable right now: base handles it
+            target = self._cheapest_feasible(
+                job, self.cluster.total_workers, budget
+            )
+            if target is None:
+                continue
+            deficit = target.workers - (free_workers + pending_free)
+            if deficit <= 0:
+                # Enough is already being freed; hold for the boundary.
+                self._awaiting.add(job.job_id)
+                continue
+            victims = sorted(
+                (
+                    v for v in views
+                    if v.spec.deadline is None
+                    and v.pending_workers is None
+                    and v.workers > self.shrink_floor
+                    and v.steps_remaining >= self.min_remaining_steps
+                ),
+                key=lambda v: (-v.workers,
+                               -v.progress.remaining_fraction(v.workers)),
+            )
+            for victim in victims:
+                new_w = max(self.shrink_floor, victim.workers - deficit)
+                decision = self._evaluate_regrant(victim, new_w)
+                if not decision.shrink_ok:
+                    continue
+                self._awaiting.add(job.job_id)
+                self.n_shrinks += 1
+                return Regrant(
+                    victim.job_id, new_w,
+                    reason=f"rescue deadline job {job.job_id} "
+                           f"(gain gate: {decision.gain_s:+.3f}s)",
+                )
+        return None
+
+    def _maybe_regrow(self, queue, free_workers, views):
+        """Grow a shrunk job back toward its original grant when the pool
+        is quiet and the cost model predicts the move pays for itself."""
+        from repro.elastic.sim import Regrant
+
+        if not self.regrow or free_workers <= 0:
+            return None
+        if any(j.deadline is not None for j in queue):
+            return None     # deadline work queued: keep the slack
+        candidates = sorted(
+            (
+                v for v in views
+                if v.shrunk_from is not None
+                and v.pending_workers is None
+                and v.workers < v.shrunk_from
+                and v.steps_remaining >= self.min_remaining_steps
+            ),
+            key=lambda v: v.started,
+        )
+        for victim in candidates:
+            new_w = min(victim.shrunk_from, victim.workers + free_workers)
+            if new_w <= victim.workers:
+                continue
+            decision = self._evaluate_regrant(victim, new_w)
+            if decision.gain_s > self.min_grow_gain_s:
+                self.n_grows += 1
+                return Regrant(
+                    victim.job_id, new_w,
+                    reason=f"regrow (predicted gain {decision.gain_s:.3f}s)",
+                )
+        return None

@@ -1,0 +1,59 @@
+"""Elastic execution: checkpointable jobs + preemptive regrant scheduling.
+
+The paper's models predict how a job's time depends on its configuration;
+PR 2-3 used them to pick a configuration *at admission*.  This package
+makes the worker grant W re-decidable **mid-flight**:
+
+    snapshot.py  — wave-boundary job state: JobCursor + ElasticState
+                   pytrees, persisted via repro.checkpoint (atomic
+                   commit, keep= GC, template-free restore)
+    resumable.py — the engine's phase pipeline split at wave boundaries:
+                   ResumableJob / run_resumable stop, snapshot, re-plan
+                   under a different W, and resume bit-identically
+    regrant.py   — WorkProgress + RegrantCostModel: predicted remaining
+                   time under W' + measured snapshot/restore overhead vs
+                   remaining time under W ("is this regrant worth it?")
+    sim.py       — ElasticCluster: the event-driven simulator grown
+                   preempt/resume/regrant events, shrink/grow worker
+                   accounting with conservation invariants, and
+                   segment-summed telemetry traces
+
+Entry points: the ``predict-elastic`` policy
+(:mod:`repro.cluster.policies`), ``python -m repro.launch.cluster
+--elastic --policies predict-elastic`` (CLI), ``python -m benchmarks.run
+--sections elastic`` (deadline-attainment comparison), and
+``examples/elastic_preempt.py`` (engine-level walkthrough).
+"""
+
+from repro.elastic.regrant import (
+    RegrantCostModel,
+    RegrantDecision,
+    WorkProgress,
+)
+from repro.elastic.resumable import ResumableJob, run_resumable
+from repro.elastic.sim import ElasticCluster, Regrant, RunningView
+from repro.elastic.snapshot import (
+    ElasticState,
+    JobCursor,
+    load_snapshot,
+    save_snapshot,
+    state_to_tree,
+    tree_to_state,
+)
+
+__all__ = [
+    "ElasticCluster",
+    "ElasticState",
+    "JobCursor",
+    "Regrant",
+    "RegrantCostModel",
+    "RegrantDecision",
+    "ResumableJob",
+    "RunningView",
+    "WorkProgress",
+    "load_snapshot",
+    "run_resumable",
+    "save_snapshot",
+    "state_to_tree",
+    "tree_to_state",
+]

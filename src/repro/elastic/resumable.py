@@ -1,0 +1,455 @@
+"""Resumable execution: the fused pipeline split at wave boundaries.
+
+:func:`repro.mapreduce.build_job` compiles map → shuffle → reduce as one
+program; nothing can stop it mid-flight.  :class:`ResumableJob` recompiles
+the *same phase primitives* (:mod:`repro.mapreduce.phases`, the same
+pluggable backends) as wave steppers over canonical task-major buffers, so
+a job can stop at any wave boundary, snapshot, re-plan its remaining waves
+under a different worker grant W', and resume **bit-identically**:
+
+* **map** — one step runs the next W map tasks (``run_map_task`` vmapped
+  over a wave) and writes their output into (M, P) task-major
+  accumulators.  A map task's output depends only on its split and the
+  frozen config, never on W or on which wave ran it, so any wave
+  re-grouping produces the same rows.
+* **shuffle** — one barrier step.  The ``lexsort`` backend partitions the
+  canonical M·P pair stream with a *canonical* capacity
+  (``partition_capacity(M*P, R, f)``, W-independent), so even the overflow
+  accounting is identical under any grant history.  The ``all_to_all``
+  backend is a mesh collective whose data movement is inherently
+  W-shaped; here its :meth:`pack`/:meth:`unpack` halves are vmapped over a
+  worker axis with the literal collective replaced by the block transpose
+  it implements — identical per-worker computation, single-controller
+  execution, and the capacity layout of a real W-device run at the grant
+  held when the barrier executes.
+* **reduce** — one step reduces the next W partitions through the
+  configured :class:`~repro.mapreduce.backends.ReduceBackend` (row-
+  independent by contract) into (R, cap) output accumulators.
+
+Equivalences that follow (property-tested in ``tests/test_elastic.py``):
+preempt-at-every-boundary-then-resume ≡ uninterrupted, for every reduce ×
+shuffle backend combination; and for the ``lexsort`` shuffle the results
+are bit-exact under *any* sequence of regrants.
+
+Steppers are jit-compiled once per (grant, stage) and cached on the job,
+so wave-stepped execution costs one dispatch per wave, not one compile.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time as _time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.mapreduce import backends as _backends
+from repro.mapreduce import phases
+from repro.mapreduce.engine import JobConfig, MapReduceApp, \
+    _resolve_reduce_backend
+from repro.mapreduce.phases import PAD_KEY, run_map_task
+
+from repro.elastic.snapshot import ElasticState, JobCursor
+
+
+def _pad_rows(arr, n_extra: int, fill):
+    """Append ``n_extra`` fill-rows so dynamic W-row windows never clamp."""
+    if n_extra == 0:
+        return arr
+    pad = jnp.full((n_extra,) + arr.shape[1:], fill, dtype=arr.dtype)
+    return jnp.concatenate([arr, pad], axis=0)
+
+
+class ResumableJob:
+    """One (app, config, input size) compiled for wave-boundary stepping.
+
+    ``cfg.num_workers`` is only the *initial* grant; the live grant rides
+    in the cursor and per-grant steppers are compiled on demand.  The
+    optional ``recorder`` (the :class:`repro.telemetry.PhaseRecorder`
+    protocol) makes every :meth:`run` call emit one *segment trace*:
+    per-phase wall times and measured counters covering exactly the waves
+    that call executed, so per-phase models keep fitting on interrupted
+    runs (merge segments with ``JobTrace.phase_times`` summing).
+    """
+
+    def __init__(self, app: MapReduceApp, cfg: JobConfig, input_len: int,
+                 recorder=None):
+        shuffle = _backends.get_shuffle_backend(cfg.shuffle_backend)
+        self.app = app
+        self.cfg = cfg
+        self.input_len = int(input_len)
+        self.recorder = recorder
+        self._reduce_backend = _resolve_reduce_backend(app, cfg)
+        self._shuffle = shuffle
+        self.M = cfg.num_mappers
+        self.R = cfg.num_reducers
+        self.S = math.ceil(self.input_len / self.M)
+        self.P = self.S * app.pairs_per_token
+        #: canonical (W-independent) lexsort partition capacity
+        self._lex_cap = phases.partition_capacity(
+            self.M * self.P, self.R, cfg.capacity_factor
+        )
+        self._prep = jax.jit(self._build_prep())
+        self._map_steppers: dict[int, callable] = {}
+        self._shuffle_steppers: dict[int, callable] = {}
+        self._reduce_steppers: dict[tuple[int, int], callable] = {}
+
+    # ------------------------------------------------------------ lifecycle
+
+    def initial_state(self) -> ElasticState:
+        cfg = self.cfg
+        cursor = JobCursor(
+            app=self.app.name, input_len=self.input_len,
+            mappers=self.M, reducers=self.R, workers=cfg.num_workers,
+            combiner=cfg.combiner, capacity_factor=cfg.capacity_factor,
+            setup_rounds=cfg.setup_rounds, setup_dim=cfg.setup_dim,
+            reduce_backend=cfg.reduce_backend,
+            shuffle_backend=cfg.shuffle_backend,
+        )
+        arrays = {
+            "map_keys": jnp.full((self.M, self.P), PAD_KEY, jnp.int32),
+            "map_vals": jnp.zeros((self.M, self.P), jnp.int32),
+            "map_valid": jnp.zeros((self.M, self.P), bool),
+        }
+        return ElasticState(cursor=cursor, arrays=arrays)
+
+    def check_cursor(self, cursor: JobCursor) -> None:
+        """A cursor must belong to this job (identity fields match)."""
+        mine = self.initial_state().cursor
+        for f in ("app", "input_len", "mappers", "reducers", "combiner",
+                  "capacity_factor", "setup_rounds", "setup_dim",
+                  "reduce_backend", "shuffle_backend"):
+            if getattr(cursor, f) != getattr(mine, f):
+                raise ValueError(
+                    f"cursor field {f}={getattr(cursor, f)!r} does not "
+                    f"match this job ({getattr(mine, f)!r})"
+                )
+
+    def regrant(self, state: ElasticState, workers: int) -> ElasticState:
+        """Re-plan the remaining waves under a new grant.
+
+        Legal at any wave boundary — which is everywhere, because states
+        only exist at boundaries.  Buffers are canonical, so this is a
+        pure cursor update; the next step compiles (or reuses) steppers
+        for the new grant.
+        """
+        if workers < 1:
+            raise ValueError("workers must be >= 1")
+        return ElasticState(
+            cursor=dataclasses.replace(state.cursor, workers=workers),
+            arrays=state.arrays,
+        )
+
+    # ------------------------------------------------------------- stepping
+
+    def step(self, state: ElasticState, tokens) -> ElasticState:
+        """Execute exactly one wave-boundary step (map wave / shuffle
+        barrier / reduce wave) under the cursor's current grant."""
+        c = state.cursor
+        if c.done:
+            raise ValueError("job already complete")
+        W = c.workers
+        arrays = dict(state.arrays)
+        if not c.map_done:
+            splits, svalid = self._prep(tokens)
+            bk, bv, bp = self._map_stepper(W)(
+                splits, svalid,
+                arrays["map_keys"], arrays["map_vals"], arrays["map_valid"],
+                c.map_tasks_done,
+            )
+            arrays.update(map_keys=bk, map_vals=bv, map_valid=bp)
+            cursor = dataclasses.replace(
+                c,
+                map_tasks_done=min(self.M, c.map_tasks_done + W),
+                waves_executed=c.waves_executed + 1,
+            )
+        elif not c.shuffled:
+            pk, pv, dropped, ok, ov = self._shuffle_stepper(W)(
+                arrays["map_keys"], arrays["map_vals"], arrays["map_valid"]
+            )
+            # Map accumulators are fully absorbed into the partitions;
+            # dropping them shrinks every post-shuffle snapshot.
+            arrays = {
+                "part_keys": pk, "part_vals": pv,
+                "out_keys": ok, "out_vals": ov,
+            }
+            cursor = dataclasses.replace(
+                c, shuffled=True, partition_cap=int(pk.shape[1]),
+                dropped=int(dropped),
+                waves_executed=c.waves_executed + 1,
+            )
+        else:
+            ok, ov = self._reduce_stepper(W, c.partition_cap)(
+                arrays["part_keys"], arrays["part_vals"],
+                arrays["out_keys"], arrays["out_vals"],
+                c.reduce_tasks_done,
+            )
+            arrays.update(out_keys=ok, out_vals=ov)
+            cursor = dataclasses.replace(
+                c,
+                reduce_tasks_done=min(self.R, c.reduce_tasks_done + W),
+                waves_executed=c.waves_executed + 1,
+            )
+        return ElasticState(cursor=cursor, arrays=arrays)
+
+    def run(self, tokens, state: ElasticState | None = None,
+            preempt_after: int | None = None) -> ElasticState:
+        """Run from ``state`` (or fresh) until done — or until
+        ``preempt_after`` steps have executed *in this call*, leaving a
+        wave-boundary state ready to snapshot/regrant/resume."""
+        if state is None:
+            state = self.initial_state()
+        else:
+            self.check_cursor(state.cursor)
+        trace = None
+        if self.recorder is not None:
+            trace = self.recorder.start_job(
+                self.app.name, self.cfg, self.input_len
+            )
+        executed = 0
+        t_run = _time.perf_counter()
+        try:
+            while not state.cursor.done and (
+                preempt_after is None or executed < preempt_after
+            ):
+                before = state.cursor
+                t0 = _time.perf_counter()
+                state = self.step(state, tokens)
+                for leaf in state.arrays.values():
+                    jax.block_until_ready(leaf)
+                dt = _time.perf_counter() - t0
+                executed += 1
+                if trace is not None:
+                    self._record_step(trace, before, state, dt)
+        except Exception:
+            if trace is not None and trace in self.recorder.traces:
+                self.recorder.traces.remove(trace)
+            raise
+        if trace is not None:
+            trace.finish(_time.perf_counter() - t_run)
+        return state
+
+    def result(self, state: ElasticState):
+        """(out_keys (R, cap), out_vals (R, cap), dropped) of a done job."""
+        if not state.cursor.done:
+            raise ValueError(
+                f"job not complete: {state.cursor.steps_remaining()} "
+                "steps remain"
+            )
+        return (
+            state.arrays["out_keys"],
+            state.arrays["out_vals"],
+            jnp.int32(state.cursor.dropped),
+        )
+
+    # ------------------------------------------------------ stepper builds
+
+    def _build_prep(self):
+        M, S, input_len = self.M, self.S, self.input_len
+
+        def prep(tokens):
+            if tokens.shape != (input_len,):
+                raise ValueError(
+                    f"expected ({input_len},), got {tokens.shape}"
+                )
+            pad_to = M * S
+            padded = jnp.zeros((pad_to,), jnp.int32).at[:input_len].set(
+                tokens
+            )
+            valid = (jnp.arange(pad_to) < input_len).reshape(M, S)
+            return padded.reshape(M, S), valid
+
+        return prep
+
+    def _map_stepper(self, W: int):
+        if W not in self._map_steppers:
+            app, cfg = self.app, self.cfg
+            M, P = self.M, self.P
+
+            def step(splits, svalid, bk, bv, bp, start):
+                tok = jax.lax.dynamic_slice_in_dim(
+                    _pad_rows(splits, W - 1, 0), start, W, 0
+                )
+                val = jax.lax.dynamic_slice_in_dim(
+                    _pad_rows(svalid, W - 1, False), start, W, 0
+                )
+                k, v, pv = jax.vmap(
+                    lambda t, m: run_map_task(app, cfg, t, m)
+                )(tok, val)
+
+                def upd(buf, blk, fill):
+                    return jax.lax.dynamic_update_slice_in_dim(
+                        _pad_rows(buf, W - 1, fill), blk, start, 0
+                    )[:M]
+
+                return (
+                    upd(bk, k, PAD_KEY), upd(bv, v, 0), upd(bp, pv, False)
+                )
+
+            self._map_steppers[W] = jax.jit(step)
+        return self._map_steppers[W]
+
+    def _shuffle_stepper(self, W: int):
+        if W not in self._shuffle_steppers:
+            if self._shuffle.collective:
+                self._shuffle_steppers[W] = jax.jit(
+                    self._build_a2a_shuffle(W)
+                )
+            else:
+                self._shuffle_steppers[W] = jax.jit(
+                    self._build_lexsort_shuffle()
+                )
+        return self._shuffle_steppers[W]
+
+    def _build_lexsort_shuffle(self):
+        """Canonical single-controller shuffle: W-independent capacity.
+
+        Reuses :meth:`LexsortShuffle.partition` with a W=1 view of the
+        config so its ``reduce_waves * W`` row padding degenerates to
+        exactly R rows — the canonical partition block.
+        """
+        cfg_w1 = dataclasses.replace(self.cfg, num_workers=1)
+        shuffle, R = self._shuffle, self.R
+
+        def step(bk, bv, bp):
+            n = bk.shape[0] * bk.shape[1]
+            pk, pv, dropped = shuffle.partition(
+                cfg_w1, bk.reshape(n), bv.reshape(n), bp.reshape(n)
+            )
+            cap = pk.shape[1]
+            ok = jnp.full((R, cap), PAD_KEY, jnp.int32)
+            ov = jnp.zeros((R, cap), jnp.int32)
+            return pk, pv, dropped, ok, ov
+
+        return step
+
+    def _build_a2a_shuffle(self, W: int):
+        """The collective shuffle, single-controller: vmap pack/unpack
+        over a worker axis, block-transpose in place of ``all_to_all``.
+
+        Reproduces the per-worker computation (and capacity layout) of a
+        real W-device :func:`~repro.mapreduce.engine.build_job_sharded`
+        run at the grant held when the barrier executes.
+        """
+        cfg_w = dataclasses.replace(self.cfg, num_workers=W)
+        shuffle, M, R, P = self._shuffle, self.M, self.R, self.P
+        waves_m = cfg_w.map_waves
+        waves_r = cfg_w.reduce_waves
+        M_pad = waves_m * W
+        n_local = waves_m * P
+
+        def step(bk, bv, bp):
+            # Worker-major local streams: worker w owns tasks w, w+W, ...
+            def per_worker(buf, fill):
+                padded = _pad_rows(buf, M_pad - M, fill)
+                return padded.reshape(waves_m, W, P).transpose(
+                    1, 0, 2
+                ).reshape(W, n_local)
+
+            k2 = per_worker(bk, PAD_KEY)
+            v2 = per_worker(bv, 0)
+            p2 = per_worker(bp, False)
+            (send_k, send_v, send_r), sdrop = jax.vmap(
+                lambda k, v, p: shuffle.pack(cfg_w, k, v, p)
+            )(k2, v2, p2)
+            # all_to_all(tiled): worker w's received row j is worker j's
+            # send row w — a block transpose of the (W, W, cap) tensor.
+            recv_k = send_k.transpose(1, 0, 2)
+            recv_v = send_v.transpose(1, 0, 2)
+            recv_r = send_r.transpose(1, 0, 2)
+            (bk2, bv2), rdrop = jax.vmap(
+                lambda k, v, r: shuffle.unpack(
+                    cfg_w, n_local,
+                    k.reshape(-1), v.reshape(-1), r.reshape(-1),
+                )
+            )(recv_k, recv_v, recv_r)
+            # (W, waves_r, cap) -> reducer-indexed (R, cap): reducer r
+            # lives on worker r % W at local slot r // W.
+            cap = bk2.shape[-1]
+            pk = bk2.transpose(1, 0, 2).reshape(waves_r * W, cap)[:R]
+            pv = bv2.transpose(1, 0, 2).reshape(waves_r * W, cap)[:R]
+            ok = jnp.full((R, cap), PAD_KEY, jnp.int32)
+            ov = jnp.zeros((R, cap), jnp.int32)
+            return pk, pv, sdrop.sum() + rdrop.sum(), ok, ov
+
+        return step
+
+    def _reduce_stepper(self, W: int, cap: int):
+        key = (W, cap)
+        if key not in self._reduce_steppers:
+            app, cfg, R = self.app, self.cfg, self.R
+            backend = self._reduce_backend
+
+            def step(pk, pv, ok_buf, ov_buf, start):
+                kblk = jax.lax.dynamic_slice_in_dim(
+                    _pad_rows(pk, W - 1, PAD_KEY), start, W, 0
+                )
+                vblk = jax.lax.dynamic_slice_in_dim(
+                    _pad_rows(pv, W - 1, 0), start, W, 0
+                )
+                ok, ov = backend.reduce(kblk, vblk, app.reduce_op)
+                ov = phases._masked_setup(cfg, kblk, ok, ov)
+
+                def upd(buf, blk, fill):
+                    return jax.lax.dynamic_update_slice_in_dim(
+                        _pad_rows(buf, W - 1, fill), blk, start, 0
+                    )[:R]
+
+                return upd(ok_buf, ok, PAD_KEY), upd(ov_buf, ov, 0)
+
+            self._reduce_steppers[key] = jax.jit(step)
+        return self._reduce_steppers[key]
+
+    # ----------------------------------------------------------- telemetry
+
+    def _record_step(self, trace, before: JobCursor, after: ElasticState,
+                     wall_s: float) -> None:
+        """One trace phase entry per executed step, counters measured from
+        the actual buffers (same discipline as the engine's traced path)."""
+        c_after = after.cursor
+        if before.map_tasks_done != c_after.map_tasks_done:
+            lo, hi = before.map_tasks_done, c_after.map_tasks_done
+            pv = np.asarray(after.arrays["map_valid"][lo:hi])
+            trace.record_phase(
+                "map", wall_s,
+                tasks=hi - lo, waves=1, workers=before.workers,
+                pairs_emitted=int(pv.sum()),
+                records_in=min(self.input_len, hi * self.S)
+                - min(self.input_len, lo * self.S),
+            )
+        elif before.shuffled != c_after.shuffled:
+            pairs_out = int(
+                (np.asarray(after.arrays["part_keys"]) != int(PAD_KEY)).sum()
+            )
+            n_dropped = c_after.dropped
+            pair_bytes = phases.PAIR_BYTES
+            pairs_in = pairs_out + n_dropped
+            trace.record_phase(
+                "shuffle", wall_s,
+                pairs_in=pairs_in, pairs_out=pairs_out,
+                pairs_dropped=n_dropped,
+                bytes_in=pairs_in * pair_bytes,
+                bytes_out=pairs_out * pair_bytes,
+                bytes_dropped=n_dropped * pair_bytes,
+                partitions=self.R, workers=before.workers,
+                partition_capacity=c_after.partition_cap,
+            )
+        else:
+            lo, hi = before.reduce_tasks_done, c_after.reduce_tasks_done
+            seg = np.asarray(after.arrays["out_keys"][lo:hi])
+            trace.record_phase(
+                "reduce", wall_s,
+                tasks=hi - lo, waves=1, workers=before.workers,
+                segments_out=int((seg != int(PAD_KEY)).sum()),
+            )
+
+
+def run_resumable(job: ResumableJob, tokens,
+                  state: ElasticState | None = None,
+                  preempt_after: int | None = None) -> ElasticState:
+    """Run ``job`` from ``state`` (or fresh), preempting after
+    ``preempt_after`` wave-boundary steps — module-level spelling of
+    :meth:`ResumableJob.run` for the engine-integration entry point."""
+    return job.run(tokens, state=state, preempt_after=preempt_after)

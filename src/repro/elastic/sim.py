@@ -1,0 +1,455 @@
+"""Elastic cluster simulation: preempt / resume / regrant events.
+
+:class:`ElasticCluster` extends the event-driven simulator with the one
+capability the base :class:`~repro.cluster.cluster.Cluster` lacks: a
+dispatched job's worker grant is no longer frozen.  A policy may answer a
+scheduling event with a :class:`Regrant` action; the simulator applies it
+at the job's **next wave boundary** (a job cannot stop mid-wave), charges
+the configured snapshot + restore overhead, requantizes the remaining
+tasks into waves of the new grant through the oracle's
+``remaining_segments``, and reschedules the job's completion.
+
+Mechanics and invariants:
+
+* jobs run as a schedule of wave-boundary segments (from
+  ``oracle.remaining_segments``); progress is tracked in task space
+  (:class:`~repro.elastic.regrant.WorkProgress`) and advanced lazily;
+* a **shrink** releases ``W - W'`` workers at the boundary; a **grow**
+  reserves ``W' - W`` from the free pool at request time (so concurrent
+  decisions cannot oversubscribe) and applies at the boundary;
+* worker conservation — ``free + Σ granted + Σ reserved == total`` — is
+  asserted after every mutation, every job completes exactly once, and a
+  job's recorded segments tile its [start, finish] interval exactly
+  (checkpoint/restore gaps are the only holes, and they are charged to
+  ``JobRecord.overhead_s``);
+* completed jobs carry a synthesized per-phase :class:`JobTrace` whose
+  map/shuffle/reduce walls are summed across *all* executed segments,
+  with preemption overhead recorded as a separate ``regrant`` phase — so
+  the online per-phase refit loop keeps fitting on interrupted runs;
+* a policy that never regrants reproduces the base simulator's schedule
+  decision-for-decision (segment walls sum to the same oracle times
+  modulo float associativity) — tested in ``tests/test_elastic.py``.
+
+Policies discover elastic support via ``cluster.supports_elastic`` and
+inspect in-flight work through :meth:`ElasticCluster.running_jobs`, which
+exposes only scheduler-observable facts (grants, wave progress, pending
+regrants) — never oracle truth about future segment durations.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+
+from repro.cluster.cluster import (
+    Cluster,
+    Dispatch,
+    JobRecord,
+    Reject,
+    TraceResult,
+)
+from repro.cluster.workload import JobSpec
+from repro.elastic.regrant import WorkProgress
+
+
+@dataclasses.dataclass(frozen=True)
+class Regrant:
+    """Policy action: change a running job's grant to ``workers`` at its
+    next wave boundary (shrink frees the difference there; grow reserves
+    it from the free pool now)."""
+
+    job_id: int
+    workers: int
+    reason: str = ""
+
+    def __post_init__(self):
+        if self.workers < 1:
+            raise ValueError(f"bad regrant {self}")
+
+
+@dataclasses.dataclass(frozen=True)
+class RunningView:
+    """Scheduler-observable state of one running job."""
+
+    job_id: int
+    spec: JobSpec
+    plan: object                 # the admission Plan (M, R fixed for life)
+    workers: int                 # current grant
+    pending_workers: int | None  # grant a pending regrant will apply
+    shrunk_from: int | None      # pre-shrink grant, if currently shrunk
+    progress: WorkProgress
+    started: float
+
+    @property
+    def steps_remaining(self) -> int:
+        return self.progress.steps_remaining(self.workers)
+
+
+@dataclasses.dataclass
+class _Running:
+    spec: JobSpec
+    rec: JobRecord
+    workers: int
+    #: remaining wave-boundary segments [(kind, duration), ...]
+    segments: list
+    seg_start: float             # absolute start time of segments[0]
+    m_done: int = 0
+    shuffled: bool = False
+    r_done: int = 0
+    pending: tuple[int, float] | None = None   # (new_W, boundary time)
+    reserved: int = 0            # grow workers held from the free pool
+    shrunk_from: int | None = None
+    epoch: int = 0               # invalidates stale heap events
+    phase_wall: dict = dataclasses.field(default_factory=dict)
+
+    def progress(self) -> WorkProgress:
+        return WorkProgress(
+            mappers=self.rec.plan.mappers,
+            reducers=self.rec.plan.reducers,
+            map_tasks_done=self.m_done,
+            shuffled=self.shuffled,
+            reduce_tasks_done=self.r_done,
+        )
+
+    def advance(self, t: float) -> None:
+        """Consume segments ending at or before ``t`` (progress + walls)."""
+        M = self.rec.plan.mappers
+        R = self.rec.plan.reducers
+        while self.segments:
+            kind, dur = self.segments[0]
+            end = self.seg_start + dur
+            if end > t:
+                break
+            self.segments.pop(0)
+            self.seg_start = end
+            self.phase_wall[kind] = self.phase_wall.get(kind, 0.0) + dur
+            if kind == "map":
+                self.m_done = min(M, self.m_done + self.workers)
+            elif kind == "shuffle":
+                self.shuffled = True
+            else:
+                self.r_done = min(R, self.r_done + self.workers)
+
+    def finish_time(self) -> float:
+        t = self.seg_start
+        for _, dur in self.segments:
+            t += dur
+        return t
+
+    def next_boundary(self) -> float:
+        return self.seg_start + self.segments[0][1]
+
+
+class ElasticCluster(Cluster):
+    """The event-driven simulator, with regrantable worker grants."""
+
+    supports_elastic = True
+
+    def __init__(
+        self,
+        total_workers: int,
+        oracle,
+        *,
+        snapshot_overhead_s: float = 0.02,
+        restore_overhead_s: float = 0.02,
+    ):
+        super().__init__(total_workers, oracle)
+        if not hasattr(oracle, "remaining_segments"):
+            raise TypeError(
+                f"{type(oracle).__name__} cannot price partial execution; "
+                "ElasticCluster needs oracle.remaining_segments"
+            )
+        if snapshot_overhead_s < 0 or restore_overhead_s < 0:
+            raise ValueError("overheads must be >= 0")
+        self.snapshot_overhead_s = float(snapshot_overhead_s)
+        self.restore_overhead_s = float(restore_overhead_s)
+
+    # ------------------------------------------------------------- queries
+
+    def running_jobs(self, now: float) -> tuple[RunningView, ...]:
+        views = []
+        for rj in self._running.values():
+            rj.advance(now)
+            views.append(RunningView(
+                job_id=rj.spec.job_id,
+                spec=rj.spec,
+                plan=rj.rec.plan,
+                workers=rj.workers,
+                pending_workers=rj.pending[0] if rj.pending else None,
+                shrunk_from=rj.shrunk_from,
+                progress=rj.progress(),
+                started=rj.rec.start,
+            ))
+        return tuple(views)
+
+    # ----------------------------------------------------------- invariant
+
+    def _check_conservation(self) -> None:
+        granted = sum(rj.workers for rj in self._running.values())
+        reserved = sum(rj.reserved for rj in self._running.values())
+        if self._free < 0 or (
+            self._free + granted + reserved != self.total_workers
+        ):
+            raise AssertionError(
+                f"worker accounting broken: free={self._free} "
+                f"granted={granted} reserved={reserved} "
+                f"total={self.total_workers}"
+            )
+
+    # ------------------------------------------------------------ the loop
+
+    def run(self, jobs: list[JobSpec], policy) -> TraceResult:
+        jobs = sorted(jobs, key=lambda j: (j.arrival, j.job_id))
+        if len({j.job_id for j in jobs}) != len(jobs):
+            raise ValueError("duplicate job_id in trace")
+        records = {j.job_id: JobRecord(spec=j) for j in jobs}
+        pending: list[JobSpec] = []
+        self._running: dict[int, _Running] = {}
+        self._free = self.total_workers
+        #: event heap: (time, seq, kind, job_id, epoch)
+        self._events: list[tuple[float, int, str, int, int]] = []
+        self._seq = 0
+        policy.prepare(self, sorted({j.app for j in jobs}))
+        i = 0
+        now = jobs[0].arrival if jobs else 0.0
+
+        while i < len(jobs) or pending or self._running:
+            next_arrival = jobs[i].arrival if i < len(jobs) else math.inf
+            next_event = self._events[0][0] if self._events else math.inf
+            if (
+                pending and not self._running
+                and next_arrival == math.inf and next_event == math.inf
+            ):
+                stuck = [j.job_id for j in pending]
+                raise RuntimeError(
+                    f"policy {policy.name!r} stranded jobs {stuck}: no "
+                    f"dispatch at free={self._free}/{self.total_workers} "
+                    "workers"
+                )
+            now = min(next_arrival, next_event)
+
+            while i < len(jobs) and jobs[i].arrival <= now:
+                pending.append(jobs[i])
+                i += 1
+            while self._events and self._events[0][0] <= now:
+                t, _, kind, job_id, epoch = heapq.heappop(self._events)
+                rj = self._running.get(job_id)
+                if rj is None or rj.epoch != epoch:
+                    continue    # stale (superseded by a regrant)
+                if kind == "finish":
+                    self._complete(rj, t, policy)
+                else:
+                    self._apply_regrant(rj, t)
+
+            while pending:
+                decision = policy.select(tuple(pending), self._free, now)
+                if decision is None:
+                    break
+                if isinstance(decision, Reject):
+                    rec = records[decision.job.job_id]
+                    rec.admitted = False
+                    rec.reject_reason = decision.reason
+                    pending.remove(decision.job)
+                    continue
+                if isinstance(decision, Regrant):
+                    self._request_regrant(decision, now)
+                    continue
+                if not isinstance(decision, Dispatch):
+                    raise TypeError(
+                        f"policy returned {type(decision).__name__}; "
+                        "expected Dispatch, Reject, Regrant, or None"
+                    )
+                job, plan = decision.job, decision.plan
+                if job not in pending:
+                    raise ValueError(
+                        f"policy dispatched job {job.job_id} not in queue"
+                    )
+                if plan.workers > self._free:
+                    raise ValueError(
+                        f"plan for job {job.job_id} wants {plan.workers} "
+                        f"workers but only {self._free} are free"
+                    )
+                pending.remove(job)
+                self._dispatch(records[job.job_id], job, plan, now)
+
+            # The dispatch loop above only runs while jobs are queued,
+            # but elastic moves are also warranted on an *empty* queue —
+            # canonically a regrow right after the last queued job left.
+            # Elastic-aware policies expose them via ``idle``.
+            idle = getattr(policy, "idle", None)
+            if idle is not None:
+                while True:
+                    action = idle(self._free, now)
+                    if action is None:
+                        break
+                    if not isinstance(action, Regrant):
+                        raise TypeError(
+                            f"policy idle() returned "
+                            f"{type(action).__name__}; expected Regrant "
+                            "or None"
+                        )
+                    self._request_regrant(action, now)
+
+        if self._free != self.total_workers:
+            raise AssertionError("worker accounting leaked")
+        return TraceResult(
+            policy=policy.name,
+            total_workers=self.total_workers,
+            records=[records[j.job_id] for j in jobs],
+        )
+
+    # ------------------------------------------------------------- actions
+
+    def _push(self, t: float, kind: str, job_id: int, epoch: int) -> None:
+        self._seq += 1
+        heapq.heappush(self._events, (t, self._seq, kind, job_id, epoch))
+
+    def _dispatch(self, rec: JobRecord, job: JobSpec, plan, now: float,
+                  ) -> None:
+        rec.plan = plan
+        rec.start = now
+        rec.segments = [[now, None, plan.workers]]
+        segments = [
+            list(seg) for seg in self.oracle.remaining_segments(
+                job.app, plan.backend, job.size,
+                plan.mappers, plan.reducers, plan.workers,
+                job_id=job.job_id,
+            )
+        ]
+        rj = _Running(
+            spec=job, rec=rec, workers=plan.workers,
+            segments=segments, seg_start=now,
+        )
+        self._running[job.job_id] = rj
+        self._free -= plan.workers
+        self._push(rj.finish_time(), "finish", job.job_id, rj.epoch)
+        self._check_conservation()
+
+    def _request_regrant(self, action: Regrant, now: float) -> None:
+        rj = self._running.get(action.job_id)
+        if rj is None:
+            raise ValueError(
+                f"regrant for job {action.job_id}, which is not running"
+            )
+        if rj.pending is not None:
+            raise ValueError(
+                f"job {action.job_id} already has a pending regrant"
+            )
+        if action.workers == rj.workers:
+            raise ValueError(
+                f"regrant to the current grant ({rj.workers}) is a no-op"
+            )
+        rj.advance(now)
+        if len(rj.segments) <= 1:
+            raise ValueError(
+                f"job {action.job_id} is in its final wave; a regrant "
+                "could never take effect (check steps_remaining first)"
+            )
+        delta = action.workers - rj.workers
+        if delta > 0:
+            if delta > self._free:
+                raise ValueError(
+                    f"grow of job {action.job_id} wants {delta} more "
+                    f"workers but only {self._free} are free"
+                )
+            self._free -= delta
+            rj.reserved = delta
+        boundary = rj.next_boundary()
+        rj.pending = (action.workers, boundary)
+        self._push(boundary, "regrant", action.job_id, rj.epoch)
+        self._check_conservation()
+
+    def _apply_regrant(self, rj: _Running, t: float) -> None:
+        rj.advance(t)
+        new_w, _ = rj.pending
+        rj.pending = None
+        old_w = rj.workers
+        overhead = self.snapshot_overhead_s + self.restore_overhead_s
+        resume_t = t + overhead
+        if new_w < old_w:
+            self._free += old_w - new_w
+            rj.shrunk_from = (
+                rj.shrunk_from if rj.shrunk_from is not None else old_w
+            )
+        else:
+            rj.reserved = 0
+            if rj.shrunk_from is not None and new_w >= rj.shrunk_from:
+                rj.shrunk_from = None
+        rj.workers = new_w
+        rj.epoch += 1
+        rec = rj.rec
+        rec.segments[-1][1] = t
+        rec.segments.append([resume_t, None, new_w])
+        rec.n_regrants += 1
+        rec.overhead_s += overhead
+        rj.phase_wall["regrant"] = (
+            rj.phase_wall.get("regrant", 0.0) + overhead
+        )
+        rj.segments = [
+            list(seg) for seg in self.oracle.remaining_segments(
+                rj.spec.app, rec.plan.backend, rj.spec.size,
+                rec.plan.mappers, rec.plan.reducers, new_w,
+                map_tasks_done=rj.m_done, shuffled=rj.shuffled,
+                reduce_tasks_done=rj.r_done,
+                job_id=rj.spec.job_id,
+            )
+        ]
+        if not rj.segments:
+            raise AssertionError(
+                "regrant applied at a boundary with no remaining work"
+            )
+        rj.seg_start = resume_t
+        self._push(rj.finish_time(), "finish", rj.spec.job_id, rj.epoch)
+        self._check_conservation()
+
+    def _complete(self, rj: _Running, t: float, policy) -> None:
+        rj.advance(t)
+        if rj.segments or not rj.progress().done:
+            raise AssertionError(
+                f"job {rj.spec.job_id} completed with work remaining"
+            )
+        del self._running[rj.spec.job_id]
+        self._free += rj.workers
+        rec = rj.rec
+        rec.finish = t
+        rec.true_time = t - rec.start
+        rec.segments[-1][1] = t
+        rec.trace = self._synthesize_trace(rj)
+        policy.observe(rec)
+        self._check_conservation()
+
+    # ----------------------------------------------------------- telemetry
+
+    def _synthesize_trace(self, rj: _Running):
+        """Segment-summed per-phase trace of one (possibly interrupted)
+        job, in the engine's JobTrace shape — preemption overhead is its
+        own ``regrant`` phase so phase walls still sum to the turnaround."""
+        from repro.telemetry.trace import JobTrace
+
+        rec = rj.rec
+        trace = JobTrace(
+            app=rj.spec.app,
+            config={
+                "num_mappers": rec.plan.mappers,
+                "num_reducers": rec.plan.reducers,
+                "num_workers": rec.plan.workers,
+                "final_workers": rj.workers,
+                "reduce_backend": rec.plan.backend,
+                "input_len": int(rj.spec.size),
+                "n_regrants": rec.n_regrants,
+                "segments": [list(s) for s in rec.segments],
+            },
+        )
+        counters = {
+            "map": {"tasks": rec.plan.mappers},
+            "shuffle": {"partitions": rec.plan.reducers},
+            "reduce": {"tasks": rec.plan.reducers},
+            "regrant": {"events": rec.n_regrants},
+        }
+        for kind in ("map", "shuffle", "reduce", "regrant"):
+            wall = rj.phase_wall.get(kind)
+            if wall:
+                trace.record_phase(kind, wall, **counters[kind])
+        trace.finish(rec.true_time)
+        return trace

@@ -1,0 +1,196 @@
+"""Wave-boundary job state: cursors, snapshots, checkpoint persistence.
+
+A MapReduce job only has clean interruption points at *wave boundaries* —
+between map waves, at the shuffle barrier, and between reduce waves.  This
+module defines what the engine's state *is* at such a boundary:
+
+* :class:`JobCursor` — the scalar progress record (which tasks are done,
+  whether the shuffle barrier has passed, the monotone wave counter, the
+  current worker grant).  Task-denominated, **not** wave-denominated:
+  waves are a property of the grant (``ceil(tasks / W)``), and the whole
+  point of the elastic layer is that the grant can change mid-flight.
+* :class:`ElasticState` — the cursor plus the canonical array buffers
+  (map-output accumulators before the shuffle; reduce partitions and
+  output accumulators after it).  All buffers are *canonical* — task-major
+  with exactly M (or R) rows — so they are grant-independent and a job
+  preempted under W resumes bit-identically under W'.
+* :func:`save_snapshot` / :func:`load_snapshot` — persistence through the
+  existing :class:`repro.checkpoint.manager.CheckpointManager` (atomic
+  directory commit, ``keep=`` retention GC, template-free restore).  The
+  snapshot is a nested-dict pytree whose leaves are the canonical buffers
+  plus one unicode leaf carrying the cursor as JSON, so a snapshot is
+  fully self-describing: restore needs only the directory.
+
+The "RNG/counter state" of a job is the cursor's ``waves_executed``
+counter — the engine itself is deterministic per task (its only
+data-dependent seed is the task input, which is re-derived from the
+corpus), so no separate RNG key needs to be carried.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+
+import numpy as np
+
+from repro.elastic.regrant import WorkProgress
+
+#: snapshot schema version (bump on layout changes; load refuses unknowns).
+SNAPSHOT_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class JobCursor:
+    """Scalar progress of one job at a wave boundary.
+
+    Identity fields (``app`` .. ``shuffle_backend``) pin the job to its
+    configuration — everything except the worker grant is frozen at
+    admission.  ``workers`` is the *current* grant and is the only field
+    :func:`repro.elastic.resumable.regrant` may change.
+    """
+
+    app: str
+    input_len: int
+    mappers: int
+    reducers: int
+    workers: int
+    combiner: bool
+    capacity_factor: float
+    setup_rounds: int
+    setup_dim: int
+    reduce_backend: str
+    shuffle_backend: str
+    map_tasks_done: int = 0
+    shuffled: bool = False
+    partition_cap: int = 0      # partition width, fixed at shuffle time
+    reduce_tasks_done: int = 0
+    waves_executed: int = 0     # monotone step counter (the counter state)
+    dropped: int = 0            # shuffle overflow accounting, set at shuffle
+
+    def __post_init__(self):
+        if not (0 <= self.map_tasks_done <= self.mappers + self.workers):
+            raise ValueError(f"bad cursor {self}")
+        if self.workers < 1:
+            raise ValueError("cursor workers must be >= 1")
+
+    # ---- progress queries -------------------------------------------------
+    # The wave-count arithmetic lives in exactly one place — WorkProgress
+    # (the scheduler-side cursor) — so the engine cursor and the regrant
+    # cost model can never disagree on what a "remaining wave" is.
+
+    def progress(self) -> WorkProgress:
+        return WorkProgress(
+            mappers=self.mappers, reducers=self.reducers,
+            map_tasks_done=self.map_tasks_done, shuffled=self.shuffled,
+            reduce_tasks_done=self.reduce_tasks_done,
+        )
+
+    @property
+    def done(self) -> bool:
+        return self.progress().done
+
+    @property
+    def map_done(self) -> bool:
+        return self.map_tasks_done >= self.mappers
+
+    def steps_total(self, workers: int | None = None) -> int:
+        """Wave-boundary step count for the whole job under a grant:
+        map waves + the shuffle barrier + reduce waves."""
+        return self.progress().steps_total(
+            self.workers if workers is None else workers
+        )
+
+    def steps_remaining(self, workers: int | None = None) -> int:
+        return self.progress().steps_remaining(
+            self.workers if workers is None else workers
+        )
+
+    # ---- (de)serialization ------------------------------------------------
+
+    def to_json(self) -> str:
+        d = dataclasses.asdict(self)
+        d["_version"] = SNAPSHOT_VERSION
+        return json.dumps(d, sort_keys=True)
+
+    @staticmethod
+    def from_json(s: str) -> "JobCursor":
+        d = json.loads(s)
+        version = d.pop("_version", None)
+        if version != SNAPSHOT_VERSION:
+            raise ValueError(
+                f"unsupported snapshot version {version!r} "
+                f"(this build reads {SNAPSHOT_VERSION})"
+            )
+        return JobCursor(**d)
+
+
+@dataclasses.dataclass
+class ElasticState:
+    """Cursor + canonical buffers: everything a job needs to resume.
+
+    ``arrays`` keys by phase of life:
+
+    * before the shuffle: ``map_keys``/``map_vals``/``map_valid`` — the
+      (M, P) task-major map-output accumulators (rows past
+      ``cursor.map_tasks_done`` are still PAD/0/False);
+    * from the shuffle on: ``part_keys``/``part_vals`` — (R, cap) reduce
+      partitions — and ``out_keys``/``out_vals`` — (R, cap) reduce-output
+      accumulators.  The map buffers are dropped at the barrier (their
+      content is fully absorbed into the partitions), which also shrinks
+      every post-shuffle snapshot.
+    """
+
+    cursor: JobCursor
+    arrays: dict
+
+
+def state_to_tree(state: ElasticState) -> dict:
+    """Encode a state as a pure nested-dict pytree of numpy leaves.
+
+    The cursor rides along as a 0-d unicode leaf (JSON), which
+    ``np.save(allow_pickle=False)`` stores natively — no pickle, no side
+    files, and the checkpoint manager's manifest stays the single source
+    of truth for the layout.
+    """
+    return {
+        "cursor": np.asarray(state.cursor.to_json()),
+        "arrays": {k: np.asarray(v) for k, v in state.arrays.items()},
+    }
+
+
+def tree_to_state(tree: dict) -> ElasticState:
+    cursor = JobCursor.from_json(str(np.asarray(tree["cursor"])[()]))
+    return ElasticState(cursor=cursor, arrays=dict(tree["arrays"]))
+
+
+def save_snapshot(manager, state: ElasticState, step: int | None = None,
+                  ) -> tuple[int, float]:
+    """Persist a wave-boundary snapshot through ``manager`` (a
+    :class:`~repro.checkpoint.manager.CheckpointManager`).
+
+    ``step`` defaults to the cursor's ``waves_executed`` counter, so
+    successive snapshots of one job land in distinct slots and ``keep=``
+    retention applies across them.  Returns ``(step, wall_seconds)`` — the
+    measured save overhead is exactly what the regrant cost model charges
+    for a preemption (:meth:`repro.elastic.regrant.RegrantCostModel.record_overhead`).
+    """
+    if step is None:
+        step = state.cursor.waves_executed
+    t0 = time.perf_counter()
+    manager.save(step, state_to_tree(state))
+    return step, time.perf_counter() - t0
+
+
+def load_snapshot(manager, step: int | None = None,
+                  ) -> tuple[ElasticState, int, float]:
+    """Restore a snapshot (latest by default): (state, step, wall_seconds).
+
+    Template-free: the checkpoint manifest carries the key-paths, shapes
+    and dtypes, so the restoring process needs no knowledge of the grant
+    the job was preempted under.
+    """
+    t0 = time.perf_counter()
+    tree, step = manager.restore(step, like=None)
+    return tree_to_state(tree), step, time.perf_counter() - t0

@@ -10,6 +10,11 @@ prints a comparison table plus the online-refinement error trajectory.
 scheduler — can ``--load-models`` and skip the bootstrap profiling phase.
 ``--oracle engine`` wall-clocks the live MapReduce engine instead of the
 analytic cost (small traces only: every distinct config compiles once).
+``--elastic`` runs the trace on the :class:`repro.elastic.ElasticCluster`,
+where the ``predict-elastic`` policy may preempt running jobs at wave
+boundaries and shrink/grow their worker grants (``--ckpt-overhead`` /
+``--restore-overhead`` price each move); other policies run unchanged on
+the elastic simulator, so the comparison stays apples-to-apples.
 """
 
 from __future__ import annotations
@@ -61,6 +66,15 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--net-capacity", type=float, default=None,
                     help="fabric bytes/s budget for the predict-resource "
                          "policy (default: unconstrained = pure SJF)")
+    ap.add_argument("--elastic", action="store_true",
+                    help="run on the ElasticCluster: running jobs may be "
+                         "preempted at wave boundaries and regranted "
+                         "(the predict-elastic policy exploits this; "
+                         "other policies behave as on the base cluster)")
+    ap.add_argument("--ckpt-overhead", type=float, default=0.02,
+                    help="simulated snapshot cost per preemption, seconds")
+    ap.add_argument("--restore-overhead", type=float, default=0.02,
+                    help="simulated restore cost per preemption, seconds")
     ap.add_argument("--save-models", metavar="PATH",
                     help="persist the fitted ModelDatabase as JSON")
     ap.add_argument("--load-models", metavar="PATH",
@@ -95,11 +109,21 @@ def main(argv=None) -> None:
         )
     names = (sorted(POLICIES) if args.policies == "all"
              else args.policies.split(","))
-    cluster = Cluster(args.workers, oracle)
+    if args.elastic:
+        from repro.elastic import ElasticCluster
+
+        cluster = ElasticCluster(
+            args.workers, oracle,
+            snapshot_overhead_s=args.ckpt_overhead,
+            restore_overhead_s=args.restore_overhead,
+        )
+    else:
+        cluster = Cluster(args.workers, oracle)
 
     header = (
         f"{'policy':<18} {'makespan':>9} {'wait':>7} {'turnaround':>10} "
-        f"{'util':>5} {'SLO':>5} {'rej':>4} {'MAE%':>6} {'MAE% 1st→2nd half':>18}"
+        f"{'util':>5} {'SLO':>5} {'rej':>4} {'rgr':>4} {'MAE%':>6} "
+        f"{'MAE% 1st→2nd half':>18}"
     )
     print(f"[cluster] {args.jobs} jobs, {args.workers} workers, "
           f"arrival={args.arrival}, oracle={oracle.platform}")
@@ -135,7 +159,8 @@ def main(argv=None) -> None:
             f"{name:<18} {f(m['makespan_s']):>9} {f(m['mean_wait_s']):>7} "
             f"{f(m['mean_turnaround_s']):>10} {f(m['utilization']):>5} "
             f"{f(m['slo_attainment']):>5} {m['n_rejected']:>4} "
-            f"{f(m['pred_mae_pct'], 1):>6} {halves:>18}"
+            f"{m['n_regrants']:>4} {f(m['pred_mae_pct'], 1):>6} "
+            f"{halves:>18}"
         )
         if hasattr(policy, "db"):
             save_db = policy.db

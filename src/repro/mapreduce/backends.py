@@ -210,22 +210,27 @@ class AllToAllShuffle(ShuffleBackend):
     Runs inside a ``shard_map`` worker body.  Reducer r lives on worker
     r % W; after the exchange each worker buckets its received pairs into
     the ``reduce_waves`` local reduce slots it owns (local slot = r // W).
+
+    The worker-local halves are exposed as :meth:`pack` (before the
+    collective) and :meth:`unpack` (after it) so non-mesh callers can
+    compose them around an equivalent data movement: the elastic
+    resumable path (``repro.elastic.resumable``) vmaps both halves over a
+    worker axis and replaces the literal ``all_to_all`` with the block
+    transpose it implements — one implementation, two execution modes.
     """
 
     name = "all_to_all"
     collective = True
 
-    def exchange(self, cfg, axis, keys, values, pvalid):
-        """keys/values/pvalid: this worker's flat (n_local,) pairs.
-        Returns (bucket_keys, bucket_vals, dropped) with buckets of shape
-        (reduce_waves, red_cap)."""
-        R, W, waves_r = cfg.num_reducers, cfg.num_workers, cfg.reduce_waves
+    def pack(self, cfg, keys, values, pvalid):
+        """Worker-local pre-exchange half: partition this worker's flat
+        (n_local,) pairs by destination worker.  Returns ((send_k, send_v,
+        send_r), dropped) with (W, shuf_cap) send buffers — row i goes to
+        worker i — and the count lost to send-buffer overflow."""
+        R, W = cfg.num_reducers, cfg.num_workers
         n_local = keys.shape[0]
         # Per (src, dst) shuffle capacity: uniform share x safety factor.
         shuf_cap = phases.partition_capacity(n_local, W, cfg.capacity_factor)
-        red_cap = phases.partition_capacity(
-            W * n_local, R, cfg.capacity_factor
-        )
         # Partition local pairs by destination worker = rid % W.
         rid = jnp.where(pvalid, hash_to_reducer(keys, R), R)
         dst = jnp.where(pvalid, rid % W, W)
@@ -236,24 +241,49 @@ class AllToAllShuffle(ShuffleBackend):
         (send_k, send_v, send_r), send_dropped = bucket_scatter(
             dst, W, W, shuf_cap, (k, v, rid), (PAD_KEY, 0, R)
         )
-        # The shuffle: exchange partition i with worker i (tiled all_to_all:
-        # row i of the (W, cap) send buffer goes to worker i, received rows
-        # re-stack along the same axis).
-        recv_k = jax.lax.all_to_all(send_k, axis, 0, 0, tiled=True)
-        recv_v = jax.lax.all_to_all(send_v, axis, 0, 0, tiled=True)
-        recv_r = jax.lax.all_to_all(send_r, axis, 0, 0, tiled=True)
-        rk, rv, rr = (
-            recv_k.reshape(-1), recv_v.reshape(-1), recv_r.reshape(-1)
+        return (send_k, send_v, send_r), send_dropped
+
+    def unpack(self, cfg, n_local, rk, rv, rr):
+        """Worker-local post-exchange half: bucket the received flat pairs
+        into this worker's reduce tasks (local slot = rid // W, since
+        reducer r lives on worker r % W).  ``n_local`` is the per-worker
+        map-output pair count, which sizes the reduce-bucket capacity the
+        same way on every worker.  Returns ((bk, bv), dropped) with
+        buckets of shape (reduce_waves, red_cap)."""
+        R, W, waves_r = cfg.num_reducers, cfg.num_workers, cfg.reduce_waves
+        red_cap = phases.partition_capacity(
+            W * n_local, R, cfg.capacity_factor
         )
-        # Bucket received pairs into this worker's reduce tasks
-        # (local slot = rid // W, since reducer r lives on worker r % W).
         lslot = jnp.where(rr < R, rr // W, waves_r)
         order = jnp.lexsort((rk, lslot))
         rk, rv, lslot = rk[order], rv[order], lslot[order]
         (bk, bv), recv_dropped = bucket_scatter(
             lslot, waves_r, waves_r, red_cap, (rk, rv), (PAD_KEY, 0)
         )
-        return bk, bv, send_dropped + recv_dropped
+        return (bk, bv), recv_dropped
+
+    def exchange(self, cfg, axis, keys, values, pvalid):
+        """keys/values/pvalid: this worker's flat (n_local,) pairs.
+        Returns (bucket_keys, bucket_vals, dropped) with buckets of shape
+        (reduce_waves, red_cap) and ``dropped`` a per-phase (2,) vector
+        ``[send_dropped, recv_dropped]`` — send-buffer overflow vs
+        reduce-bucket overflow, kept separate so the sharded path can
+        report true per-phase counters, not just the aggregate."""
+        n_local = keys.shape[0]
+        (send_k, send_v, send_r), send_dropped = self.pack(
+            cfg, keys, values, pvalid
+        )
+        # The shuffle: exchange partition i with worker i (tiled all_to_all:
+        # row i of the (W, cap) send buffer goes to worker i, received rows
+        # re-stack along the same axis).
+        recv_k = jax.lax.all_to_all(send_k, axis, 0, 0, tiled=True)
+        recv_v = jax.lax.all_to_all(send_v, axis, 0, 0, tiled=True)
+        recv_r = jax.lax.all_to_all(send_r, axis, 0, 0, tiled=True)
+        (bk, bv), recv_dropped = self.unpack(
+            cfg, n_local,
+            recv_k.reshape(-1), recv_v.reshape(-1), recv_r.reshape(-1),
+        )
+        return bk, bv, jnp.stack([send_dropped, recv_dropped])
 
 
 # ---------------------------------------------------------------------------

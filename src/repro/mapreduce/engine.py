@@ -204,8 +204,9 @@ def build_job(app: MapReduceApp, cfg: JobConfig, input_len: int,
     if shuffle.collective:
         if recorder is not None:
             raise ValueError(
-                "per-phase telemetry is single-controller only; the "
-                "sharded path reports aggregate dropped counts instead"
+                "per-phase wall-clock telemetry is single-controller only; "
+                "for the sharded path use build_job_sharded(counters=True) "
+                "to get cross-shard-reduced per-phase dropped counters"
             )
         if mesh is None:
             raise ValueError(
@@ -315,7 +316,7 @@ def _build_job_traced(app, cfg, stages, meta, recorder):
 
 def build_job_sharded(
     app: MapReduceApp, cfg: JobConfig, input_len: int, mesh: jax.sharding.Mesh,
-    axis: str = "workers",
+    axis: str = "workers", counters: bool = False,
 ):
     """shard_map MapReduce: W = mesh axis size; shuffle = all_to_all.
 
@@ -325,6 +326,18 @@ def build_job_sharded(
     ``all_to_all`` shuffle backend, then reduces the reducer tasks it owns
     through ``cfg.reduce_backend``.  This is the deployment path for real
     multi-chip meshes; semantics match `build_job`.
+
+    With ``counters=True`` the returned job yields ``(out_keys, out_vals,
+    dropped, stats)`` where ``stats`` reduces the per-worker overflow
+    counters across shards into true per-phase totals (the telemetry the
+    single-controller traced path measures, which the fused ``shard_map``
+    program otherwise collapses to one aggregate)::
+
+        stats = {
+            "dropped_send": int,   # shuffle send-buffer overflow, all workers
+            "dropped_recv": int,   # reduce-bucket overflow, all workers
+            "dropped_per_worker": (W, 2) ndarray,  # [send, recv] per worker
+        }
     """
     W = mesh.shape[axis]
     if cfg.num_workers != W:
@@ -362,7 +375,9 @@ def build_job_sharded(
         worker,
         mesh=mesh,
         in_specs=(spec_in, spec_in),
-        out_specs=(P_(axis, None, None), P_(axis, None, None), P_(axis)),
+        out_specs=(
+            P_(axis, None, None), P_(axis, None, None), P_(axis, None),
+        ),
         # pallas_call has no replication rule; every output is axis-sharded
         # anyway, so the check adds nothing here.
         check=False,
@@ -381,9 +396,28 @@ def build_job_sharded(
         # slot-major stacking is exactly reducer r's partition.
         ok = ok.transpose(1, 0, 2).reshape(-1, ok.shape[-1])[:R]
         ov = ov.transpose(1, 0, 2).reshape(-1, ov.shape[-1])[:R]
-        return ok, ov, dropped.sum()
+        # dropped: (W, 2) per-worker [send, recv] overflow counters.
+        return ok, ov, dropped
 
-    return jax.jit(job)
+    jitted = jax.jit(job)
+
+    if not counters:
+        def plain(tokens):
+            ok, ov, dropped = jitted(tokens)
+            return ok, ov, dropped.sum()
+        return plain
+
+    def with_counters(tokens):
+        ok, ov, dropped = jitted(tokens)
+        per_worker = np.asarray(dropped)
+        stats = {
+            "dropped_send": int(per_worker[:, 0].sum()),
+            "dropped_recv": int(per_worker[:, 1].sum()),
+            "dropped_per_worker": per_worker,
+        }
+        return ok, ov, dropped.sum(), stats
+
+    return with_counters
 
 
 def collect_results(out_keys, out_vals) -> dict[int, int]:

@@ -107,13 +107,33 @@ class JobTrace:
         return [p.phase for p in self.phases]
 
     def phase_times(self) -> dict[str, float]:
-        return {p.phase: p.wall_s for p in self.phases}
+        """Wall seconds per phase name.
+
+        A phase name may appear several times — an elastically preempted
+        job records one entry per executed *segment* (e.g. the map waves
+        run before and after a regrant).  Times sum per name, so segmented
+        and uninterrupted traces answer this query identically.
+        """
+        out: dict[str, float] = {}
+        for p in self.phases:
+            out[p.phase] = out.get(p.phase, 0.0) + p.wall_s
+        return out
 
     def phase_time_sum(self) -> float:
         return sum(p.wall_s for p in self.phases)
 
     def counter(self, phase: str, name: str, default: float = 0.0) -> float:
-        return self.phase(phase).counters.get(name, default)
+        """Counter total for ``phase`` — summed across segment entries of
+        the same phase (single-entry traces are unaffected); ``default``
+        only when no entry of the phase carries the counter."""
+        entries = [p for p in self.phases if p.phase == phase]
+        if not entries:
+            raise KeyError(
+                f"no phase {phase!r} in trace; recorded: "
+                f"{self.phase_names()}"
+            )
+        vals = [p.counters[name] for p in entries if name in p.counters]
+        return sum(vals) if vals else default
 
     # ---- invariants ------------------------------------------------------
 
@@ -130,26 +150,32 @@ class JobTrace:
         """
         bad: list[str] = []
         names = set(self.phase_names())
+        # Counters aggregate across segment entries of the same phase
+        # (elastic preemption splits phases into segments), so the same
+        # laws hold for interrupted and uninterrupted runs.
         if "shuffle" in names:
-            c = self.phase("shuffle").counters
-            if c.get("bytes_in") != c.get("bytes_out", 0.0) + c.get(
-                "bytes_dropped", 0.0
+            has = set().union(
+                *(p.counters for p in self.phases if p.phase == "shuffle")
+            )
+            c = lambda name: self.counter("shuffle", name)
+            if "bytes_in" in has and c("bytes_in") != c("bytes_out") + c(
+                "bytes_dropped"
             ):
                 bad.append(
                     "shuffle bytes_in != bytes_out + bytes_dropped "
-                    f"({c.get('bytes_in')} != {c.get('bytes_out')} + "
-                    f"{c.get('bytes_dropped')})"
+                    f"({c('bytes_in')} != {c('bytes_out')} + "
+                    f"{c('bytes_dropped')})"
                 )
-            if c.get("pairs_in") != c.get("pairs_out", 0.0) + c.get(
-                "pairs_dropped", 0.0
+            if "pairs_in" in has and c("pairs_in") != c("pairs_out") + c(
+                "pairs_dropped"
             ):
                 bad.append("shuffle pairs_in != pairs_out + pairs_dropped")
-            if "map" in names:
+            if "map" in names and "pairs_in" in has:
                 emitted = self.counter("map", "pairs_emitted")
-                if emitted != c.get("pairs_in"):
+                if emitted != c("pairs_in"):
                     bad.append(
                         f"map pairs_emitted {emitted} != shuffle pairs_in "
-                        f"{c.get('pairs_in')}"
+                        f"{c('pairs_in')}"
                     )
         if self.total_s is not None and self.phases:
             gap = abs(self.total_s - self.phase_time_sum())

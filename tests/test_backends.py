@@ -121,6 +121,29 @@ class TestShuffleBackendEquivalence:
         with pytest.raises(ValueError, match="mesh"):
             build_job(wordcount(16), cfg, 100)
 
+    def test_sharded_per_phase_dropped_counters(self, mesh1):
+        """counters=True reduces per-worker overflow counters across
+        shards into true per-phase totals (ROADMAP's sharded telemetry
+        gap).  At W=1 the send stage cannot overflow (its capacity is
+        the whole local stream), so every drop must be attributed to the
+        receive/bucket stage — and match the single-controller count."""
+        from repro.mapreduce import build_job_sharded
+
+        corpus = np.zeros(600, dtype=np.int32)  # one key: max skew
+        app = wordcount(16)
+        lex = _job_output(app, corpus, num_mappers=2, num_reducers=4,
+                          capacity_factor=1.0)
+        cfg = JobConfig(num_mappers=2, num_reducers=4, num_workers=1,
+                        capacity_factor=1.0, shuffle_backend="all_to_all")
+        ok, ov, dropped, stats = build_job_sharded(
+            app, cfg, len(corpus), mesh1, counters=True
+        )(corpus)
+        assert int(dropped) == lex[1] > 0
+        assert stats["dropped_send"] == 0
+        assert stats["dropped_recv"] == lex[1]
+        assert stats["dropped_per_worker"].shape == (1, 2)
+        assert stats["dropped_per_worker"].sum() == int(dropped)
+
 
 class TestBackendValidation:
     def test_unknown_reduce_backend_rejected(self):

@@ -1,0 +1,606 @@
+"""Elastic execution subsystem: wave-boundary checkpointable jobs +
+preemptive regrant scheduling.
+
+The load-bearing guarantees:
+
+* preempt-at-every-wave-boundary-then-resume is **bit-exact** against the
+  uninterrupted run for every reduce backend x shuffle backend;
+* for the lexsort shuffle, results are bit-exact under *any* sequence of
+  worker regrants (the canonical task-space buffers are grant-free);
+* snapshots round-trip through the checkpoint manager (dtypes included)
+  and respect ``keep=`` retention;
+* the elastic simulator conserves workers through shrink/grow events,
+  tiles each job's lifetime with segments, and reproduces the base
+  simulator when nothing regrants;
+* ``predict-elastic`` strictly beats ``predict-deadline`` on deadline
+  attainment under contention and is identical without it.
+"""
+
+from collections import Counter
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.cluster import (
+    AnalyticOracle,
+    Cluster,
+    Dispatch,
+    EngineOracle,
+    Plan,
+    SchedulingPolicy,
+    assign_deadlines,
+    generate_workload,
+    get_policy,
+)
+from repro.elastic import (
+    ElasticCluster,
+    JobCursor,
+    Regrant,
+    RegrantCostModel,
+    ResumableJob,
+    WorkProgress,
+    load_snapshot,
+    run_resumable,
+    save_snapshot,
+)
+from repro.mapreduce import (
+    REDUCE_BACKENDS,
+    JobConfig,
+    build_job,
+    collect_results,
+    wordcount,
+    wordcount_corpus,
+)
+from repro.telemetry import JobTrace, PhaseRecorder
+
+ALL_REDUCE = sorted(REDUCE_BACKENDS)
+ALL_SHUFFLE = ("lexsort", "all_to_all")
+
+CORPUS = wordcount_corpus(360, vocab_size=53, seed=9)
+APP = wordcount(53)
+WANT = dict(Counter(np.asarray(CORPUS).tolist()))
+
+
+def _cfg(**kw):
+    kw.setdefault("num_mappers", 5)
+    kw.setdefault("num_reducers", 3)
+    kw.setdefault("num_workers", 2)
+    kw.setdefault("capacity_factor", 8.0)
+    return JobConfig(**kw)
+
+
+def _outputs(job, state):
+    ok, ov, dropped = job.result(state)
+    return np.asarray(ok), np.asarray(ov), int(dropped)
+
+
+def _merge_segments(traces) -> JobTrace:
+    """One trace holding all segment phases (conservation spans segments)."""
+    merged = JobTrace(app=traces[0].app, config=dict(traces[0].config))
+    for t in traces:
+        merged.phases.extend(t.phases)
+    merged.finish(sum(t.total_s for t in traces))
+    return merged
+
+
+class TestResumableEquivalence:
+    def test_matches_fused_pipeline_bit_exact(self):
+        """W | M and W | R: the fused and wave-stepped pipelines share
+        shapes and capacities, so outputs must agree bit for bit."""
+        cfg = _cfg(num_mappers=6, num_reducers=4, num_workers=2)
+        ok_f, ov_f, d_f = build_job(APP, cfg, len(CORPUS))(CORPUS)
+        job = ResumableJob(APP, cfg, len(CORPUS))
+        ok_r, ov_r, d_r = _outputs(job, run_resumable(job, CORPUS))
+        assert np.array_equal(np.asarray(ok_f), ok_r)
+        assert np.array_equal(np.asarray(ov_f), ov_r)
+        assert int(d_f) == d_r
+
+    @pytest.mark.parametrize("reduce_backend", ALL_REDUCE)
+    @pytest.mark.parametrize("shuffle_backend", ALL_SHUFFLE)
+    def test_preempt_every_boundary_bit_exact(self, reduce_backend,
+                                              shuffle_backend):
+        """Preempt after k steps then resume, for every k: identical
+        outputs, counts, and merged-trace conservation laws."""
+        cfg = _cfg(reduce_backend=reduce_backend,
+                   shuffle_backend=shuffle_backend)
+        recorder = PhaseRecorder()
+        job = ResumableJob(APP, cfg, len(CORPUS), recorder=recorder)
+        ref_state = run_resumable(job, CORPUS)
+        ok0, ov0, d0 = _outputs(job, ref_state)
+        assert collect_results(ok0, ov0) == WANT
+        ref_trace = recorder.last
+        total_steps = ref_state.cursor.waves_executed
+        assert total_steps == 3 + 1 + 2  # map waves + shuffle + red waves
+        for k in range(1, total_steps):
+            recorder.clear()
+            part = run_resumable(job, CORPUS, preempt_after=k)
+            assert part.cursor.waves_executed == k
+            assert not part.cursor.done
+            full = run_resumable(job, CORPUS, state=part)
+            ok, ov, d = _outputs(job, full)
+            assert np.array_equal(ok, ok0), k
+            assert np.array_equal(ov, ov0), k
+            assert d == d0, k
+            merged = _merge_segments(recorder.traces)
+            assert merged.check_conservation() == [], k
+            # Bit-exact counts: the interrupted run measured the same
+            # phase totals as the uninterrupted one.
+            for phase, name in (
+                ("map", "pairs_emitted"),
+                ("shuffle", "pairs_out"),
+                ("shuffle", "pairs_dropped"),
+                ("reduce", "segments_out"),
+            ):
+                assert merged.counter(phase, name) == ref_trace.counter(
+                    phase, name
+                ), (k, phase, name)
+
+    @pytest.mark.parametrize("reduce_backend", ALL_REDUCE)
+    def test_regrant_any_schedule_bit_exact_lexsort(self, reduce_backend):
+        """Lexsort jobs may change W at every boundary and still match
+        the fixed-grant run bit for bit (canonical task-space buffers)."""
+        cfg = _cfg(reduce_backend=reduce_backend)
+        job = ResumableJob(APP, cfg, len(CORPUS))
+        ok0, ov0, d0 = _outputs(job, run_resumable(job, CORPUS))
+        grants = [3, 1, 4, 2, 5, 3, 1]
+        state = job.initial_state()
+        i = 0
+        while not state.cursor.done:
+            state = job.regrant(state, grants[i % len(grants)])
+            state = run_resumable(job, CORPUS, state=state,
+                                  preempt_after=1)
+            i += 1
+        ok, ov, d = _outputs(job, state)
+        assert np.array_equal(ok, ok0)
+        assert np.array_equal(ov, ov0)
+        assert d == d0
+
+    def test_regrant_all_to_all_same_results(self):
+        """The collective shuffle's partition layout is W-shaped, so a
+        regrant before the barrier reshapes buffers — but with capacity
+        headroom the *results* (collected key aggregates, zero drops)
+        are identical."""
+        cfg = _cfg(capacity_factor=10.0, shuffle_backend="all_to_all")
+        job = ResumableJob(APP, cfg, len(CORPUS))
+        state = run_resumable(job, CORPUS, preempt_after=2)
+        state = job.regrant(state, 3)
+        ok, ov, d = _outputs(job, run_resumable(job, CORPUS, state=state))
+        assert d == 0
+        assert collect_results(ok, ov) == WANT
+
+    def test_result_before_done_raises(self):
+        job = ResumableJob(APP, _cfg(), len(CORPUS))
+        state = run_resumable(job, CORPUS, preempt_after=1)
+        with pytest.raises(ValueError, match="not complete"):
+            job.result(state)
+
+    def test_step_after_done_raises(self):
+        job = ResumableJob(APP, _cfg(), len(CORPUS))
+        state = run_resumable(job, CORPUS)
+        with pytest.raises(ValueError, match="complete"):
+            job.step(state, CORPUS)
+
+
+class TestSnapshotRoundTrip:
+    @pytest.mark.parametrize("preempt_after", [1, 3, 4, 5])
+    def test_manager_round_trip_resumes_bit_exact(self, tmp_path,
+                                                  preempt_after):
+        """Snapshot mid-map / at-barrier / mid-reduce through the
+        checkpoint manager, restore template-free, resume — identical."""
+        cfg = _cfg()
+        job = ResumableJob(APP, cfg, len(CORPUS))
+        ok0, ov0, d0 = _outputs(job, run_resumable(job, CORPUS))
+        state = run_resumable(job, CORPUS, preempt_after=preempt_after)
+        mgr = CheckpointManager(str(tmp_path), keep=3)
+        step, save_s = save_snapshot(mgr, state)
+        assert save_s >= 0.0
+        restored, got_step, restore_s = load_snapshot(mgr)
+        assert got_step == step == state.cursor.waves_executed
+        assert restored.cursor == state.cursor
+        for name, arr in state.arrays.items():
+            got = restored.arrays[name]
+            assert got.dtype == np.asarray(arr).dtype, name  # dtype gap
+            assert np.array_equal(got, np.asarray(arr)), name
+        ok, ov, d = _outputs(
+            job, run_resumable(job, CORPUS, state=restored)
+        )
+        assert np.array_equal(ok, ok0)
+        assert np.array_equal(ov, ov0)
+        assert d == d0
+
+    def test_restore_then_regrant_resumes_bit_exact(self, tmp_path):
+        """The restore-side can re-plan under a different grant."""
+        job = ResumableJob(APP, _cfg(), len(CORPUS))
+        ok0, ov0, d0 = _outputs(job, run_resumable(job, CORPUS))
+        state = run_resumable(job, CORPUS, preempt_after=2)
+        mgr = CheckpointManager(str(tmp_path))
+        save_snapshot(mgr, state)
+        restored, _, _ = load_snapshot(mgr)
+        restored = job.regrant(restored, 4)
+        ok, ov, d = _outputs(
+            job, run_resumable(job, CORPUS, state=restored)
+        )
+        assert np.array_equal(ok, ok0)
+        assert np.array_equal(ov, ov0)
+        assert d == d0
+
+    def test_keep_retention_gc(self, tmp_path):
+        """keep=2: successive wave snapshots GC oldest-first."""
+        job = ResumableJob(APP, _cfg(), len(CORPUS))
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        state = job.initial_state()
+        for _ in range(4):
+            state = run_resumable(job, CORPUS, state=state,
+                                  preempt_after=1)
+            save_snapshot(mgr, state)
+        assert mgr.all_steps() == [3, 4]
+        restored, step, _ = load_snapshot(mgr)
+        assert step == 4 == restored.cursor.waves_executed
+
+    def test_cursor_json_round_trip(self):
+        job = ResumableJob(APP, _cfg(), len(CORPUS))
+        cur = run_resumable(job, CORPUS, preempt_after=4).cursor
+        assert JobCursor.from_json(cur.to_json()) == cur
+
+    def test_cursor_version_gate(self):
+        job = ResumableJob(APP, _cfg(), len(CORPUS))
+        cur = job.initial_state().cursor
+        bad = cur.to_json().replace('"_version": 1', '"_version": 99')
+        with pytest.raises(ValueError, match="version"):
+            JobCursor.from_json(bad)
+
+    def test_foreign_cursor_rejected(self):
+        job_a = ResumableJob(APP, _cfg(num_mappers=5), len(CORPUS))
+        job_b = ResumableJob(APP, _cfg(num_mappers=7), len(CORPUS))
+        state = job_a.run(CORPUS, preempt_after=1)
+        with pytest.raises(ValueError, match="does not match"):
+            job_b.run(CORPUS, state=state)
+
+
+class TestRegrantCostModel:
+    def test_remaining_fraction_requantizes(self):
+        p = WorkProgress(mappers=16, reducers=8, map_tasks_done=8)
+        # under W=8: 1 map wave + shuffle + 1 reduce wave of 4 total
+        assert p.steps_remaining(8) == 3
+        assert p.steps_total(8) == 4
+        # under W=4: 2 map waves left of 7 total steps
+        assert p.steps_remaining(4) == 5
+        assert p.steps_total(4) == 7
+        assert 0 < p.remaining_fraction(8) < 1
+
+    def test_grow_worth_it_when_gain_beats_overhead(self):
+        cm = RegrantCostModel(snapshot_overhead_s=0.01,
+                              restore_overhead_s=0.01)
+        p = WorkProgress(mappers=16, reducers=8)
+        d = cm.evaluate(t_total_current=10.0, t_total_new=4.0,
+                        progress=p, current_workers=2, new_workers=8)
+        assert d.worth_it and d.gain_s > 0
+        # overhead dominating a tiny remaining run kills the move
+        d2 = cm.evaluate(t_total_current=0.01, t_total_new=0.004,
+                         progress=p, current_workers=2, new_workers=8)
+        assert not d2.worth_it
+
+    def test_shrink_gates(self):
+        cm = RegrantCostModel(snapshot_overhead_s=0.01,
+                              restore_overhead_s=0.01,
+                              min_remaining_frac=0.3,
+                              max_overhead_frac=0.25)
+        nearly_done = WorkProgress(
+            mappers=16, reducers=8, map_tasks_done=16, shuffled=True,
+            reduce_tasks_done=7,
+        )
+        d = cm.evaluate(t_total_current=10.0, t_total_new=12.0,
+                        progress=nearly_done, current_workers=8,
+                        new_workers=2)
+        assert not d.shrink_ok  # almost finished: never checkpoint
+        fresh = WorkProgress(mappers=16, reducers=8)
+        d2 = cm.evaluate(t_total_current=10.0, t_total_new=12.0,
+                         progress=fresh, current_workers=8, new_workers=2)
+        assert d2.shrink_ok
+
+    def test_measured_overhead_ewma(self):
+        cm = RegrantCostModel(snapshot_overhead_s=0.1,
+                              restore_overhead_s=0.1, ewma_alpha=0.5)
+        cm.record_overhead(0.3, 0.5)
+        assert cm.snapshot_overhead_s == pytest.approx(0.2)
+        assert cm.restore_overhead_s == pytest.approx(0.3)
+        assert cm.n_observed == 1
+
+
+class TestAnalyticOracleRemaining:
+    def test_zero_progress_sums_to_time(self):
+        o = AnalyticOracle(noise=0.05, seed=3)
+        t = o.time("wordcount", "jnp", 65536, 16, 12, 4, job_id=7)
+        segs = o.remaining_segments(
+            "wordcount", "jnp", 65536, 16, 12, 4, job_id=7
+        )
+        kinds = [k for k, _ in segs]
+        assert kinds == ["map"] * 4 + ["shuffle"] + ["reduce"] * 3
+        assert sum(s for _, s in segs) == pytest.approx(t, rel=1e-12)
+
+    def test_remaining_monotone_in_progress(self):
+        o = AnalyticOracle(noise=0.0)
+        args = ("eximparse", "xla", 32768, 12, 8, 4)
+        full = o.remaining_time(*args)
+        mid = o.remaining_time(*args, map_tasks_done=8)
+        post = o.remaining_time(*args, map_tasks_done=12, shuffled=True,
+                                reduce_tasks_done=4)
+        assert full > mid > post > 0
+
+    def test_requantization_under_new_grant(self):
+        """Remaining tasks re-wave under the new grant: half the mappers
+        done, W doubles -> one map wave left instead of two."""
+        o = AnalyticOracle(noise=0.0)
+        segs_w4 = o.remaining_segments(
+            "wordcount", "jnp", 65536, 16, 8, 4, map_tasks_done=8
+        )
+        segs_w8 = o.remaining_segments(
+            "wordcount", "jnp", 65536, 16, 8, 8, map_tasks_done=8
+        )
+        assert [k for k, _ in segs_w4].count("map") == 2
+        assert [k for k, _ in segs_w8].count("map") == 1
+
+
+class _ScriptedElastic(SchedulingPolicy):
+    """Dispatches each arrival at a fixed grant; shrinks job 0 when job 1
+    arrives, grows it back when job 1 completes."""
+
+    name = "scripted-elastic"
+
+    def __init__(self):
+        self.shrunk = False
+        self.grown = False
+
+    def prepare(self, cluster, apps):
+        self.cluster = cluster
+
+    def select(self, queue, free_workers, now):
+        running = {v.job_id: v for v in self.cluster.running_jobs(now)}
+        if queue and queue[0].job_id == 1 and not self.shrunk:
+            v = running.get(0)
+            if v is not None and v.pending_workers is None:
+                self.shrunk = True
+                return Regrant(0, 2, reason="scripted shrink")
+        if queue:
+            plan = Plan(backend="jnp", mappers=16, reducers=8,
+                        workers=min(8, free_workers) or 1)
+            if plan.workers > free_workers:
+                return None
+            return Dispatch(queue[0], plan)
+        return None
+
+    def idle(self, free_workers, now):
+        if self.grown or not self.shrunk:
+            return None
+        v = {u.job_id: u for u in self.cluster.running_jobs(now)}.get(0)
+        if (
+            v is not None and v.pending_workers is None
+            and v.workers == 2 and v.steps_remaining >= 2
+            and free_workers >= 6
+        ):
+            self.grown = True
+            return Regrant(0, 8, reason="scripted grow")
+        return None
+
+
+class TestElasticClusterSim:
+    def _jobs(self, n=2, gap=0.15, size=1 << 17):
+        return generate_workload(
+            n, seed=5, arrival="uniform", mean_interarrival=gap,
+            size_range=(size, size),
+        )
+
+    def test_scripted_shrink_grow_accounting(self):
+        oracle = AnalyticOracle(noise=0.0)
+        cluster = ElasticCluster(
+            12, oracle, snapshot_overhead_s=0.01, restore_overhead_s=0.02
+        )
+        policy = _ScriptedElastic()
+        result = cluster.run(self._jobs(), policy)
+        assert policy.shrunk and policy.grown
+        rec = result.records[0]
+        assert rec.n_regrants == 2
+        assert rec.overhead_s == pytest.approx(2 * 0.03)
+        # segments tile [start, finish] with overhead-sized gaps only
+        assert rec.segments[0][0] == rec.start
+        assert rec.segments[-1][1] == rec.finish
+        grants = [w for _, _, w in rec.segments]
+        assert grants == [8, 2, 8]
+        for (_, t1, _), (t2, _, _) in zip(rec.segments, rec.segments[1:]):
+            assert t2 - t1 == pytest.approx(0.03)
+        # both jobs completed exactly once; worker accounting conserved
+        assert all(r.completed for r in result.records)
+        m = result.metrics()
+        assert m["n_regrants"] == 2
+        assert m["n_preempted_jobs"] == 1
+        assert m["regrant_overhead_s"] == pytest.approx(0.06)
+
+    def test_synthesized_trace_segments_and_conservation(self):
+        oracle = AnalyticOracle(noise=0.0)
+        cluster = ElasticCluster(12, oracle)
+        result = cluster.run(self._jobs(), _ScriptedElastic())
+        trace = result.records[0].trace
+        assert trace is not None
+        times = trace.phase_times()
+        assert times.get("regrant", 0.0) == pytest.approx(0.08)
+        assert set(times) >= {"map", "shuffle", "reduce", "regrant"}
+        # phase walls (including overhead) sum to the turnaround
+        assert trace.check_conservation(time_rel_tol=1e-9,
+                                        time_abs_tol=1e-9) == []
+        assert trace.total_s == pytest.approx(
+            result.records[0].true_time
+        )
+
+    def test_no_regrant_policy_matches_base_cluster(self):
+        """With no elastic actions the elastic simulator reproduces the
+        base event loop's schedule."""
+        jobs = generate_workload(
+            25, seed=3, arrival="bursty", mean_interarrival=0.1,
+            size_range=(1 << 14, 1 << 17),
+        )
+        oracle = AnalyticOracle(noise=0.02, seed=3)
+        jobs = assign_deadlines(
+            jobs, lambda j: oracle.nominal_time(j.app, j.size),
+            slack_range=(1.5, 4.0), fraction=0.5, seed=4,
+        )
+        m_base = Cluster(12, AnalyticOracle(noise=0.02, seed=3)).run(
+            jobs, get_policy("predict-deadline", seed=3)
+        ).metrics()
+        m_el = ElasticCluster(12, AnalyticOracle(noise=0.02, seed=3)).run(
+            jobs, get_policy("predict-deadline", seed=3)
+        ).metrics()
+        assert m_el["n_regrants"] == 0
+        assert m_el["makespan_s"] == pytest.approx(
+            m_base["makespan_s"], rel=1e-9
+        )
+        assert m_el["slo_attainment"] == m_base["slo_attainment"]
+        assert m_el["n_rejected"] == m_base["n_rejected"]
+
+    def test_inelastic_oracle_rejected(self):
+        class NoSegments:
+            platform = "x"
+
+            def time(self, *a, **k):
+                return 1.0
+
+        with pytest.raises(TypeError, match="remaining_segments"):
+            ElasticCluster(4, NoSegments())
+
+    def test_invalid_regrants_raise(self):
+        oracle = AnalyticOracle(noise=0.0)
+        cluster = ElasticCluster(12, oracle)
+
+        class Bad(SchedulingPolicy):
+            name = "bad-elastic"
+
+            def __init__(self, action):
+                self.action = action
+                self.sent = False
+                self.dispatched = False
+
+            def prepare(self, cluster, apps):
+                self.cluster = cluster
+
+            def select(self, queue, free, now):
+                if not self.dispatched:
+                    self.dispatched = True
+                    return Dispatch(
+                        queue[0],
+                        Plan(backend="jnp", mappers=16, reducers=8,
+                             workers=8),
+                    )
+                if not self.sent:
+                    self.sent = True
+                    return self.action
+                return None
+
+        jobs = self._jobs(n=2, gap=0.1)
+        with pytest.raises(ValueError, match="not running"):
+            cluster.run(jobs, Bad(Regrant(99, 2)))
+        with pytest.raises(ValueError, match="no-op"):
+            ElasticCluster(12, oracle).run(jobs, Bad(Regrant(0, 8)))
+        with pytest.raises(ValueError, match="free"):
+            ElasticCluster(12, oracle).run(jobs, Bad(Regrant(0, 100)))
+
+    def test_regrant_action_validation(self):
+        with pytest.raises(ValueError, match="bad regrant"):
+            Regrant(0, 0)
+
+
+class TestPredictElasticPolicy:
+    CONTENDED = dict(arrival="bursty", mean_interarrival=0.08,
+                     slack=(1.1, 2.2), frac=0.5, workers=12, n=50)
+    UNCONTENDED = dict(arrival="poisson", mean_interarrival=1.0,
+                       slack=(2.5, 6.0), frac=0.5, workers=12, n=30)
+
+    def _run(self, policy_name, *, arrival, mean_interarrival, slack,
+             frac, workers, n, seed=1):
+        oracle = AnalyticOracle(noise=0.02, seed=seed)
+        jobs = generate_workload(
+            n, seed=seed, arrival=arrival,
+            mean_interarrival=mean_interarrival,
+            size_range=(1 << 14, 1 << 18),
+        )
+        jobs = assign_deadlines(
+            jobs, lambda j: oracle.nominal_time(j.app, j.size),
+            slack_range=slack, fraction=frac, seed=seed + 1,
+        )
+        policy = get_policy(policy_name, seed=seed)
+        metrics = ElasticCluster(workers, oracle).run(
+            jobs, policy
+        ).metrics()
+        return metrics, policy
+
+    def test_contended_strictly_better_slo(self):
+        m_d, _ = self._run("predict-deadline", **self.CONTENDED)
+        m_e, pol = self._run("predict-elastic", **self.CONTENDED)
+        assert m_e["n_regrants"] > 0 and pol.n_shrinks > 0
+        assert m_e["slo_attainment"] > m_d["slo_attainment"]
+
+    def test_uncontended_identical_to_deadline(self):
+        m_d, _ = self._run("predict-deadline", **self.UNCONTENDED)
+        m_e, _ = self._run("predict-elastic", **self.UNCONTENDED)
+        assert m_e["n_regrants"] == 0
+        assert m_e["makespan_s"] == pytest.approx(
+            m_d["makespan_s"], rel=1e-12
+        )
+        assert m_e["slo_attainment"] == m_d["slo_attainment"]
+
+    def test_interrupted_traces_feed_phase_refits(self):
+        """Completed preempted jobs carry segment-summed traces that the
+        online refiner accepts (per-phase models keep fitting)."""
+        m_e, pol = self._run("predict-elastic", **self.CONTENDED)
+        assert pol.n_shrinks > 0
+        assert pol.refiner.n_phase_refits > 0
+
+    def test_plain_cluster_degrades_to_deadline(self):
+        jobs = generate_workload(
+            20, seed=2, arrival="poisson", mean_interarrival=0.15,
+            size_range=(1 << 14, 1 << 17),
+        )
+        oracle = AnalyticOracle(noise=0.02, seed=2)
+        jobs = assign_deadlines(
+            jobs, lambda j: oracle.nominal_time(j.app, j.size),
+            slack_range=(1.5, 4.0), fraction=0.5, seed=3,
+        )
+        m_d = Cluster(12, AnalyticOracle(noise=0.02, seed=2)).run(
+            jobs, get_policy("predict-deadline", seed=2)
+        ).metrics()
+        m_e = Cluster(12, AnalyticOracle(noise=0.02, seed=2)).run(
+            jobs, get_policy("predict-elastic", seed=2)
+        ).metrics()
+        for key in ("makespan_s", "slo_attainment", "n_rejected"):
+            assert m_e[key] == m_d[key]
+
+
+@pytest.mark.slow
+class TestEngineOracleWaveStepping:
+    def test_remaining_time_shrinks_with_progress(self):
+        oracle = EngineOracle(warmup=0, size_quantum=1024)
+        args = ("wordcount", "jnp", 4096, 4, 2, 2)
+        segs = oracle.remaining_segments(*args)
+        kinds = [k for k, _ in segs]
+        assert kinds == ["map", "map", "shuffle", "reduce"]
+        assert all(t > 0 for _, t in segs)
+        partial = oracle.remaining_time(*args, map_tasks_done=4,
+                                        shuffled=True)
+        assert partial > 0
+        assert len(
+            oracle.remaining_segments(*args, map_tasks_done=4,
+                                      shuffled=True)
+        ) == 1
+
+    def test_elastic_cluster_on_engine_oracle(self):
+        """The elastic simulator runs end-to-end on the wave-stepping
+        engine oracle (tiny trace, fifo-static: no bootstrap sweep)."""
+        oracle = EngineOracle(warmup=0, size_quantum=1024)
+        jobs = generate_workload(
+            3, seed=1, arrival="uniform", mean_interarrival=0.05,
+            size_range=(2048, 4096),
+        )
+        result = ElasticCluster(4, oracle).run(
+            jobs, get_policy("fifo-static", mappers=4, reducers=4,
+                             workers=2)
+        )
+        assert all(r.completed for r in result.records)

@@ -35,6 +35,17 @@ cfg = JobConfig(num_mappers=6, num_reducers=5, num_workers=4,
 ok, ov, d = build_job(app, cfg, len(corpus), mesh=mesh)(corpus)
 assert int(d) == 0
 assert collect_results(ok, ov) == dict(Counter(corpus.tolist()))
+# per-phase dropped counters, cross-shard reduced: max-skew corpus (one
+# key) overflows the per-(src, dst) send buffers at W=4
+import numpy as np
+skew = np.zeros(600, dtype=np.int32)
+cfg = JobConfig(num_mappers=2, num_reducers=4, num_workers=4,
+                capacity_factor=1.0)
+ok, ov, d, stats = build_job_sharded(app, cfg, len(skew), mesh,
+                                     counters=True)(skew)
+assert stats["dropped_per_worker"].shape == (4, 2)
+assert stats["dropped_send"] + stats["dropped_recv"] == int(d) > 0
+assert stats["dropped_send"] > 0  # skew saturates the send stage
 print("SHARDED_OK")
 """
 
