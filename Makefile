@@ -3,8 +3,8 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast test-elastic bench-quick bench-backends \
-	bench-cluster bench-phases bench-elastic lint
+.PHONY: test test-fast test-elastic test-plan bench-quick bench-backends \
+	bench-cluster bench-phases bench-elastic bench-check lint
 
 # Tier-1 verify (ROADMAP.md).
 test:
@@ -28,10 +28,21 @@ test-fast:
 test-elastic:
 	$(PYTHON) -m pytest -x -q -m "not slow" tests/test_elastic.py
 
+# The ExecutionPlan mode-equivalence suite (fused == traced == sharded
+# == resumable, bit-exact, every backend combination).
+test-plan:
+	$(PYTHON) -m pytest -x -q -m "not slow" tests/test_plan.py
+
 # Full benchmark harness at reduced size.  BENCH_FLAGS passes extra
 # harness args (e.g. the CI bench-smoke job's tiny --tokens grid).
 bench-quick:
 	$(PYTHON) -m benchmarks.run --quick $(BENCH_FLAGS)
+
+# Bench-regression guard: quick harness + comparison against the
+# committed experiments/bench/BENCH_*.json baselines (>25% makespan/SLO
+# regression fails).  CI's bench-smoke job runs this.
+bench-check:
+	$(PYTHON) -m benchmarks.run --quick --check $(BENCH_FLAGS)
 
 # Just the reduce-backend comparison section.
 bench-backends:

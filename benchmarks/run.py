@@ -20,6 +20,13 @@ section's rows and ``BENCH_<section>.json`` with summary stats (row count,
 wall time, status, any section-provided summary dict, and a provenance
 stamp — git SHA, jax version, platform — so ``experiments/bench/``
 trajectories are comparable across PRs).
+
+``--check`` turns the committed artifacts into a regression gate: the
+fresh summaries are compared against the committed ``BENCH_<sec>.json``
+baselines (read before this run overwrites them) and the harness exits
+non-zero when any guarded metric — scheduler makespan or SLO attainment,
+both from deterministic analytic simulations — regresses by more than
+25%.  CI's bench-smoke job runs with ``--check``.
 """
 
 from __future__ import annotations
@@ -141,6 +148,79 @@ def run_section(sec: str, tokens: int, repeats: int):
     raise ValueError(f"unknown section {sec!r}; expected {ALL_SECTIONS}")
 
 
+#: --check regression gate: relative tolerance on the guarded metrics.
+CHECK_TOLERANCE = 0.25
+
+
+def _walk_metrics(summary, path=""):
+    """Yield (dotted_path, key, value) for every guarded metric leaf."""
+    if isinstance(summary, dict):
+        for k, v in summary.items():
+            p = f"{path}.{k}" if path else str(k)
+            if k in ("makespan_s", "slo_attainment") and isinstance(
+                v, (int, float)
+            ):
+                yield p, k, float(v)
+            else:
+                yield from _walk_metrics(v, p)
+
+
+def load_committed(outdir: str, sections) -> dict:
+    """The BENCH_<sec>.json summaries as committed, read *before* this
+    run overwrites them — the baseline the --check gate compares against."""
+    committed = {}
+    for sec in sections:
+        path = os.path.join(outdir, f"BENCH_{sec}.json")
+        try:
+            with open(path) as f:
+                committed[sec] = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            continue
+    return committed
+
+
+def check_regressions(committed: dict, fresh: dict) -> list[str]:
+    """Compare guarded metrics (makespan_s / slo_attainment) of each
+    fresh section summary against the committed baseline.
+
+    A regression is a makespan more than ``CHECK_TOLERANCE`` above the
+    committed value, or an SLO attainment more than ``CHECK_TOLERANCE``
+    below it.  Only metric paths present in both summaries compare; the
+    guarded sections (cluster, elastic) are deterministic analytic
+    simulations, so drift means a real behavior change, not noise.
+    """
+    problems: list[str] = []
+    for sec, old in committed.items():
+        new = fresh.get(sec)
+        if new is None or old.get("status") != "ok":
+            continue
+        if new.get("status") != "ok":
+            problems.append(f"{sec}: section now fails "
+                            f"({new.get('error', 'unknown error')})")
+            continue
+        old_metrics = {p: (k, v) for p, k, v in
+                       _walk_metrics(old.get("summary", {}))}
+        new_metrics = {p: (k, v) for p, k, v in
+                       _walk_metrics(new.get("summary", {}))}
+        for p, (kind, old_v) in sorted(old_metrics.items()):
+            if p not in new_metrics:
+                continue
+            new_v = new_metrics[p][1]
+            if kind == "makespan_s" and new_v > old_v * (1 + CHECK_TOLERANCE):
+                problems.append(
+                    f"{sec}: {p} regressed {old_v:.3f} -> {new_v:.3f} "
+                    f"(+{(new_v / max(old_v, 1e-12) - 1) * 100:.0f}%)"
+                )
+            elif kind == "slo_attainment" and (
+                new_v < old_v * (1 - CHECK_TOLERANCE)
+            ):
+                problems.append(
+                    f"{sec}: {p} regressed {old_v:.3f} -> {new_v:.3f} "
+                    f"(-{(1 - new_v / max(old_v, 1e-12)) * 100:.0f}%)"
+                )
+    return problems
+
+
 def write_artifacts(
     outdir: str, sec: str, rows: list[str], summary: dict
 ) -> None:
@@ -164,6 +244,11 @@ def main() -> None:
     ap.add_argument("--outdir", default="experiments/bench",
                     help="where bench_<sec>.csv + BENCH_<sec>.json land "
                          "(empty string disables)")
+    ap.add_argument("--check", action="store_true",
+                    help="bench-regression guard: compare the fresh "
+                         "summaries against the committed BENCH_<sec>.json "
+                         "baselines and exit non-zero on a >25%% makespan "
+                         "or SLO-attainment regression (CI smoke gate)")
     args = ap.parse_args()
     tokens = args.tokens or (1 << 14 if args.quick else 1 << 16)
     repeats = 2 if args.quick else 5
@@ -174,6 +259,11 @@ def main() -> None:
     rows: list[str] = []
     t_start = time.time()
     stamp = provenance()
+    committed = (
+        load_committed(args.outdir, sections)
+        if args.check and args.outdir else {}
+    )
+    fresh: dict[str, dict] = {}
     for sec in sections:
         t0 = time.time()
         sec_rows: list[str] = []
@@ -196,13 +286,26 @@ def main() -> None:
         summary["n_rows"] = len(sec_rows)
         summary["wall_seconds"] = round(time.time() - t0, 3)
         rows += sec_rows
+        fresh[sec] = summary
         if summary["status"] == "ok":
             rows.append(f"_timing,{sec},{summary['wall_seconds']:.1f}s,")
         if args.outdir:
             write_artifacts(args.outdir, sec, sec_rows, summary)
     rows.append(f"_timing,total,{time.time() - t_start:.1f}s,")
+    problems = []
+    if args.check:
+        problems = check_regressions(committed, fresh)
+        checked = sorted(
+            sec for sec in committed
+            if any(_walk_metrics(committed[sec].get("summary", {})))
+        )
+        rows.append(
+            f"_check,sections={'+'.join(checked) or 'none'},"
+            f"regressions={len(problems)},tolerance={CHECK_TOLERANCE}"
+        )
+        rows += [f"_check_fail,{p}" for p in problems]
     print("\n".join(rows))
-    if any(r.startswith("_error") for r in rows):
+    if any(r.startswith("_error") for r in rows) or problems:
         sys.exit(1)
 
 

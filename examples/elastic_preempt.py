@@ -32,6 +32,10 @@ def main():
     app = wordcount(211)
     cfg = JobConfig(num_mappers=8, num_reducers=4, num_workers=2,
                     capacity_factor=8.0)
+    # ResumableJob is the resumable *mode* of the one ExecutionPlan the
+    # fused/traced/sharded paths also run (repro.mapreduce.plan), so the
+    # wave-stepped results below are bit-exact vs build_job by
+    # construction.
     job = ResumableJob(app, cfg, len(corpus))
 
     # Reference: the uninterrupted run.

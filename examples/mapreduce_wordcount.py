@@ -1,8 +1,12 @@
 """Run the TPU-native MapReduce engine end-to-end: WordCount over a Zipf
-corpus, with the shuffle on the sharded (all_to_all) path when more than
-one device is available.
+corpus, through one ExecutionPlan whose *mode* is picked by the flags —
+fused single-controller by default, the sharded (all_to_all) mesh mode
+with more than one worker, and the phase-fenced traced mode (per-phase
+wall times, on either path) with --phase-times.
 
     PYTHONPATH=src python examples/mapreduce_wordcount.py
+    # per-phase wall times (works on the sharded path too):
+    PYTHONPATH=src python examples/mapreduce_wordcount.py --phase-times
     # multi-worker shuffle:
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
         PYTHONPATH=src python examples/mapreduce_wordcount.py --workers 4
@@ -14,9 +18,8 @@ import time
 import jax
 
 from repro.mapreduce import (
+    ExecutionPlan,
     JobConfig,
-    build_job,
-    build_job_sharded,
     collect_results,
     wordcount,
     wordcount_corpus,
@@ -29,6 +32,9 @@ def main() -> None:
     ap.add_argument("--mappers", type=int, default=20)
     ap.add_argument("--reducers", type=int, default=5)
     ap.add_argument("--workers", type=int, default=1)
+    ap.add_argument("--phase-times", action="store_true",
+                    help="run the traced mode: fence + wall-clock each "
+                         "phase (three fenced mesh programs when sharded)")
     args = ap.parse_args()
     corpus = wordcount_corpus(args.tokens, vocab_size=4096, seed=0)
     app = wordcount(4096)
@@ -36,16 +42,25 @@ def main() -> None:
         num_mappers=args.mappers, num_reducers=args.reducers,
         num_workers=args.workers,
     )
+    recorder = None
+    if args.phase_times:
+        from repro.telemetry import PhaseRecorder
+
+        recorder = PhaseRecorder()
+    plan = ExecutionPlan(app, cfg, len(corpus))
     if args.workers > 1:
         mesh = jax.make_mesh(
             (args.workers,), ("workers",),
             axis_types=(jax.sharding.AxisType.Auto,),
         )
-        job = build_job_sharded(app, cfg, len(corpus), mesh)
+        job = plan.sharded(mesh, recorder=recorder)
         path = f"sharded all_to_all over {args.workers} workers"
+    elif recorder is not None:
+        job = plan.traced(recorder)
+        path = "single-controller (traced)"
     else:
-        job = build_job(app, cfg, len(corpus))
-        path = "single-controller"
+        job = plan.fused()
+        path = "single-controller (fused)"
     jax.block_until_ready(job(corpus))  # job setup (compile)
     t0 = time.perf_counter()
     ok, ov, dropped = job(corpus)
@@ -56,6 +71,11 @@ def main() -> None:
     print(f"{args.tokens} tokens, M={cfg.num_mappers} R={cfg.num_reducers} "
           f"({cfg.map_waves}/{cfg.reduce_waves} waves), {path}")
     print(f"execution time: {dt * 1e3:.1f}ms; dropped={int(dropped)}")
+    if recorder is not None:
+        times = recorder.last.phase_times()
+        print("phase walls: " + ", ".join(
+            f"{k}={v * 1e3:.1f}ms" for k, v in times.items()
+        ))
     print("top words:", top)
     assert sum(counts.values()) == args.tokens
 

@@ -76,6 +76,7 @@ class JobRecord:
     #: the number of regrants applied, and the total overhead paid.
     segments: list | None = None
     n_regrants: int = 0
+    n_suspends: int = 0
     overhead_s: float = 0.0
 
     @property
@@ -177,6 +178,7 @@ class TraceResult:
             "n_preempted_jobs": sum(
                 1 for r in self.records if r.n_regrants > 0
             ),
+            "n_suspends": sum(r.n_suspends for r in self.records),
             "regrant_overhead_s": sum(r.overhead_s for r in self.records),
         }
 

@@ -276,16 +276,33 @@ class EngineOracle:
     for small demonstration traces (see ``examples/cluster_sim.py --real``),
     not 50-job benchmark sweeps.  Sizes are snapped to multiples of 1024 to
     bound the compile-cache cardinality.
-    """
 
-    platform = "engine-wallclock"
+    Every execution path is a mode of one
+    :class:`repro.mapreduce.plan.ExecutionPlan` per (app, size, backend,
+    M, R): ``time`` wall-clocks the fused (or, with ``sharded=True``, the
+    real ``shard_map`` mesh) mode, ``remaining_segments`` wall-clocks the
+    resumable mode's wave steppers, and traced runs fence the same
+    steppers per phase — so the scheduled path and the priced path can
+    never drift.
+
+    ``sharded=True`` (platform ``engine-sharded``) schedules the real
+    multi-device mesh path: each grant W runs on a W-device mesh (built
+    from the first W of ``jax.devices()``), and with ``traced=True`` the
+    phases execute as separate mesh programs, so completed jobs carry
+    per-phase *wall times* measured on the sharded engine — previously a
+    single-controller-only capability.
+    """
 
     def __init__(
         self, *, warmup: int = 1, size_quantum: int = 1024,
-        traced: bool = False,
+        traced: bool = False, sharded: bool = False,
+        mesh_axis: str = "workers",
     ):
         self.warmup = warmup
         self.size_quantum = size_quantum
+        self.sharded = bool(sharded)
+        self.mesh_axis = mesh_axis
+        self.platform = "engine-sharded" if sharded else "engine-wallclock"
         #: with traced=True, jobs run through the phase-split telemetry
         #: path: every execution appends a JobTrace to ``recorder`` and
         #: ``take_trace`` exposes the latest to the cluster, so completed
@@ -304,7 +321,9 @@ class EngineOracle:
         self._corpora: dict = {}
         self._jobs: dict = {}
         self._traced_jobs: dict = {}
+        self._meshes: dict = {}
         self._warmed: set = set()   # (resumable id, grant) stepper warmups
+        self._overheads: dict = {}  # measured (save_s, restore_s) cache
 
     def backends(self) -> tuple[str, ...]:
         return ("jnp", "xla")
@@ -327,24 +346,60 @@ class EngineOracle:
                 raise ValueError(f"unknown app {app!r}")
         return self._corpora[key]
 
+    def _mesh_for(self, workers: int):
+        """A ``workers``-device mesh over the first W local devices."""
+        import jax
+        import numpy as _np
+
+        W = int(workers)
+        if W not in self._meshes:
+            devices = jax.devices()
+            if W > len(devices):
+                raise ValueError(
+                    f"engine-sharded oracle needs {W} devices but only "
+                    f"{len(devices)} are visible (set XLA_FLAGS="
+                    f"--xla_force_host_platform_device_count={W} for a "
+                    "CPU emulation run)"
+                )
+            self._meshes[W] = jax.sharding.Mesh(
+                _np.asarray(devices[:W]), (self.mesh_axis,)
+            )
+        return self._meshes[W]
+
+    def _build_mode(self, app, backend, size, mappers, reducers, workers,
+                    recorder):
+        """One ExecutionPlan, lowered in this oracle's scheduling mode."""
+        from repro.mapreduce import ExecutionPlan, JobConfig
+
+        mr_app, corpus = self._corpus(app, size)
+        plan = ExecutionPlan(
+            mr_app,
+            JobConfig(
+                num_mappers=int(mappers),
+                num_reducers=int(reducers),
+                num_workers=int(workers),
+                reduce_backend=backend,
+            ),
+            len(corpus),
+        )
+        if self.sharded:
+            job = plan.sharded(
+                self._mesh_for(workers), self.mesh_axis, recorder=recorder
+            )
+        elif recorder is not None:
+            job = plan.traced(recorder)
+        else:
+            job = plan.fused()
+        return job, corpus
+
     def _get_job(self, app, backend, size, mappers, reducers, workers):
         import jax
 
-        from repro.mapreduce import JobConfig, build_job
-
         key = (app, size, backend, int(mappers), int(reducers), int(workers))
         if key not in self._jobs:
-            mr_app, corpus = self._corpus(app, size)
-            job = build_job(
-                mr_app,
-                JobConfig(
-                    num_mappers=int(mappers),
-                    num_reducers=int(reducers),
-                    num_workers=int(workers),
-                    reduce_backend=backend,
-                ),
-                len(corpus),
-                recorder=self.recorder,
+            job, corpus = self._build_mode(
+                app, backend, size, mappers, reducers, workers,
+                self.recorder,
             )
             for _ in range(self.warmup):
                 jax.block_until_ready(job(corpus))
@@ -402,25 +457,15 @@ class EngineOracle:
 
         import jax
 
-        from repro.mapreduce import JobConfig, build_job
         from repro.telemetry import PhaseRecorder
 
         size = max(self.size_quantum,
                    (int(size) // self.size_quantum) * self.size_quantum)
         key = (app, size, backend, int(mappers), int(reducers), int(workers))
         if key not in self._traced_jobs:
-            mr_app, corpus = self._corpus(app, size)
             rec = PhaseRecorder(max_traces=4)
-            job = build_job(
-                mr_app,
-                JobConfig(
-                    num_mappers=int(mappers),
-                    num_reducers=int(reducers),
-                    num_workers=int(workers),
-                    reduce_backend=backend,
-                ),
-                len(corpus),
-                recorder=rec,
+            job, corpus = self._build_mode(
+                app, backend, size, mappers, reducers, workers, rec
             )
             for _ in range(self.warmup):
                 jax.block_until_ready(job(corpus))
@@ -541,3 +586,58 @@ class EngineOracle:
     def remaining_time(self, *args, **kwargs) -> float:
         """Total remaining seconds (sum of :meth:`remaining_segments`)."""
         return sum(t for _, t in self.remaining_segments(*args, **kwargs))
+
+    def regrant_overhead(
+        self,
+        app: str,
+        backend: str,
+        size: int,
+        mappers: int,
+        reducers: int,
+        *,
+        map_tasks_done: int = 0,
+        shuffled: bool = False,
+        reduce_tasks_done: int = 0,
+    ) -> tuple[float, float]:
+        """Measured ``(save_s, restore_s)`` walls of a real wave-boundary
+        snapshot round-trip at this cursor — what a preemption *actually*
+        costs on this engine, fed to
+        :meth:`repro.elastic.regrant.RegrantCostModel.record_overhead`
+        (and charged by the elastic simulator) in place of configured
+        estimates.
+
+        The snapshot layout changes at the shuffle barrier (map
+        accumulators before, partitions after), so measurements are
+        cached per (job, phase-of-life) bucket; within a bucket the cost
+        is cursor-independent (canonical task-major buffers have static
+        shapes).
+        """
+        import tempfile
+
+        from repro.checkpoint import CheckpointManager
+        from repro.elastic.snapshot import load_snapshot, save_snapshot
+
+        size = max(self.size_quantum,
+                   (int(size) // self.size_quantum) * self.size_quantum)
+        job, corpus = self._get_resumable(
+            app, backend, size, mappers, reducers
+        )
+        # The snapshot layout flips only once the shuffle barrier has
+        # *executed* (map accumulators swap for partitions + outputs); a
+        # map-complete-but-unshuffled cursor still carries the pre-shuffle
+        # buffers, so it prices in the pre-shuffle bucket.
+        post_shuffle = bool(shuffled)
+        key = (id(job), post_shuffle)
+        if key not in self._overheads:
+            state = job.initial_state()
+            if post_shuffle:
+                # Advance through the barrier so the snapshot carries the
+                # post-shuffle (partitions + output) layout.
+                while not state.cursor.shuffled:
+                    state = job.step(state, corpus)
+            with tempfile.TemporaryDirectory() as d:
+                mgr = CheckpointManager(d, keep=1)
+                _, save_s = save_snapshot(mgr, state)
+                _, _, restore_s = load_snapshot(mgr)
+            self._overheads[key] = (float(save_s), float(restore_s))
+        return self._overheads[key]

@@ -673,6 +673,7 @@ class ElasticDeadline(DeadlineAware):
                  min_remaining_frac: float = 0.15,
                  max_overhead_frac: float = 0.25,
                  regrow: bool = True, min_grow_gain_s: float = 1e-3,
+                 suspend: bool = False,
                  **kwargs):
         super().__init__(**kwargs)
         self._shrink_floor_arg = shrink_floor
@@ -685,8 +686,16 @@ class ElasticDeadline(DeadlineAware):
         self.max_overhead_frac = float(max_overhead_frac)
         self.regrow = bool(regrow)
         self.min_grow_gain_s = float(min_grow_gain_s)
+        #: suspend-to-disk rescue: when no shrinkable victim can free
+        #: enough workers for a starved deadline job, park a whole
+        #: best-effort job on disk (grant 0) and resume it once the pool
+        #: quiets down.  Off by default: a suspended job pays the full
+        #: disk-queue wait, so this is the aggressive setting.
+        self.suspend = bool(suspend)
         self.n_shrinks = 0
         self.n_grows = 0
+        self.n_suspends = 0
+        self.n_resumes = 0
         self._awaiting: set[int] = set()
 
     def prepare(self, cluster, apps):
@@ -709,6 +718,12 @@ class ElasticDeadline(DeadlineAware):
             max_overhead_frac=self.max_overhead_frac,
         )
         self._awaiting.clear()
+
+    def observe_overhead(self, save_s: float, restore_s: float) -> None:
+        """Measured (snapshot, restore) walls from the cluster — the
+        EngineOracle path measures real ``save_snapshot``/``load_snapshot``
+        costs; folding them in keeps regrant pricing honest."""
+        self.cost_model.record_overhead(save_s, restore_s)
 
     # ---- prediction on the regression basis -----------------------------
 
@@ -831,6 +846,33 @@ class ElasticDeadline(DeadlineAware):
                     reason=f"rescue deadline job {job.job_id} "
                            f"(gain gate: {decision.gain_s:+.3f}s)",
                 )
+            if self.suspend:
+                # No shrinkable victim can free enough (typically: the
+                # best-effort jobs already sit at the shrink floor).
+                # Park one on disk entirely — its whole grant frees at
+                # the next wave boundary.
+                for victim in sorted(
+                    (
+                        v for v in views
+                        if v.spec.deadline is None
+                        and v.pending_workers is None
+                        and v.steps_remaining >= self.min_remaining_steps
+                    ),
+                    key=lambda v: (-v.workers,
+                                   -v.progress.remaining_fraction(
+                                       v.workers)),
+                ):
+                    # Gate on the cost model's most aggressive shrink:
+                    # suspension is never cheaper than shrinking to 1.
+                    if not self._evaluate_regrant(victim, 1).shrink_ok:
+                        continue
+                    self._awaiting.add(job.job_id)
+                    self.n_suspends += 1
+                    return Regrant(
+                        victim.job_id, 0,
+                        reason=f"suspend to disk: rescue deadline job "
+                               f"{job.job_id}",
+                    )
         return None
 
     def _maybe_regrow(self, queue, free_workers, views):
@@ -838,10 +880,26 @@ class ElasticDeadline(DeadlineAware):
         is quiet and the cost model predicts the move pays for itself."""
         from repro.elastic.sim import Regrant
 
-        if not self.regrow or free_workers <= 0:
+        if free_workers <= 0:
             return None
         if any(j.deadline is not None for j in queue):
             return None     # deadline work queued: keep the slack
+        # Resume suspended-to-disk jobs first: they hold zero workers and
+        # pay full queue wait, so any slack goes to them before regrows.
+        # NOT gated on self.regrow — a suspended job must always have a
+        # path back, or the simulator (rightly) reports it stranded.
+        suspended = getattr(self.cluster, "suspended_jobs", None)
+        if suspended is not None:
+            for sus in suspended():
+                w = min(sus.workers_before, free_workers)
+                if w >= 1:
+                    self.n_resumes += 1
+                    return Regrant(
+                        sus.job_id, w,
+                        reason="resume from disk (pool quiet)",
+                    )
+        if not self.regrow:
+            return None
         candidates = sorted(
             (
                 v for v in views

@@ -31,7 +31,12 @@ from repro.elastic.regrant import (
     WorkProgress,
 )
 from repro.elastic.resumable import ResumableJob, run_resumable
-from repro.elastic.sim import ElasticCluster, Regrant, RunningView
+from repro.elastic.sim import (
+    ElasticCluster,
+    Regrant,
+    RunningView,
+    SuspendedView,
+)
 from repro.elastic.snapshot import (
     ElasticState,
     JobCursor,
@@ -50,6 +55,7 @@ __all__ = [
     "RegrantDecision",
     "ResumableJob",
     "RunningView",
+    "SuspendedView",
     "WorkProgress",
     "load_snapshot",
     "run_resumable",

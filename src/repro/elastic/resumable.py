@@ -1,69 +1,63 @@
-"""Resumable execution: the fused pipeline split at wave boundaries.
+"""Resumable execution: the plan's wave steppers + cursor bookkeeping.
 
 :func:`repro.mapreduce.build_job` compiles map → shuffle → reduce as one
-program; nothing can stop it mid-flight.  :class:`ResumableJob` recompiles
-the *same phase primitives* (:mod:`repro.mapreduce.phases`, the same
-pluggable backends) as wave steppers over canonical task-major buffers, so
-a job can stop at any wave boundary, snapshot, re-plan its remaining waves
-under a different worker grant W', and resume **bit-identically**:
+program; nothing can stop it mid-flight.  :class:`ResumableJob` drives
+the **same** canonical wave steppers — the ones
+:class:`repro.mapreduce.plan.ExecutionPlan` lowers once and every other
+execution mode (fused / traced / sharded) derives from — one
+wave-boundary step at a time, so a job can stop at any boundary,
+snapshot, re-plan its remaining waves under a different worker grant W',
+and resume **bit-identically**:
 
-* **map** — one step runs the next W map tasks (``run_map_task`` vmapped
-  over a wave) and writes their output into (M, P) task-major
-  accumulators.  A map task's output depends only on its split and the
-  frozen config, never on W or on which wave ran it, so any wave
-  re-grouping produces the same rows.
-* **shuffle** — one barrier step.  The ``lexsort`` backend partitions the
-  canonical M·P pair stream with a *canonical* capacity
-  (``partition_capacity(M*P, R, f)``, W-independent), so even the overflow
-  accounting is identical under any grant history.  The ``all_to_all``
-  backend is a mesh collective whose data movement is inherently
-  W-shaped; here its :meth:`pack`/:meth:`unpack` halves are vmapped over a
-  worker axis with the literal collective replaced by the block transpose
-  it implements — identical per-worker computation, single-controller
-  execution, and the capacity layout of a real W-device run at the grant
-  held when the barrier executes.
+* **map** — one step runs the next W map tasks into the plan's (M, P)
+  task-major accumulators.  A map task's output depends only on its
+  split and the frozen config, never on W or on which wave ran it, so
+  any wave re-grouping produces the same rows.
+* **shuffle** — one barrier step.  The ``lexsort`` backend partitions
+  the canonical M·P pair stream with a *canonical* W-independent
+  capacity, so even the overflow accounting is identical under any
+  grant history.  The ``all_to_all`` backend's pack/unpack halves are
+  vmapped over a worker axis with the literal collective replaced by
+  the block transpose it implements — identical per-worker computation,
+  single-controller execution, the capacity layout of a real W-device
+  run at the grant held when the barrier executes.
 * **reduce** — one step reduces the next W partitions through the
   configured :class:`~repro.mapreduce.backends.ReduceBackend` (row-
   independent by contract) into (R, cap) output accumulators.
 
-Equivalences that follow (property-tested in ``tests/test_elastic.py``):
-preempt-at-every-boundary-then-resume ≡ uninterrupted, for every reduce ×
-shuffle backend combination; and for the ``lexsort`` shuffle the results
-are bit-exact under *any* sequence of regrants.
+This module owns only what is *elastic* about resumable execution: the
+cursor lifecycle, grant changes, segment telemetry.  The pipeline
+lowering lives in the plan — there is no private stepper copy here, so
+resumable execution can never drift from the profiled modes.
 
-Steppers are jit-compiled once per (grant, stage) and cached on the job,
-so wave-stepped execution costs one dispatch per wave, not one compile.
+Equivalences that follow (property-tested in ``tests/test_plan.py``):
+preempt-at-every-boundary-then-resume ≡ fused ≡ traced, for every reduce
+× shuffle backend combination; and for the ``lexsort`` shuffle the
+results are bit-exact under *any* sequence of regrants.
+
+Steppers are jit-compiled once per (grant, stage) and cached on the
+plan — shared with every other consumer of the same plan — so
+wave-stepped execution costs one dispatch per wave, not one compile.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import math
 import time as _time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.mapreduce import backends as _backends
 from repro.mapreduce import phases
-from repro.mapreduce.engine import JobConfig, MapReduceApp, \
-    _resolve_reduce_backend
-from repro.mapreduce.phases import PAD_KEY, run_map_task
+from repro.mapreduce.engine import JobConfig, MapReduceApp  # noqa: F401
+from repro.mapreduce.phases import PAD_KEY
+from repro.mapreduce.plan import ExecutionPlan
 
 from repro.elastic.snapshot import ElasticState, JobCursor
 
 
-def _pad_rows(arr, n_extra: int, fill):
-    """Append ``n_extra`` fill-rows so dynamic W-row windows never clamp."""
-    if n_extra == 0:
-        return arr
-    pad = jnp.full((n_extra,) + arr.shape[1:], fill, dtype=arr.dtype)
-    return jnp.concatenate([arr, pad], axis=0)
-
-
 class ResumableJob:
-    """One (app, config, input size) compiled for wave-boundary stepping.
+    """One :class:`ExecutionPlan` compiled for wave-boundary stepping.
 
     ``cfg.num_workers`` is only the *initial* grant; the live grant rides
     in the cursor and per-grant steppers are compiled on demand.  The
@@ -75,26 +69,25 @@ class ResumableJob:
     """
 
     def __init__(self, app: MapReduceApp, cfg: JobConfig, input_len: int,
-                 recorder=None):
-        shuffle = _backends.get_shuffle_backend(cfg.shuffle_backend)
-        self.app = app
-        self.cfg = cfg
-        self.input_len = int(input_len)
-        self.recorder = recorder
-        self._reduce_backend = _resolve_reduce_backend(app, cfg)
-        self._shuffle = shuffle
-        self.M = cfg.num_mappers
-        self.R = cfg.num_reducers
-        self.S = math.ceil(self.input_len / self.M)
-        self.P = self.S * app.pairs_per_token
-        #: canonical (W-independent) lexsort partition capacity
-        self._lex_cap = phases.partition_capacity(
-            self.M * self.P, self.R, cfg.capacity_factor
+                 recorder=None, plan: ExecutionPlan | None = None):
+        self.plan = plan if plan is not None else ExecutionPlan(
+            app, cfg, input_len
         )
-        self._prep = jax.jit(self._build_prep())
-        self._map_steppers: dict[int, callable] = {}
-        self._shuffle_steppers: dict[int, callable] = {}
-        self._reduce_steppers: dict[tuple[int, int], callable] = {}
+        self.app = self.plan.app
+        self.cfg = self.plan.cfg
+        self.input_len = self.plan.input_len
+        self.recorder = recorder
+        self.M = self.plan.M
+        self.R = self.plan.R
+        self.S = self.plan.S
+        self.P = self.plan.P
+
+    @classmethod
+    def from_plan(cls, plan: ExecutionPlan, recorder=None) -> "ResumableJob":
+        """The resumable *mode* of an existing plan (stepper caches
+        shared with every other mode derived from it)."""
+        return cls(plan.app, plan.cfg, plan.input_len,
+                   recorder=recorder, plan=plan)
 
     # ------------------------------------------------------------ lifecycle
 
@@ -108,11 +101,8 @@ class ResumableJob:
             reduce_backend=cfg.reduce_backend,
             shuffle_backend=cfg.shuffle_backend,
         )
-        arrays = {
-            "map_keys": jnp.full((self.M, self.P), PAD_KEY, jnp.int32),
-            "map_vals": jnp.zeros((self.M, self.P), jnp.int32),
-            "map_valid": jnp.zeros((self.M, self.P), bool),
-        }
+        bk, bv, bp = self.plan.initial_map_buffers()
+        arrays = {"map_keys": bk, "map_vals": bv, "map_valid": bp}
         return ElasticState(cursor=cursor, arrays=arrays)
 
     def check_cursor(self, cursor: JobCursor) -> None:
@@ -151,10 +141,11 @@ class ResumableJob:
         if c.done:
             raise ValueError("job already complete")
         W = c.workers
+        plan = self.plan
         arrays = dict(state.arrays)
         if not c.map_done:
-            splits, svalid = self._prep(tokens)
-            bk, bv, bp = self._map_stepper(W)(
+            splits, svalid = plan.prep()(tokens)
+            bk, bv, bp = plan.map_stepper(W)(
                 splits, svalid,
                 arrays["map_keys"], arrays["map_vals"], arrays["map_valid"],
                 c.map_tasks_done,
@@ -166,7 +157,7 @@ class ResumableJob:
                 waves_executed=c.waves_executed + 1,
             )
         elif not c.shuffled:
-            pk, pv, dropped, ok, ov = self._shuffle_stepper(W)(
+            pk, pv, dropped, ok, ov = plan.shuffle_stepper(W)(
                 arrays["map_keys"], arrays["map_vals"], arrays["map_valid"]
             )
             # Map accumulators are fully absorbed into the partitions;
@@ -181,7 +172,7 @@ class ResumableJob:
                 waves_executed=c.waves_executed + 1,
             )
         else:
-            ok, ov = self._reduce_stepper(W, c.partition_cap)(
+            ok, ov = plan.reduce_stepper(W, c.partition_cap)(
                 arrays["part_keys"], arrays["part_vals"],
                 arrays["out_keys"], arrays["out_vals"],
                 c.reduce_tasks_done,
@@ -238,169 +229,13 @@ class ResumableJob:
                 f"job not complete: {state.cursor.steps_remaining()} "
                 "steps remain"
             )
+        import jax.numpy as jnp
+
         return (
             state.arrays["out_keys"],
             state.arrays["out_vals"],
             jnp.int32(state.cursor.dropped),
         )
-
-    # ------------------------------------------------------ stepper builds
-
-    def _build_prep(self):
-        M, S, input_len = self.M, self.S, self.input_len
-
-        def prep(tokens):
-            if tokens.shape != (input_len,):
-                raise ValueError(
-                    f"expected ({input_len},), got {tokens.shape}"
-                )
-            pad_to = M * S
-            padded = jnp.zeros((pad_to,), jnp.int32).at[:input_len].set(
-                tokens
-            )
-            valid = (jnp.arange(pad_to) < input_len).reshape(M, S)
-            return padded.reshape(M, S), valid
-
-        return prep
-
-    def _map_stepper(self, W: int):
-        if W not in self._map_steppers:
-            app, cfg = self.app, self.cfg
-            M, P = self.M, self.P
-
-            def step(splits, svalid, bk, bv, bp, start):
-                tok = jax.lax.dynamic_slice_in_dim(
-                    _pad_rows(splits, W - 1, 0), start, W, 0
-                )
-                val = jax.lax.dynamic_slice_in_dim(
-                    _pad_rows(svalid, W - 1, False), start, W, 0
-                )
-                k, v, pv = jax.vmap(
-                    lambda t, m: run_map_task(app, cfg, t, m)
-                )(tok, val)
-
-                def upd(buf, blk, fill):
-                    return jax.lax.dynamic_update_slice_in_dim(
-                        _pad_rows(buf, W - 1, fill), blk, start, 0
-                    )[:M]
-
-                return (
-                    upd(bk, k, PAD_KEY), upd(bv, v, 0), upd(bp, pv, False)
-                )
-
-            self._map_steppers[W] = jax.jit(step)
-        return self._map_steppers[W]
-
-    def _shuffle_stepper(self, W: int):
-        if W not in self._shuffle_steppers:
-            if self._shuffle.collective:
-                self._shuffle_steppers[W] = jax.jit(
-                    self._build_a2a_shuffle(W)
-                )
-            else:
-                self._shuffle_steppers[W] = jax.jit(
-                    self._build_lexsort_shuffle()
-                )
-        return self._shuffle_steppers[W]
-
-    def _build_lexsort_shuffle(self):
-        """Canonical single-controller shuffle: W-independent capacity.
-
-        Reuses :meth:`LexsortShuffle.partition` with a W=1 view of the
-        config so its ``reduce_waves * W`` row padding degenerates to
-        exactly R rows — the canonical partition block.
-        """
-        cfg_w1 = dataclasses.replace(self.cfg, num_workers=1)
-        shuffle, R = self._shuffle, self.R
-
-        def step(bk, bv, bp):
-            n = bk.shape[0] * bk.shape[1]
-            pk, pv, dropped = shuffle.partition(
-                cfg_w1, bk.reshape(n), bv.reshape(n), bp.reshape(n)
-            )
-            cap = pk.shape[1]
-            ok = jnp.full((R, cap), PAD_KEY, jnp.int32)
-            ov = jnp.zeros((R, cap), jnp.int32)
-            return pk, pv, dropped, ok, ov
-
-        return step
-
-    def _build_a2a_shuffle(self, W: int):
-        """The collective shuffle, single-controller: vmap pack/unpack
-        over a worker axis, block-transpose in place of ``all_to_all``.
-
-        Reproduces the per-worker computation (and capacity layout) of a
-        real W-device :func:`~repro.mapreduce.engine.build_job_sharded`
-        run at the grant held when the barrier executes.
-        """
-        cfg_w = dataclasses.replace(self.cfg, num_workers=W)
-        shuffle, M, R, P = self._shuffle, self.M, self.R, self.P
-        waves_m = cfg_w.map_waves
-        waves_r = cfg_w.reduce_waves
-        M_pad = waves_m * W
-        n_local = waves_m * P
-
-        def step(bk, bv, bp):
-            # Worker-major local streams: worker w owns tasks w, w+W, ...
-            def per_worker(buf, fill):
-                padded = _pad_rows(buf, M_pad - M, fill)
-                return padded.reshape(waves_m, W, P).transpose(
-                    1, 0, 2
-                ).reshape(W, n_local)
-
-            k2 = per_worker(bk, PAD_KEY)
-            v2 = per_worker(bv, 0)
-            p2 = per_worker(bp, False)
-            (send_k, send_v, send_r), sdrop = jax.vmap(
-                lambda k, v, p: shuffle.pack(cfg_w, k, v, p)
-            )(k2, v2, p2)
-            # all_to_all(tiled): worker w's received row j is worker j's
-            # send row w — a block transpose of the (W, W, cap) tensor.
-            recv_k = send_k.transpose(1, 0, 2)
-            recv_v = send_v.transpose(1, 0, 2)
-            recv_r = send_r.transpose(1, 0, 2)
-            (bk2, bv2), rdrop = jax.vmap(
-                lambda k, v, r: shuffle.unpack(
-                    cfg_w, n_local,
-                    k.reshape(-1), v.reshape(-1), r.reshape(-1),
-                )
-            )(recv_k, recv_v, recv_r)
-            # (W, waves_r, cap) -> reducer-indexed (R, cap): reducer r
-            # lives on worker r % W at local slot r // W.
-            cap = bk2.shape[-1]
-            pk = bk2.transpose(1, 0, 2).reshape(waves_r * W, cap)[:R]
-            pv = bv2.transpose(1, 0, 2).reshape(waves_r * W, cap)[:R]
-            ok = jnp.full((R, cap), PAD_KEY, jnp.int32)
-            ov = jnp.zeros((R, cap), jnp.int32)
-            return pk, pv, sdrop.sum() + rdrop.sum(), ok, ov
-
-        return step
-
-    def _reduce_stepper(self, W: int, cap: int):
-        key = (W, cap)
-        if key not in self._reduce_steppers:
-            app, cfg, R = self.app, self.cfg, self.R
-            backend = self._reduce_backend
-
-            def step(pk, pv, ok_buf, ov_buf, start):
-                kblk = jax.lax.dynamic_slice_in_dim(
-                    _pad_rows(pk, W - 1, PAD_KEY), start, W, 0
-                )
-                vblk = jax.lax.dynamic_slice_in_dim(
-                    _pad_rows(pv, W - 1, 0), start, W, 0
-                )
-                ok, ov = backend.reduce(kblk, vblk, app.reduce_op)
-                ov = phases._masked_setup(cfg, kblk, ok, ov)
-
-                def upd(buf, blk, fill):
-                    return jax.lax.dynamic_update_slice_in_dim(
-                        _pad_rows(buf, W - 1, fill), blk, start, 0
-                    )[:R]
-
-                return upd(ok_buf, ok, PAD_KEY), upd(ov_buf, ov, 0)
-
-            self._reduce_steppers[key] = jax.jit(step)
-        return self._reduce_steppers[key]
 
     # ----------------------------------------------------------- telemetry
 

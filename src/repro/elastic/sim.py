@@ -30,6 +30,22 @@ Mechanics and invariants:
   decision-for-decision (segment walls sum to the same oracle times
   modulo float associativity) — tested in ``tests/test_elastic.py``.
 
+Beyond in-place regrants, two capabilities ride on the same machinery:
+
+* **suspend-to-disk** — ``Regrant(job_id, workers=0)`` snapshots the job
+  at its next boundary, releases its *whole* grant, and parks it in a
+  suspended queue (:meth:`ElasticCluster.suspended_jobs`); a later
+  ``Regrant(job_id, W>=1)`` restores it and re-plans the remaining waves
+  under the new grant.  Suspended wall time is accounted as its own
+  ``suspended`` trace phase so phase walls still tile the turnaround;
+* **measured-overhead scheduling** — when the oracle exposes
+  ``regrant_overhead`` (the EngineOracle: a real ``save_snapshot`` /
+  ``load_snapshot`` round-trip on the live engine), every preemption is
+  charged the *measured* walls instead of the configured estimates, and
+  the pair is fed to the policy's ``observe_overhead`` hook so its
+  :class:`~repro.elastic.regrant.RegrantCostModel` EWMA tracks real
+  checkpoint costs.
+
 Policies discover elastic support via ``cluster.supports_elastic`` and
 inspect in-flight work through :meth:`ElasticCluster.running_jobs`, which
 exposes only scheduler-observable facts (grants, wave progress, pending
@@ -57,14 +73,23 @@ from repro.elastic.regrant import WorkProgress
 class Regrant:
     """Policy action: change a running job's grant to ``workers`` at its
     next wave boundary (shrink frees the difference there; grow reserves
-    it from the free pool now)."""
+    it from the free pool now).
+
+    ``workers=0`` **suspends to disk**: at the boundary the job is
+    snapshotted, its whole grant is released, and it leaves the running
+    set for the suspended queue (``ElasticCluster.suspended_jobs``).  A
+    later ``Regrant(job_id, W>=1)`` addressed at a suspended job restores
+    the snapshot and re-plans the remaining waves under the new grant —
+    the engine side of this is ``save_snapshot``/``load_snapshot`` +
+    ``ResumableJob.regrant``, which the simulator prices.
+    """
 
     job_id: int
     workers: int
     reason: str = ""
 
     def __post_init__(self):
-        if self.workers < 1:
+        if self.workers < 0:
             raise ValueError(f"bad regrant {self}")
 
 
@@ -86,6 +111,18 @@ class RunningView:
         return self.progress.steps_remaining(self.workers)
 
 
+@dataclasses.dataclass(frozen=True)
+class SuspendedView:
+    """Scheduler-observable state of one suspended-to-disk job."""
+
+    job_id: int
+    spec: JobSpec
+    plan: object                 # the admission Plan (M, R fixed for life)
+    workers_before: int          # grant held when the suspend applied
+    progress: WorkProgress
+    suspended_at: float
+
+
 @dataclasses.dataclass
 class _Running:
     spec: JobSpec
@@ -102,6 +139,11 @@ class _Running:
     shrunk_from: int | None = None
     epoch: int = 0               # invalidates stale heap events
     phase_wall: dict = dataclasses.field(default_factory=dict)
+    # Suspend-to-disk bookkeeping (set while the job sits in _suspended).
+    suspended_at: float | None = None
+    workers_at_suspend: int = 0
+    save_charged: float = 0.0    # snapshot wall charged at suspend time
+    pending_restore_s: float = 0.0
 
     def progress(self) -> WorkProgress:
         return WorkProgress(
@@ -164,8 +206,52 @@ class ElasticCluster(Cluster):
             raise ValueError("overheads must be >= 0")
         self.snapshot_overhead_s = float(snapshot_overhead_s)
         self.restore_overhead_s = float(restore_overhead_s)
+        #: measured-overhead scheduling: an oracle exposing
+        #: ``regrant_overhead`` (EngineOracle: a real save/load snapshot
+        #: round-trip) prices each preemption with *measured* walls; the
+        #: configured costs above are the fallback (AnalyticOracle).
+        self._measure_overhead = getattr(oracle, "regrant_overhead", None)
+
+    def _regrant_overheads(self, rj: "_Running") -> tuple[float, float]:
+        """(save_s, restore_s) for preempting ``rj`` now — measured from
+        the engine when the oracle can, configured otherwise."""
+        if self._measure_overhead is None:
+            return self.snapshot_overhead_s, self.restore_overhead_s
+        rec = rj.rec
+        save_s, restore_s = self._measure_overhead(
+            rj.spec.app, rec.plan.backend, rj.spec.size,
+            rec.plan.mappers, rec.plan.reducers,
+            map_tasks_done=rj.m_done, shuffled=rj.shuffled,
+            reduce_tasks_done=rj.r_done,
+        )
+        return float(save_s), float(restore_s)
+
+    @staticmethod
+    def _notify_overhead(policy, save_s: float, restore_s: float) -> None:
+        """Feed one (snapshot, restore) wall pair to the policy's cost
+        model (``observe_overhead`` is optional — see
+        :meth:`repro.elastic.regrant.RegrantCostModel.record_overhead`)."""
+        hook = getattr(policy, "observe_overhead", None)
+        if hook is not None:
+            hook(save_s, restore_s)
 
     # ------------------------------------------------------------- queries
+
+    def suspended_jobs(self, now: float | None = None,
+                       ) -> tuple[SuspendedView, ...]:
+        """Jobs currently suspended to disk (grant 0), oldest first."""
+        views = [
+            SuspendedView(
+                job_id=rj.spec.job_id,
+                spec=rj.spec,
+                plan=rj.rec.plan,
+                workers_before=rj.workers_at_suspend,
+                progress=rj.progress(),
+                suspended_at=rj.suspended_at,
+            )
+            for rj in self._suspended.values()
+        ]
+        return tuple(sorted(views, key=lambda v: v.suspended_at))
 
     def running_jobs(self, now: float) -> tuple[RunningView, ...]:
         views = []
@@ -206,6 +292,7 @@ class ElasticCluster(Cluster):
         records = {j.job_id: JobRecord(spec=j) for j in jobs}
         pending: list[JobSpec] = []
         self._running: dict[int, _Running] = {}
+        self._suspended: dict[int, _Running] = {}
         self._free = self.total_workers
         #: event heap: (time, seq, kind, job_id, epoch)
         self._events: list[tuple[float, int, str, int, int]] = []
@@ -213,21 +300,38 @@ class ElasticCluster(Cluster):
         policy.prepare(self, sorted({j.app for j in jobs}))
         i = 0
         now = jobs[0].arrival if jobs else 0.0
+        stalled = False  # nothing scheduled, but suspended/pending remain
 
-        while i < len(jobs) or pending or self._running:
+        while i < len(jobs) or pending or self._running or self._suspended:
             next_arrival = jobs[i].arrival if i < len(jobs) else math.inf
             next_event = self._events[0][0] if self._events else math.inf
             if (
-                pending and not self._running
+                (pending or self._suspended) and not self._running
                 and next_arrival == math.inf and next_event == math.inf
             ):
-                stuck = [j.job_id for j in pending]
-                raise RuntimeError(
-                    f"policy {policy.name!r} stranded jobs {stuck}: no "
-                    f"dispatch at free={self._free}/{self.total_workers} "
-                    "workers"
-                )
-            now = min(next_arrival, next_event)
+                # No arrival or event will ever come.  Give the policy
+                # one last pass at the current time (it may resume a
+                # suspended job or dispatch into the now-free pool);
+                # a second stalled pass means it never will.
+                if stalled:
+                    stuck = sorted(
+                        [j.job_id for j in pending]
+                        + list(self._suspended)
+                    )
+                    raise RuntimeError(
+                        f"policy {policy.name!r} stranded jobs {stuck}: "
+                        f"no dispatch at free={self._free}/"
+                        f"{self.total_workers} workers"
+                        + (
+                            f" ({sorted(self._suspended)} suspended to "
+                            "disk and never resumed)"
+                            if self._suspended else ""
+                        )
+                    )
+                stalled = True
+            else:
+                stalled = False
+                now = min(next_arrival, next_event)
 
             while i < len(jobs) and jobs[i].arrival <= now:
                 pending.append(jobs[i])
@@ -240,7 +344,7 @@ class ElasticCluster(Cluster):
                 if kind == "finish":
                     self._complete(rj, t, policy)
                 else:
-                    self._apply_regrant(rj, t)
+                    self._apply_regrant(rj, t, policy)
 
             while pending:
                 decision = policy.select(tuple(pending), self._free, now)
@@ -329,6 +433,10 @@ class ElasticCluster(Cluster):
     def _request_regrant(self, action: Regrant, now: float) -> None:
         rj = self._running.get(action.job_id)
         if rj is None:
+            srj = self._suspended.get(action.job_id)
+            if srj is not None:
+                self._resume(srj, action, now)
+                return
             raise ValueError(
                 f"regrant for job {action.job_id}, which is not running"
             )
@@ -360,12 +468,17 @@ class ElasticCluster(Cluster):
         self._push(boundary, "regrant", action.job_id, rj.epoch)
         self._check_conservation()
 
-    def _apply_regrant(self, rj: _Running, t: float) -> None:
+    def _apply_regrant(self, rj: _Running, t: float, policy) -> None:
         rj.advance(t)
         new_w, _ = rj.pending
         rj.pending = None
         old_w = rj.workers
-        overhead = self.snapshot_overhead_s + self.restore_overhead_s
+        save_s, restore_s = self._regrant_overheads(rj)
+        self._notify_overhead(policy, save_s, restore_s)
+        if new_w == 0:
+            self._suspend(rj, t, old_w, save_s, restore_s)
+            return
+        overhead = save_s + restore_s
         resume_t = t + overhead
         if new_w < old_w:
             self._free += old_w - new_w
@@ -400,6 +513,93 @@ class ElasticCluster(Cluster):
                 "regrant applied at a boundary with no remaining work"
             )
         rj.seg_start = resume_t
+        self._push(rj.finish_time(), "finish", rj.spec.job_id, rj.epoch)
+        self._check_conservation()
+
+    # ------------------------------------------------- suspend-to-disk
+
+    def _suspend(self, rj: _Running, t: float, old_w: int,
+                 save_s: float, restore_s: float) -> None:
+        """Apply a grant-0 regrant at a boundary: snapshot (charge
+        ``save_s``), release the whole grant, move the job to the
+        suspended queue.  No segments are scheduled until a resume
+        re-plans the remaining waves."""
+        del self._running[rj.spec.job_id]
+        self._free += old_w
+        rec = rj.rec
+        rec.segments[-1][1] = t
+        rec.n_regrants += 1
+        rec.n_suspends += 1
+        rec.overhead_s += save_s
+        rj.phase_wall["regrant"] = (
+            rj.phase_wall.get("regrant", 0.0) + save_s
+        )
+        rj.epoch += 1            # invalidate the stale finish event
+        rj.workers = 0
+        rj.reserved = 0
+        rj.suspended_at = t
+        rj.workers_at_suspend = old_w
+        rj.save_charged = save_s
+        rj.pending_restore_s = restore_s
+        rj.segments = []
+        self._suspended[rj.spec.job_id] = rj
+        self._check_conservation()
+
+    def _resume(self, rj: _Running, action: Regrant, now: float) -> None:
+        """Restore a suspended job under ``action.workers`` (charge the
+        restore wall), re-plan its remaining waves, reschedule."""
+        W = action.workers
+        if W < 1:
+            raise ValueError(
+                f"job {action.job_id} is already suspended; resume it "
+                "with workers >= 1"
+            )
+        if W > self._free:
+            raise ValueError(
+                f"resume of job {action.job_id} wants {W} workers but "
+                f"only {self._free} are free"
+            )
+        restore_s = rj.pending_restore_s
+        resume_t = now + restore_s
+        del self._suspended[rj.spec.job_id]
+        self._free -= W
+        rec = rj.rec
+        rec.n_regrants += 1
+        rec.overhead_s += restore_s
+        rec.segments.append([resume_t, None, W])
+        rj.phase_wall["regrant"] = (
+            rj.phase_wall.get("regrant", 0.0) + restore_s
+        )
+        # Disk-queued wall: the gap between suspend and resume that is
+        # not checkpoint overhead (keeps phase walls tiling the
+        # turnaround for the synthesized trace).
+        rj.phase_wall["suspended"] = rj.phase_wall.get(
+            "suspended", 0.0
+        ) + max(0.0, now - rj.suspended_at - rj.save_charged)
+        if rj.shrunk_from is None and W < rj.workers_at_suspend:
+            rj.shrunk_from = rj.workers_at_suspend
+        elif rj.shrunk_from is not None and W >= rj.shrunk_from:
+            rj.shrunk_from = None
+        rj.workers = W
+        rj.suspended_at = None
+        rj.save_charged = 0.0
+        rj.pending_restore_s = 0.0
+        rj.epoch += 1
+        rj.segments = [
+            list(seg) for seg in self.oracle.remaining_segments(
+                rj.spec.app, rec.plan.backend, rj.spec.size,
+                rec.plan.mappers, rec.plan.reducers, W,
+                map_tasks_done=rj.m_done, shuffled=rj.shuffled,
+                reduce_tasks_done=rj.r_done,
+                job_id=rj.spec.job_id,
+            )
+        ]
+        if not rj.segments:
+            raise AssertionError(
+                "resume applied with no remaining work"
+            )
+        rj.seg_start = resume_t
+        self._running[rj.spec.job_id] = rj
         self._push(rj.finish_time(), "finish", rj.spec.job_id, rj.epoch)
         self._check_conservation()
 
@@ -446,8 +646,9 @@ class ElasticCluster(Cluster):
             "shuffle": {"partitions": rec.plan.reducers},
             "reduce": {"tasks": rec.plan.reducers},
             "regrant": {"events": rec.n_regrants},
+            "suspended": {"events": rec.n_suspends},
         }
-        for kind in ("map", "shuffle", "reduce", "regrant"):
+        for kind in ("map", "shuffle", "reduce", "regrant", "suspended"):
             wall = rj.phase_wall.get(kind)
             if wall:
                 trace.record_phase(kind, wall, **counters[kind])

@@ -58,11 +58,17 @@ def build_parser() -> argparse.ArgumentParser:
                     help="analytic-oracle runtime noise (lognormal sigma)")
     ap.add_argument("--seed", type=int, default=1)
     ap.add_argument("--oracle", default="analytic",
-                    choices=("analytic", "engine", "engine-traced"),
+                    choices=("analytic", "engine", "engine-traced",
+                             "engine-sharded"),
                     help="'engine-traced' wall-clocks the live engine "
                          "through the telemetry path: completed jobs carry "
                          "per-phase traces and the online refiner fits "
-                         "decomposed per-phase models")
+                         "decomposed per-phase models; 'engine-sharded' "
+                         "schedules the real shard_map mesh path (each "
+                         "grant W runs on a W-device mesh — set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N for CPU "
+                         "emulation), traced, so per-phase wall times come "
+                         "from the sharded engine")
     ap.add_argument("--net-capacity", type=float, default=None,
                     help="fabric bytes/s budget for the predict-resource "
                          "policy (default: unconstrained = pure SJF)")
@@ -72,9 +78,18 @@ def build_parser() -> argparse.ArgumentParser:
                          "(the predict-elastic policy exploits this; "
                          "other policies behave as on the base cluster)")
     ap.add_argument("--ckpt-overhead", type=float, default=0.02,
-                    help="simulated snapshot cost per preemption, seconds")
+                    help="simulated snapshot cost per preemption, seconds "
+                         "(engine oracles override this with measured "
+                         "save_snapshot walls)")
     ap.add_argument("--restore-overhead", type=float, default=0.02,
-                    help="simulated restore cost per preemption, seconds")
+                    help="simulated restore cost per preemption, seconds "
+                         "(engine oracles override this with measured "
+                         "load_snapshot walls)")
+    ap.add_argument("--suspend", action="store_true",
+                    help="with --elastic: let predict-elastic suspend "
+                         "best-effort jobs to disk (grant 0) when "
+                         "shrinking cannot free enough workers for a "
+                         "starved deadline job")
     ap.add_argument("--save-models", metavar="PATH",
                     help="persist the fitted ModelDatabase as JSON")
     ap.add_argument("--load-models", metavar="PATH",
@@ -87,8 +102,11 @@ def build_parser() -> argparse.ArgumentParser:
 
 def main(argv=None) -> None:
     args = build_parser().parse_args(argv)
-    if args.oracle in ("engine", "engine-traced"):
-        oracle = EngineOracle(traced=args.oracle == "engine-traced")
+    if args.oracle in ("engine", "engine-traced", "engine-sharded"):
+        oracle = EngineOracle(
+            traced=args.oracle in ("engine-traced", "engine-sharded"),
+            sharded=args.oracle == "engine-sharded",
+        )
         print("[cluster] note: the engine oracle compiles every distinct "
               "(app, size, backend, M, R, W) once — predictive policies' "
               "bootstrap profiling alone is ~100+ compiles at the default "
@@ -137,6 +155,8 @@ def main(argv=None) -> None:
             kwargs["seed"] = args.seed
             if name == "predict-resource" and args.net_capacity is not None:
                 kwargs["net_capacity"] = args.net_capacity
+            if name == "predict-elastic" and args.suspend:
+                kwargs["suspend"] = True
             if args.load_models:
                 # Fresh copy per policy: online refits mutate the db, and
                 # a shared instance would make the comparison depend on

@@ -5,7 +5,9 @@ Layering (see ARCHITECTURE.md):
 
     phases.py   — the single shared implementation of each phase
     backends.py — swappable shuffle/reduce strategies + registries
-    engine.py   — JobConfig/MapReduceApp + thin build_job compositions
+    plan.py     — ExecutionPlan: the ONE lowering into canonical wave
+                  steppers; fused/traced/sharded/resumable are modes
+    engine.py   — JobConfig/MapReduceApp + thin build_job mode selectors
     apps.py     — WordCount and Exim mainlog parsing
     datagen.py  — synthetic corpora
 """
@@ -18,6 +20,7 @@ from repro.mapreduce.engine import (
     build_job_sharded,
     collect_results,
 )
+from repro.mapreduce.plan import ExecutionPlan
 from repro.mapreduce.backends import (
     REDUCE_BACKENDS,
     SHUFFLE_BACKENDS,
@@ -32,6 +35,7 @@ from repro.mapreduce.apps import eximparse, wordcount, RECORD_WIDTH
 from repro.mapreduce.datagen import exim_mainlog, wordcount_corpus
 
 __all__ = [
+    "ExecutionPlan",
     "JobConfig",
     "MapReduceApp",
     "PAD_KEY",

@@ -4,10 +4,10 @@ Hadoop concepts are mapped onto JAX/XLA idioms rather than emulated:
 
 * **map/reduce TASKS vs worker SLOTS** — M map tasks and R reduce tasks are
   scheduled over W parallel workers in ``ceil(M/W)`` / ``ceil(R/W)`` *waves*
-  (`lax.scan` over waves, `vmap`/`shard_map` over workers).  This is Hadoop's
-  slot scheduling, and it is exactly why total execution time depends
-  non-trivially and non-monotonically on (M, R) — the dependency the paper
-  models.
+  (wave steppers under ``fori_loop``/``jit``, ``vmap``/``shard_map`` over
+  workers).  This is Hadoop's slot scheduling, and it is exactly why total
+  execution time depends non-trivially and non-monotonically on (M, R) —
+  the dependency the paper models.
 * **per-task startup overhead** — Hadoop pays JVM/task-setup seconds per
   task; our analogue is a fixed per-task setup compute (``setup_rounds`` of a
   small matmul chain) inside each wave, plus each map task's local spill sort.
@@ -21,11 +21,14 @@ Hadoop concepts are mapped onto JAX/XLA idioms rather than emulated:
   :class:`~repro.mapreduce.backends.ReduceBackend` (``"jnp"``, ``"pallas"``,
   or ``"xla"``).
 
-This module is deliberately thin: the single shared implementation of each
-phase lives in :mod:`repro.mapreduce.phases`, the swappable strategies in
-:mod:`repro.mapreduce.backends`; ``build_job`` / ``build_job_sharded`` only
-compose them.  The backend choice is thereby one more modelable
-configuration axis, alongside (M, R, W).
+This module is deliberately thin: the shared phase primitives live in
+:mod:`repro.mapreduce.phases`, the swappable strategies in
+:mod:`repro.mapreduce.backends`, and the **single lowering** of the
+pipeline in :mod:`repro.mapreduce.plan` — ``build_job`` /
+``build_job_sharded`` only select a mode of one
+:class:`~repro.mapreduce.plan.ExecutionPlan` (fused / traced / sharded;
+the elastic layer's resumable mode derives from the same plan), so every
+profiled path executes the same canonical wave steppers by construction.
 
 Shapes are static per (M, R, W, L) configuration — one compile per config,
 wall-clocked post-warmup, which mirrors "job execution time" in the paper
@@ -36,18 +39,15 @@ from __future__ import annotations
 
 import dataclasses
 import math
-import time as _time
 from typing import Callable
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.mapreduce import backends as _backends
-from repro.mapreduce import phases
-from repro.mapreduce.phases import PAD_KEY, map_phase, reduce_local, reduce_phase
+from repro.mapreduce.phases import PAD_KEY
+from repro.mapreduce.plan import ExecutionPlan
 
-from repro.compat import shard_map as _shard_map
 
 @dataclasses.dataclass(frozen=True)
 class JobConfig:
@@ -92,93 +92,6 @@ class MapReduceApp:
     reduce_op: str = "sum"  # "sum" | "max"
 
 
-def _resolve_reduce_backend(app: MapReduceApp, cfg: JobConfig):
-    backend = _backends.get_reduce_backend(cfg.reduce_backend)
-    if app.reduce_op not in backend.supported_ops:
-        raise ValueError(
-            f"reduce backend {backend.name!r} supports "
-            f"{backend.supported_ops}, but app {app.name!r} needs "
-            f"{app.reduce_op!r}"
-        )
-    return backend
-
-
-def build_stage_fns(app: MapReduceApp, cfg: JobConfig, input_len: int):
-    """The single-controller pipeline as separately-composable stage fns.
-
-    Returns ``(stages, meta)`` where ``stages`` maps phase name -> pure
-    function (``map``: tokens -> flat (keys, values, pvalid); ``shuffle``:
-    those -> (part_keys, part_vals, dropped); ``reduce``: partitions ->
-    (out_keys (R, C), out_vals (R, C))) and ``meta`` carries the static
-    shape facts telemetry and the cost estimator need (task/wave counts,
-    pair counts, partition capacity).
-
-    ``build_job`` composes the stages under one ``jit`` (the fused hot
-    path); the traced path jits each stage separately so phases can be
-    fenced and wall-clocked; ``telemetry.estimator`` lowers each stage to
-    read XLA's flops/bytes cost analysis per phase.
-    """
-    shuffle = _backends.get_shuffle_backend(cfg.shuffle_backend)
-    if shuffle.collective:
-        raise ValueError(
-            f"stage decomposition needs a single-controller shuffle; "
-            f"{shuffle.name!r} is a mesh collective"
-        )
-    reduce_backend = _resolve_reduce_backend(app, cfg)
-
-    M, R, W = cfg.num_mappers, cfg.num_reducers, cfg.num_workers
-    S = math.ceil(input_len / M)
-    waves_m = cfg.map_waves
-    M_pad = waves_m * W
-    P = S * app.pairs_per_token
-    n_pairs = M_pad * P
-
-    def stage_map(tokens):
-        if tokens.shape != (input_len,):
-            raise ValueError(
-                f"expected ({input_len},), got {tokens.shape}"
-            )
-        pad_to = M_pad * S
-        padded = jnp.full((pad_to,), 0, dtype=jnp.int32)
-        padded = padded.at[:input_len].set(tokens)
-        valid = (jnp.arange(pad_to) < input_len).reshape(waves_m, W, S)
-        splits = padded.reshape(waves_m, W, S)
-        keys, values, pvalid = map_phase(app, cfg, splits, valid)
-        return (
-            keys.reshape(n_pairs),
-            values.reshape(n_pairs),
-            pvalid.reshape(n_pairs),
-        )
-
-    def stage_shuffle(keys, values, pvalid):
-        return shuffle.partition(cfg, keys, values, pvalid)
-
-    def stage_reduce(part_keys, part_vals):
-        out_keys, out_vals = reduce_phase(
-            app, cfg, part_keys, part_vals, reduce_backend
-        )
-        return out_keys[:R], out_vals[:R]
-
-    meta = {
-        "input_len": input_len,
-        "mappers": M,
-        "reducers": R,
-        "workers": W,
-        "split_size": S,
-        "map_waves": waves_m,
-        "reduce_waves": cfg.reduce_waves,
-        "n_pairs": n_pairs,
-        "partition_capacity": shuffle.capacity_for(cfg, n_pairs),
-        "r_pad": cfg.reduce_waves * W,
-    }
-    stages = {
-        "map": stage_map,
-        "shuffle": stage_shuffle,
-        "reduce": stage_reduce,
-    }
-    return stages, meta
-
-
 def build_job(app: MapReduceApp, cfg: JobConfig, input_len: int,
               mesh: jax.sharding.Mesh | None = None, axis: str = "workers",
               recorder=None):
@@ -190,234 +103,67 @@ def build_job(app: MapReduceApp, cfg: JobConfig, input_len: int,
     ``cfg.shuffle_backend`` selects the execution strategy: a collective
     backend ("all_to_all") requires ``mesh`` and routes through
     :func:`build_job_sharded`; the default "lexsort" backend compiles the
-    single-controller pipeline below.
+    single-controller pipeline.
 
     ``recorder`` (optional) enables per-phase telemetry: any object with
     the :class:`repro.telemetry.PhaseRecorder` protocol
     (``start_job(app_name, cfg, input_len) -> trace`` where the trace has
     ``record_phase(name, wall_s, **counters)`` / ``finish(total_s)``).
-    With a recorder the phases are jitted separately and each call of the
-    returned job appends one trace; with ``recorder=None`` (default) the
-    fused single-``jit`` path compiles — telemetry off costs nothing.
+    With a recorder the phases compile separately (fenced and
+    wall-clocked — on the sharded path too, as separate mesh programs)
+    and each call of the returned job appends one trace; with
+    ``recorder=None`` (default) the fused single-program mode compiles —
+    telemetry off costs nothing.
     """
     shuffle = _backends.get_shuffle_backend(cfg.shuffle_backend)
     if shuffle.collective:
-        if recorder is not None:
-            raise ValueError(
-                "per-phase wall-clock telemetry is single-controller only; "
-                "for the sharded path use build_job_sharded(counters=True) "
-                "to get cross-shard-reduced per-phase dropped counters"
-            )
         if mesh is None:
             raise ValueError(
                 f"shuffle backend {shuffle.name!r} is a mesh collective; "
                 "pass mesh= (or call build_job_sharded)"
             )
-        return build_job_sharded(app, cfg, input_len, mesh, axis)
+        return build_job_sharded(
+            app, cfg, input_len, mesh, axis, recorder=recorder
+        )
     if mesh is not None:
         raise ValueError(
             f"mesh given but shuffle backend {shuffle.name!r} is "
             "single-controller; use shuffle_backend=\"all_to_all\" for a "
             "distributed job"
         )
-    stages, meta = build_stage_fns(app, cfg, input_len)
+    plan = ExecutionPlan(app, cfg, input_len)
     if recorder is not None:
-        return _build_job_traced(app, cfg, stages, meta, recorder)
-
-    def job(tokens):
-        keys, values, pvalid = stages["map"](tokens)
-        part_keys, part_vals, dropped = stages["shuffle"](
-            keys, values, pvalid
-        )
-        out_keys, out_vals = stages["reduce"](part_keys, part_vals)
-        return out_keys, out_vals, dropped
-
-    return jax.jit(job)
-
-
-def _build_job_traced(app, cfg, stages, meta, recorder):
-    """Phase-fenced execution: jit each stage, wall-clock + count each phase.
-
-    Counters are measured from the actual stage outputs (host-side numpy
-    reductions), so conservation laws are checkable invariants rather than
-    config-derived tautologies.  See ``repro.telemetry.trace``.
-    """
-    jit_map = jax.jit(stages["map"])
-    jit_shuffle = jax.jit(stages["shuffle"])
-    jit_reduce = jax.jit(stages["reduce"])
-    pair_bytes = phases.PAIR_BYTES
-
-    def job(tokens):
-        trace = recorder.start_job(app.name, cfg, meta["input_len"])
-        try:
-            return _run(tokens, trace)
-        except Exception:
-            # A failed run must not leave a phantom/partial trace for
-            # recorder.last / take_trace consumers to misread as complete.
-            if trace in recorder.traces:
-                recorder.traces.remove(trace)
-            raise
-
-    def _run(tokens, trace):
-        t_job = _time.perf_counter()
-
-        t0 = _time.perf_counter()
-        keys, values, pvalid = jax.block_until_ready(jit_map(tokens))
-        dt = _time.perf_counter() - t0
-        pairs_emitted = int(np.asarray(pvalid).sum())
-        trace.record_phase(
-            "map", dt,
-            tasks=meta["mappers"], waves=meta["map_waves"],
-            records_in=meta["input_len"],
-            pairs_emitted=pairs_emitted, pairs_capacity=meta["n_pairs"],
-        )
-
-        t0 = _time.perf_counter()
-        part_keys, part_vals, dropped = jax.block_until_ready(
-            jit_shuffle(keys, values, pvalid)
-        )
-        dt = _time.perf_counter() - t0
-        n_dropped = int(dropped)
-        pairs_out = int((np.asarray(part_keys) != int(PAD_KEY)).sum())
-        trace.record_phase(
-            "shuffle", dt,
-            pairs_in=pairs_emitted, pairs_out=pairs_out,
-            pairs_dropped=n_dropped,
-            bytes_in=pairs_emitted * pair_bytes,
-            bytes_out=pairs_out * pair_bytes,
-            bytes_dropped=n_dropped * pair_bytes,
-            partitions=meta["reducers"],
-            partition_capacity=meta["partition_capacity"],
-        )
-
-        t0 = _time.perf_counter()
-        out_keys, out_vals = jax.block_until_ready(
-            jit_reduce(part_keys, part_vals)
-        )
-        dt = _time.perf_counter() - t0
-        segments = int((np.asarray(out_keys) != int(PAD_KEY)).sum())
-        trace.record_phase(
-            "reduce", dt,
-            tasks=meta["reducers"], waves=meta["reduce_waves"],
-            segments_out=segments,
-            segment_slots=meta["r_pad"] * meta["partition_capacity"],
-        )
-
-        trace.finish(_time.perf_counter() - t_job)
-        return out_keys, out_vals, dropped
-
-    return job
-
-
-# ---------------------------------------------------------------------------
-# Sharded path: workers are devices on a mesh axis; shuffle is all_to_all.
-# ---------------------------------------------------------------------------
+        return plan.traced(recorder)
+    return plan.fused()
 
 
 def build_job_sharded(
     app: MapReduceApp, cfg: JobConfig, input_len: int, mesh: jax.sharding.Mesh,
-    axis: str = "workers", counters: bool = False,
+    axis: str = "workers", counters: bool = False, recorder=None,
 ):
     """shard_map MapReduce: W = mesh axis size; shuffle = all_to_all.
 
-    Each worker runs its map waves locally (the same
-    :func:`~repro.mapreduce.phases.map_phase` as the single-controller
-    path, with a local worker axis of 1), exchanges partitions through the
-    ``all_to_all`` shuffle backend, then reduces the reducer tasks it owns
-    through ``cfg.reduce_backend``.  This is the deployment path for real
-    multi-chip meshes; semantics match `build_job`.
+    A thin wrapper over :meth:`ExecutionPlan.sharded` — the same wave
+    steppers as every other mode, wrapped in ``shard_map``.  This is the
+    deployment path for real multi-chip meshes; semantics match
+    :func:`build_job`.
 
     With ``counters=True`` the returned job yields ``(out_keys, out_vals,
     dropped, stats)`` where ``stats`` reduces the per-worker overflow
-    counters across shards into true per-phase totals (the telemetry the
-    single-controller traced path measures, which the fused ``shard_map``
-    program otherwise collapses to one aggregate)::
+    counters across shards into true per-phase totals::
 
         stats = {
             "dropped_send": int,   # shuffle send-buffer overflow, all workers
             "dropped_recv": int,   # reduce-bucket overflow, all workers
             "dropped_per_worker": (W, 2) ndarray,  # [send, recv] per worker
         }
+
+    With ``recorder=`` the phases compile as separate mesh programs and
+    every call appends a per-phase :class:`~repro.telemetry.JobTrace` —
+    per-phase *wall times* on the sharded path.
     """
-    W = mesh.shape[axis]
-    if cfg.num_workers != W:
-        raise ValueError(f"cfg.num_workers={cfg.num_workers} != mesh {W}")
-    reduce_backend = _resolve_reduce_backend(app, cfg)
-    shuffle = _backends.get_shuffle_backend(cfg.shuffle_backend)
-    if not shuffle.collective:
-        # Direct build_job_sharded call with a non-collective config: the
-        # sharded path's structural shuffle is the mesh collective.
-        shuffle = _backends.SHUFFLE_BACKENDS["all_to_all"]
-
-    M, R = cfg.num_mappers, cfg.num_reducers
-    S = math.ceil(input_len / M)
-    waves_m = cfg.map_waves
-    M_pad = waves_m * W
-    P = S * app.pairs_per_token
-    n_local_pairs = waves_m * P
-
-    def worker(splits, valid):  # (1(worker), waves, S) local shards
-        # Local map waves: reuse the shared map phase with W_local = 1.
-        splits = splits[0][:, None, :]   # (waves, 1, S)
-        valid = valid[0][:, None, :]
-        k, v, pv = map_phase(app, cfg, splits, valid)
-        k = k.reshape(n_local_pairs)
-        v = v.reshape(n_local_pairs)
-        pv = pv.reshape(n_local_pairs)
-        bk, bv, dropped = shuffle.exchange(cfg, axis, k, v, pv)
-        ok, ov = reduce_local(app, cfg, bk, bv, reduce_backend)
-        return ok[None], ov[None], dropped[None]
-
-    from jax.sharding import PartitionSpec as P_
-
-    spec_in = P_(axis, None, None)
-    shard_fn = _shard_map(
-        worker,
-        mesh=mesh,
-        in_specs=(spec_in, spec_in),
-        out_specs=(
-            P_(axis, None, None), P_(axis, None, None), P_(axis, None),
-        ),
-        # pallas_call has no replication rule; every output is axis-sharded
-        # anyway, so the check adds nothing here.
-        check=False,
-    )
-
-    def job(tokens):
-        pad_to = M_pad * S
-        padded = jnp.zeros((pad_to,), jnp.int32).at[:input_len].set(tokens)
-        valid = (jnp.arange(pad_to) < input_len)
-        # Worker-major task layout: worker w owns tasks w, w+W, ...
-        splits = padded.reshape(waves_m, W, S).transpose(1, 0, 2)
-        vsplit = valid.reshape(waves_m, W, S).transpose(1, 0, 2)
-        ok, ov, dropped = shard_fn(splits, vsplit)
-        # (W, waves_r, cap) -> (R, cap) indexed by reducer id: reducer r
-        # lives on worker r % W at local slot r // W, so row r of the
-        # slot-major stacking is exactly reducer r's partition.
-        ok = ok.transpose(1, 0, 2).reshape(-1, ok.shape[-1])[:R]
-        ov = ov.transpose(1, 0, 2).reshape(-1, ov.shape[-1])[:R]
-        # dropped: (W, 2) per-worker [send, recv] overflow counters.
-        return ok, ov, dropped
-
-    jitted = jax.jit(job)
-
-    if not counters:
-        def plain(tokens):
-            ok, ov, dropped = jitted(tokens)
-            return ok, ov, dropped.sum()
-        return plain
-
-    def with_counters(tokens):
-        ok, ov, dropped = jitted(tokens)
-        per_worker = np.asarray(dropped)
-        stats = {
-            "dropped_send": int(per_worker[:, 0].sum()),
-            "dropped_recv": int(per_worker[:, 1].sum()),
-            "dropped_per_worker": per_worker,
-        }
-        return ok, ov, dropped.sum(), stats
-
-    return with_counters
+    plan = ExecutionPlan(app, cfg, input_len)
+    return plan.sharded(mesh, axis, counters=counters, recorder=recorder)
 
 
 def collect_results(out_keys, out_vals) -> dict[int, int]:

@@ -1,0 +1,692 @@
+"""One wave-stepper execution core: every execution mode is a derivation.
+
+The engine used to carry four hand-rolled lowerings of the same
+map → shuffle → reduce pipeline: the fused ``build_job`` composition, the
+recorder-fenced traced path, the ``shard_map``-fused sharded path, and
+``ResumableJob``'s per-grant wave steppers.  Each could silently drift
+from the others — and every drifted path is a profiled path whose time
+the paper's models would mis-attribute.
+
+:class:`ExecutionPlan` lowers one ``(MapReduceApp, JobConfig,
+input_len)`` into a single canonical stepper set over **task-major
+buffers**, and every entry point is a *mode* over that one plan:
+
+* :meth:`fused`     — ``fori_loop`` over the steppers under one ``jit``:
+  the zero-overhead hot path (``build_job``'s default);
+* :meth:`traced`    — the same stepper loops jitted per phase, fenced and
+  wall-clocked, feeding a :class:`repro.telemetry.PhaseRecorder`;
+* :meth:`sharded`   — ``shard_map`` around the same phase primitives
+  (workers = mesh axis, shuffle = literal ``all_to_all``); with a
+  recorder the phases compile as *separate* mesh programs, which is what
+  finally makes per-phase wall times possible on the sharded path;
+* :meth:`resumable` — the raw steppers jitted per grant for
+  :class:`repro.elastic.resumable.ResumableJob`'s wave-boundary
+  stop/snapshot/regrant/resume loop.
+
+The canonical stepper contract (all shapes static per plan):
+
+* ``prep(tokens)``                        → ``(splits (M, S), valid (M, S))``
+* ``map_step(W)(splits, valid, bk, bv, bp, start)``
+                                          → updated ``(M, P)`` accumulators
+* ``shuffle_step(W)(bk, bv, bp)``         → ``(pk, pv, dropped, ok0, ov0)``
+  with partitions ``(R, cap)``; the ``lexsort`` backend uses the
+  *canonical* W-independent capacity ``partition_capacity(M·P, R, f)``,
+  the ``all_to_all`` backend the capacity layout of a real W-device run
+  (its pack/unpack halves vmapped over a worker axis, the collective
+  replaced by the block transpose it implements);
+* ``reduce_step(W)(pk, pv, ok, ov, start)`` → updated ``(R, cap)`` outputs.
+
+A map task's output depends only on its split and the frozen config —
+never on W or on which wave (or mode) ran it — and all buffers are
+task-major with exactly M (or R) live rows, so bit-exactness across
+modes is a property of construction, checked once by the equivalence
+suite in ``tests/test_plan.py`` instead of once per hand-rolled path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time as _time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compat import shard_map as _shard_map
+from repro.mapreduce import backends as _backends
+from repro.mapreduce import phases
+from repro.mapreduce.phases import PAD_KEY, map_phase, reduce_local, \
+    run_map_task
+
+__all__ = ["ExecutionPlan"]
+
+
+def _pad_rows(arr, n_extra: int, fill):
+    """Append ``n_extra`` fill-rows so dynamic W-row windows never clamp."""
+    if n_extra == 0:
+        return arr
+    pad = jnp.full((n_extra,) + arr.shape[1:], fill, dtype=arr.dtype)
+    return jnp.concatenate([arr, pad], axis=0)
+
+
+class ExecutionPlan:
+    """One (app, config, input size), lowered once; modes derive from it.
+
+    ``cfg.num_workers`` is the *default* grant (the one :meth:`fused`,
+    :meth:`traced`, and :meth:`meta` use); steppers are built per grant on
+    demand and cached, which is what lets the resumable mode re-plan the
+    remaining waves under a different W mid-flight.
+    """
+
+    def __init__(self, app, cfg, input_len: int):
+        self.app = app
+        self.cfg = cfg
+        self.input_len = int(input_len)
+        self.reduce_backend = _backends.get_reduce_backend(cfg.reduce_backend)
+        if app.reduce_op not in self.reduce_backend.supported_ops:
+            raise ValueError(
+                f"reduce backend {self.reduce_backend.name!r} supports "
+                f"{self.reduce_backend.supported_ops}, but app "
+                f"{app.name!r} needs {app.reduce_op!r}"
+            )
+        self.shuffle = _backends.get_shuffle_backend(cfg.shuffle_backend)
+        self.M = cfg.num_mappers
+        self.R = cfg.num_reducers
+        self.S = math.ceil(self.input_len / self.M)
+        self.P = self.S * app.pairs_per_token
+        #: canonical (W-independent) lexsort partition capacity
+        self.lex_capacity = phases.partition_capacity(
+            self.M * self.P, self.R, cfg.capacity_factor
+        )
+        # Per-grant jitted stepper caches (shared by every mode and every
+        # ResumableJob derived from this plan).
+        self._jit_prep = None
+        self._jit_map: dict[int, callable] = {}
+        self._jit_shuffle: dict[int, callable] = {}
+        self._jit_reduce: dict[tuple[int, int], callable] = {}
+
+    # ------------------------------------------------------------- metadata
+
+    def partition_cap(self, workers: int | None = None) -> int:
+        """Partition capacity the shuffle barrier will allocate at a grant
+        (lexsort: canonical, W-free; all_to_all: the W-shaped layout)."""
+        if not self.shuffle.collective:
+            return self.lex_capacity
+        W = self.cfg.num_workers if workers is None else int(workers)
+        cfg_w = dataclasses.replace(self.cfg, num_workers=W)
+        n_local = cfg_w.map_waves * self.P
+        return phases.partition_capacity(
+            W * n_local, self.R, self.cfg.capacity_factor
+        )
+
+    def meta(self, workers: int | None = None) -> dict:
+        """Static shape facts telemetry and the cost estimator need."""
+        W = self.cfg.num_workers if workers is None else int(workers)
+        return {
+            "input_len": self.input_len,
+            "mappers": self.M,
+            "reducers": self.R,
+            "workers": W,
+            "split_size": self.S,
+            "map_waves": math.ceil(self.M / W),
+            "reduce_waves": math.ceil(self.R / W),
+            "n_pairs": self.M * self.P,
+            "partition_capacity": self.partition_cap(W),
+            "r_pad": self.R,
+        }
+
+    # ------------------------------------------------- raw stepper builders
+
+    def _prep_fn(self):
+        M, S, input_len = self.M, self.S, self.input_len
+
+        def prep(tokens):
+            if tokens.shape != (input_len,):
+                raise ValueError(
+                    f"expected ({input_len},), got {tokens.shape}"
+                )
+            pad_to = M * S
+            padded = jnp.zeros((pad_to,), jnp.int32).at[:input_len].set(
+                tokens
+            )
+            valid = (jnp.arange(pad_to) < input_len).reshape(M, S)
+            return padded.reshape(M, S), valid
+
+        return prep
+
+    def initial_map_buffers(self):
+        M, P = self.M, self.P
+        return (
+            jnp.full((M, P), PAD_KEY, jnp.int32),
+            jnp.zeros((M, P), jnp.int32),
+            jnp.zeros((M, P), bool),
+        )
+
+    def initial_reduce_buffers(self, cap: int):
+        R = self.R
+        return (
+            jnp.full((R, cap), PAD_KEY, jnp.int32),
+            jnp.zeros((R, cap), jnp.int32),
+        )
+
+    def _map_step_fn(self, W: int):
+        # Padding is only needed when the grant exceeds the task count
+        # (slice size must fit the array).  For a final *partial* wave,
+        # XLA clamps the dynamic start so the W-row window shifts onto
+        # already-processed rows — which recompute bit-identically (map
+        # tasks are deterministic and row-independent), so the in-place
+        # window needs no per-wave pad/copy of the (M, P) carries.
+        app, cfg, M = self.app, self.cfg, self.M
+        pad = max(0, W - M)
+
+        def step(splits, svalid, bk, bv, bp, start):
+            tok = jax.lax.dynamic_slice_in_dim(
+                _pad_rows(splits, pad, 0), start, W, 0
+            )
+            val = jax.lax.dynamic_slice_in_dim(
+                _pad_rows(svalid, pad, False), start, W, 0
+            )
+            k, v, pv = jax.vmap(
+                lambda t, m: run_map_task(app, cfg, t, m)
+            )(tok, val)
+
+            def upd(buf, blk, fill):
+                return jax.lax.dynamic_update_slice_in_dim(
+                    _pad_rows(buf, pad, fill), blk, start, 0
+                )[:M]
+
+            return upd(bk, k, PAD_KEY), upd(bv, v, 0), upd(bp, pv, False)
+
+        return step
+
+    def _shuffle_step_fn(self, W: int):
+        if self.shuffle.collective:
+            return self._a2a_shuffle_fn(W)
+        return self._lexsort_shuffle_fn()
+
+    def _lexsort_shuffle_fn(self):
+        """Canonical single-controller shuffle: W-independent capacity.
+
+        Reuses :meth:`LexsortShuffle.partition` with a W=1 view of the
+        config so its ``reduce_waves * W`` row padding degenerates to
+        exactly R rows — the canonical partition block.
+        """
+        cfg_w1 = dataclasses.replace(self.cfg, num_workers=1)
+        shuffle, R = self.shuffle, self.R
+        init_out = self.initial_reduce_buffers
+
+        def step(bk, bv, bp):
+            n = bk.shape[0] * bk.shape[1]
+            pk, pv, dropped = shuffle.partition(
+                cfg_w1, bk.reshape(n), bv.reshape(n), bp.reshape(n)
+            )
+            ok, ov = init_out(pk.shape[1])
+            return pk, pv, dropped, ok, ov
+
+        return step
+
+    def _a2a_shuffle_fn(self, W: int):
+        """The collective shuffle, single-controller: vmap pack/unpack
+        over a worker axis, block-transpose in place of ``all_to_all``.
+
+        Reproduces the per-worker computation (and capacity layout) of a
+        real W-device :meth:`sharded` run at the grant held when the
+        barrier executes.
+        """
+        cfg_w = dataclasses.replace(self.cfg, num_workers=W)
+        shuffle, M, R, P = self.shuffle, self.M, self.R, self.P
+        waves_m = cfg_w.map_waves
+        waves_r = cfg_w.reduce_waves
+        M_pad = waves_m * W
+        n_local = waves_m * P
+        init_out = self.initial_reduce_buffers
+
+        def step(bk, bv, bp):
+            # Worker-major local streams: worker w owns tasks w, w+W, ...
+            def per_worker(buf, fill):
+                padded = _pad_rows(buf, M_pad - M, fill)
+                return padded.reshape(waves_m, W, P).transpose(
+                    1, 0, 2
+                ).reshape(W, n_local)
+
+            k2 = per_worker(bk, PAD_KEY)
+            v2 = per_worker(bv, 0)
+            p2 = per_worker(bp, False)
+            (send_k, send_v, send_r), sdrop = jax.vmap(
+                lambda k, v, p: shuffle.pack(cfg_w, k, v, p)
+            )(k2, v2, p2)
+            # all_to_all(tiled): worker w's received row j is worker j's
+            # send row w — a block transpose of the (W, W, cap) tensor.
+            recv_k = send_k.transpose(1, 0, 2)
+            recv_v = send_v.transpose(1, 0, 2)
+            recv_r = send_r.transpose(1, 0, 2)
+            (bk2, bv2), rdrop = jax.vmap(
+                lambda k, v, r: shuffle.unpack(
+                    cfg_w, n_local,
+                    k.reshape(-1), v.reshape(-1), r.reshape(-1),
+                )
+            )(recv_k, recv_v, recv_r)
+            # (W, waves_r, cap) -> reducer-indexed (R, cap): reducer r
+            # lives on worker r % W at local slot r // W.
+            cap = bk2.shape[-1]
+            pk = bk2.transpose(1, 0, 2).reshape(waves_r * W, cap)[:R]
+            pv = bv2.transpose(1, 0, 2).reshape(waves_r * W, cap)[:R]
+            ok, ov = init_out(cap)
+            return pk, pv, sdrop.sum() + rdrop.sum(), ok, ov
+
+        return step
+
+    def _reduce_step_fn(self, W: int):
+        # Same clamped-window discipline as the map stepper: reduce
+        # backends are row-independent by contract, so the shifted final
+        # wave rewrites earlier rows with identical aggregates.
+        app, cfg, R = self.app, self.cfg, self.R
+        backend = self.reduce_backend
+        pad = max(0, W - R)
+
+        def step(pk, pv, ok_buf, ov_buf, start):
+            kblk = jax.lax.dynamic_slice_in_dim(
+                _pad_rows(pk, pad, PAD_KEY), start, W, 0
+            )
+            vblk = jax.lax.dynamic_slice_in_dim(
+                _pad_rows(pv, pad, 0), start, W, 0
+            )
+            ok, ov = backend.reduce(kblk, vblk, app.reduce_op)
+            ov = phases._masked_setup(cfg, kblk, ok, ov)
+
+            def upd(buf, blk, fill):
+                return jax.lax.dynamic_update_slice_in_dim(
+                    _pad_rows(buf, pad, fill), blk, start, 0
+                )[:R]
+
+            return upd(ok_buf, ok, PAD_KEY), upd(ov_buf, ov, 0)
+
+        return step
+
+    # ----------------------------------------- jitted steppers (per grant)
+
+    def prep(self):
+        if self._jit_prep is None:
+            self._jit_prep = jax.jit(self._prep_fn())
+        return self._jit_prep
+
+    def map_stepper(self, W: int):
+        if W not in self._jit_map:
+            self._jit_map[W] = jax.jit(self._map_step_fn(W))
+        return self._jit_map[W]
+
+    def shuffle_stepper(self, W: int):
+        key = W if self.shuffle.collective else 1
+        if key not in self._jit_shuffle:
+            self._jit_shuffle[key] = jax.jit(self._shuffle_step_fn(key))
+        return self._jit_shuffle[key]
+
+    def reduce_stepper(self, W: int, cap: int):
+        key = (W, cap)
+        if key not in self._jit_reduce:
+            self._jit_reduce[key] = jax.jit(self._reduce_step_fn(W))
+        return self._jit_reduce[key]
+
+    # ------------------------------------------------- phase compositions
+
+    def phase_fns(self, workers: int | None = None) -> dict:
+        """The pipeline as three pure phase functions — each a stepper
+        loop (``fori_loop`` over waves) at one grant.  Shared by the
+        fused mode (composed under one jit), the traced mode (jitted and
+        fenced per phase), and the XLA cost estimator (lowered per phase
+        for abstract inputs).
+        """
+        W = self.cfg.num_workers if workers is None else int(workers)
+        prep = self._prep_fn()
+        map_step = self._map_step_fn(W)
+        shuffle_step = self._shuffle_step_fn(
+            W if self.shuffle.collective else 1
+        )
+        reduce_step = self._reduce_step_fn(W)
+        map_waves = math.ceil(self.M / W)
+        red_waves = math.ceil(self.R / W)
+        init_map = self.initial_map_buffers
+        init_red = self.initial_reduce_buffers
+
+        def phase_map(tokens):
+            splits, valid = prep(tokens)
+
+            def body(i, bufs):
+                return map_step(splits, valid, *bufs, i * W)
+
+            return jax.lax.fori_loop(0, map_waves, body, init_map())
+
+        def phase_shuffle(bk, bv, bp):
+            pk, pv, dropped, _, _ = shuffle_step(bk, bv, bp)
+            return pk, pv, dropped
+
+        def phase_reduce(pk, pv):
+            def body(i, bufs):
+                return reduce_step(pk, pv, *bufs, i * W)
+
+            return jax.lax.fori_loop(
+                0, red_waves, body, init_red(pk.shape[1])
+            )
+
+        return {
+            "map": phase_map,
+            "shuffle": phase_shuffle,
+            "reduce": phase_reduce,
+        }
+
+    # ---------------------------------------------------------------- modes
+
+    def fused(self, workers: int | None = None):
+        """Mode ``fused``: the whole pipeline under one ``jit`` — the
+        zero-overhead hot path.  Returns ``job(tokens) -> (out_keys
+        (R, cap), out_vals (R, cap), dropped ())``.  Works for both
+        shuffle families (the collective one runs its emulated
+        single-controller form; use :meth:`sharded` for a real mesh)."""
+        fns = self.phase_fns(workers)
+
+        def job(tokens):
+            bk, bv, bp = fns["map"](tokens)
+            pk, pv, dropped = fns["shuffle"](bk, bv, bp)
+            ok, ov = fns["reduce"](pk, pv)
+            return ok, ov, dropped
+
+        return jax.jit(job)
+
+    def traced(self, recorder, workers: int | None = None):
+        """Mode ``traced``: phase-fenced stepper loops feeding a
+        :class:`repro.telemetry.PhaseRecorder`.  Same semantics and
+        outputs as :meth:`fused`; counters are measured from the actual
+        phase outputs (host-side numpy reductions), so conservation laws
+        are checkable invariants rather than config-derived tautologies.
+        """
+        fns = self.phase_fns(workers)
+        jit_map = jax.jit(fns["map"])
+        jit_shuffle = jax.jit(fns["shuffle"])
+        jit_reduce = jax.jit(fns["reduce"])
+        m = self.meta(workers)
+        pair_bytes = phases.PAIR_BYTES
+        app, cfg = self.app, self.cfg
+
+        def job(tokens):
+            trace = recorder.start_job(app.name, cfg, m["input_len"])
+            try:
+                return _run(tokens, trace)
+            except Exception:
+                # A failed run must not leave a phantom/partial trace for
+                # recorder.last / take_trace consumers to misread.
+                if trace in recorder.traces:
+                    recorder.traces.remove(trace)
+                raise
+
+        def _run(tokens, trace):
+            t_job = _time.perf_counter()
+
+            t0 = _time.perf_counter()
+            bk, bv, bp = jax.block_until_ready(jit_map(tokens))
+            dt = _time.perf_counter() - t0
+            pairs_emitted = int(np.asarray(bp).sum())
+            trace.record_phase(
+                "map", dt,
+                tasks=m["mappers"], waves=m["map_waves"],
+                records_in=m["input_len"],
+                pairs_emitted=pairs_emitted, pairs_capacity=m["n_pairs"],
+            )
+
+            t0 = _time.perf_counter()
+            pk, pv, dropped = jax.block_until_ready(
+                jit_shuffle(bk, bv, bp)
+            )
+            dt = _time.perf_counter() - t0
+            n_dropped = int(dropped)
+            pairs_out = int((np.asarray(pk) != int(PAD_KEY)).sum())
+            trace.record_phase(
+                "shuffle", dt,
+                pairs_in=pairs_emitted, pairs_out=pairs_out,
+                pairs_dropped=n_dropped,
+                bytes_in=pairs_emitted * pair_bytes,
+                bytes_out=pairs_out * pair_bytes,
+                bytes_dropped=n_dropped * pair_bytes,
+                partitions=m["reducers"],
+                partition_capacity=int(pk.shape[1]),
+            )
+
+            t0 = _time.perf_counter()
+            ok, ov = jax.block_until_ready(jit_reduce(pk, pv))
+            dt = _time.perf_counter() - t0
+            segments = int((np.asarray(ok) != int(PAD_KEY)).sum())
+            trace.record_phase(
+                "reduce", dt,
+                tasks=m["reducers"], waves=m["reduce_waves"],
+                segments_out=segments,
+                segment_slots=m["reducers"] * int(pk.shape[1]),
+            )
+
+            trace.finish(_time.perf_counter() - t_job)
+            return ok, ov, dropped
+
+        return job
+
+    def resumable(self, recorder=None):
+        """Mode ``resumable``: a :class:`repro.elastic.resumable.
+        ResumableJob` whose wave steppers are this plan's (cursor and
+        regrant bookkeeping live in the elastic layer; the pipeline
+        lowering lives here, once)."""
+        from repro.elastic.resumable import ResumableJob
+
+        return ResumableJob.from_plan(self, recorder=recorder)
+
+    # ------------------------------------------------------------- sharded
+
+    def sharded(self, mesh, axis: str = "workers", counters: bool = False,
+                recorder=None):
+        """Mode ``sharded``: ``shard_map`` around the same phase
+        primitives — workers are devices on ``mesh[axis]``, the shuffle a
+        literal ``all_to_all``.  This is the deployment path for real
+        multi-chip meshes; semantics match every other mode.
+
+        ``recorder=None`` compiles the fused single-program form (one
+        dispatch, zero overhead).  With a recorder, the three phases
+        compile as *separate* mesh programs so each can be fenced and
+        wall-clocked — per-phase wall times and measured counters on the
+        sharded path, which the fused ``shard_map`` program inherently
+        collapses to one aggregate.
+
+        With ``counters=True`` the returned job additionally yields a
+        ``stats`` dict reducing the per-worker overflow counters across
+        shards (``dropped_send`` / ``dropped_recv`` /
+        ``dropped_per_worker``).
+        """
+        cfg, app = self.cfg, self.app
+        W = mesh.shape[axis]
+        if cfg.num_workers != W:
+            raise ValueError(
+                f"cfg.num_workers={cfg.num_workers} != mesh {W}"
+            )
+        shuffle = self.shuffle
+        if not shuffle.collective:
+            # The sharded path's structural shuffle IS the mesh collective.
+            shuffle = _backends.SHUFFLE_BACKENDS["all_to_all"]
+        reduce_backend = self.reduce_backend
+        M, R, S, P = self.M, self.R, self.S, self.P
+        input_len = self.input_len
+        waves_m = cfg.map_waves
+        waves_r = cfg.reduce_waves
+        M_pad = waves_m * W
+        n_local = waves_m * P
+
+        from jax.sharding import PartitionSpec as P_
+
+        spec2 = P_(axis, None)
+        spec3 = P_(axis, None, None)
+
+        def smap(worker_fn, in_specs, out_specs):
+            # pallas_call has no replication rule; every output is
+            # axis-sharded anyway, so the check adds nothing here.
+            return _shard_map(
+                worker_fn, mesh=mesh, in_specs=in_specs,
+                out_specs=out_specs, check=False,
+            )
+
+        def prep(tokens):
+            pad_to = M_pad * S
+            padded = jnp.zeros((pad_to,), jnp.int32).at[:input_len].set(
+                tokens
+            )
+            valid = (jnp.arange(pad_to) < input_len)
+            # Worker-major task layout: worker w owns tasks w, w+W, ...
+            splits = padded.reshape(waves_m, W, S).transpose(1, 0, 2)
+            vsplit = valid.reshape(waves_m, W, S).transpose(1, 0, 2)
+            return splits, vsplit
+
+        def w_map(splits, valid):  # (1(worker), waves, S) local shards
+            # Local map waves: reuse the shared map phase with W_local = 1.
+            sp = splits[0][:, None, :]   # (waves, 1, S)
+            va = valid[0][:, None, :]
+            k, v, pv = map_phase(app, cfg, sp, va)
+            return (
+                k.reshape(1, n_local),
+                v.reshape(1, n_local),
+                pv.reshape(1, n_local),
+            )
+
+        def w_shuffle(k, v, pv):  # (1, n_local) local pair streams
+            bk, bv, dropped = shuffle.exchange(
+                cfg, axis, k[0], v[0], pv[0]
+            )
+            return bk[None], bv[None], dropped[None]
+
+        def w_reduce(bk, bv):  # (1, waves_r, cap) owned reduce slots
+            ok, ov = reduce_local(app, cfg, bk[0], bv[0], reduce_backend)
+            return ok[None], ov[None]
+
+        def to_reducer_major(ok, ov):
+            # (W, waves_r, cap) -> (R, cap) indexed by reducer id: reducer
+            # r lives on worker r % W at local slot r // W, so row r of
+            # the slot-major stacking is exactly reducer r's partition.
+            cap = ok.shape[-1]
+            ok = ok.transpose(1, 0, 2).reshape(-1, cap)[:R]
+            ov = ov.transpose(1, 0, 2).reshape(-1, cap)[:R]
+            return ok, ov
+
+        def stats_from(per_worker: np.ndarray) -> dict:
+            return {
+                "dropped_send": int(per_worker[:, 0].sum()),
+                "dropped_recv": int(per_worker[:, 1].sum()),
+                "dropped_per_worker": per_worker,
+            }
+
+        if recorder is None:
+            # Fused single mesh program (the zero-overhead deployment
+            # path): all three phases in one shard_map body.
+            def worker(splits, valid):
+                k, v, pv = w_map(splits, valid)
+                bk, bv, dropped = w_shuffle(k, v, pv)
+                ok, ov = w_reduce(bk, bv)
+                return ok, ov, dropped
+
+            shard_fn = smap(
+                worker, (spec3, spec3), (spec3, spec3, spec2)
+            )
+
+            def whole(tokens):
+                splits, vsplit = prep(tokens)
+                ok, ov, dropped = shard_fn(splits, vsplit)
+                ok, ov = to_reducer_major(ok, ov)
+                # dropped: (W, 2) per-worker [send, recv] counters.
+                return ok, ov, dropped
+
+            jitted = jax.jit(whole)
+
+            if not counters:
+                def plain(tokens):
+                    ok, ov, dropped = jitted(tokens)
+                    return ok, ov, dropped.sum()
+                return plain
+
+            def with_counters(tokens):
+                ok, ov, dropped = jitted(tokens)
+                per_worker = np.asarray(dropped)
+                return ok, ov, dropped.sum(), stats_from(per_worker)
+
+            return with_counters
+
+        # Phase-fenced sharded execution: three separate mesh programs,
+        # each wall-clocked, counters cross-shard reduced on the host.
+        pair_bytes = phases.PAIR_BYTES
+        jit_map = jax.jit(
+            lambda tokens: smap(w_map, (spec3, spec3),
+                                (spec2, spec2, spec2))(*prep(tokens))
+        )
+        jit_shuffle = jax.jit(
+            smap(w_shuffle, (spec2, spec2, spec2), (spec3, spec3, spec2))
+        )
+        jit_reduce = jax.jit(
+            smap(w_reduce, (spec3, spec3), (spec3, spec3))
+        )
+
+        def traced_job(tokens):
+            trace = recorder.start_job(app.name, cfg, input_len)
+            try:
+                return _run(tokens, trace)
+            except Exception:
+                if trace in recorder.traces:
+                    recorder.traces.remove(trace)
+                raise
+
+        def _run(tokens, trace):
+            t_job = _time.perf_counter()
+
+            t0 = _time.perf_counter()
+            k, v, pv = jax.block_until_ready(jit_map(tokens))
+            dt = _time.perf_counter() - t0
+            pairs_emitted = int(np.asarray(pv).sum())
+            trace.record_phase(
+                "map", dt,
+                tasks=M, waves=waves_m, workers=W,
+                records_in=input_len,
+                pairs_emitted=pairs_emitted, pairs_capacity=W * n_local,
+            )
+
+            t0 = _time.perf_counter()
+            bk, bv, dropped = jax.block_until_ready(
+                jit_shuffle(k, v, pv)
+            )
+            dt = _time.perf_counter() - t0
+            per_worker = np.asarray(dropped)
+            n_dropped = int(per_worker.sum())
+            pairs_out = int((np.asarray(bk) != int(PAD_KEY)).sum())
+            trace.record_phase(
+                "shuffle", dt,
+                pairs_in=pairs_emitted, pairs_out=pairs_out,
+                pairs_dropped=n_dropped,
+                bytes_in=pairs_emitted * pair_bytes,
+                bytes_out=pairs_out * pair_bytes,
+                bytes_dropped=n_dropped * pair_bytes,
+                partitions=R, workers=W,
+                # The capacity the executed exchange actually allocated
+                # (the configured shuffle may have been substituted by
+                # the collective on this path).
+                partition_capacity=int(bk.shape[-1]),
+                dropped_send=int(per_worker[:, 0].sum()),
+                dropped_recv=int(per_worker[:, 1].sum()),
+            )
+
+            t0 = _time.perf_counter()
+            ok, ov = jax.block_until_ready(jit_reduce(bk, bv))
+            dt = _time.perf_counter() - t0
+            ok, ov = to_reducer_major(ok, ov)
+            segments = int((np.asarray(ok) != int(PAD_KEY)).sum())
+            trace.record_phase(
+                "reduce", dt,
+                tasks=R, waves=waves_r, workers=W,
+                segments_out=segments,
+                segment_slots=W * waves_r * int(bk.shape[-1]),
+            )
+
+            trace.finish(_time.perf_counter() - t_job)
+            if counters:
+                return ok, ov, per_worker.sum(), stats_from(per_worker)
+            return ok, ov, per_worker.sum()
+
+        return traced_job

@@ -2,10 +2,11 @@
 
 Wall-clock telemetry (``trace.py``) answers "what did this run cost"; this
 module answers "what does XLA *think* each phase costs" — without running
-anything.  Each pipeline stage from
-:func:`repro.mapreduce.engine.build_stage_fns` is lowered and compiled for
-abstract (shape-only) inputs, and the compiled executable's cost analysis
-(flops, bytes accessed) is read through the version-compat shim
+anything.  Each phase function of the canonical
+:class:`repro.mapreduce.plan.ExecutionPlan` (the same stepper loops every
+execution mode runs) is lowered and compiled for abstract (shape-only)
+inputs, and the compiled executable's cost analysis (flops, bytes
+accessed) is read through the version-compat shim
 :func:`repro.compat.compiled_cost_analysis`.
 
 The estimates feed two consumers:
@@ -27,7 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.compat import compiled_cost_analysis
-from repro.mapreduce.engine import build_stage_fns
+from repro.mapreduce.plan import ExecutionPlan
 
 #: cost_analysis key for bytes moved (XLA's name, with fallbacks).
 _BYTES_KEYS = ("bytes accessed", "bytes_accessed")
@@ -43,21 +44,23 @@ def _pick(cost: dict, *keys, default: float = 0.0) -> float:
 def stage_cost_estimates(app, cfg, input_len: int) -> dict[str, dict]:
     """Per-phase {flops, bytes, flops_per_byte, available} via XLA.
 
-    Phases are the engine's compute stages (map, shuffle, reduce); collect
+    Phases are the plan's compute stages (map, shuffle, reduce); collect
     is host-side and has no XLA program.  ``available=False`` (with zeroed
     numbers) means the backend reported no cost model for that stage.
     """
-    stages, meta = build_stage_fns(app, cfg, input_len)
+    plan = ExecutionPlan(app, cfg, input_len)
+    stages = plan.phase_fns()
+    meta = plan.meta()
     i32 = jnp.int32
     tok = jax.ShapeDtypeStruct((input_len,), i32)
-    flat = jax.ShapeDtypeStruct((meta["n_pairs"],), i32)
-    flat_b = jax.ShapeDtypeStruct((meta["n_pairs"],), jnp.bool_)
+    acc = jax.ShapeDtypeStruct((plan.M, plan.P), i32)
+    acc_b = jax.ShapeDtypeStruct((plan.M, plan.P), jnp.bool_)
     part = jax.ShapeDtypeStruct(
-        (meta["r_pad"], meta["partition_capacity"]), i32
+        (plan.R, meta["partition_capacity"]), i32
     )
     abstract_args = {
         "map": (tok,),
-        "shuffle": (flat, flat, flat_b),
+        "shuffle": (acc, acc, acc_b),
         "reduce": (part, part),
     }
     out: dict[str, dict] = {}

@@ -5,7 +5,6 @@ semantics axis."""
 
 from collections import Counter
 
-import jax
 import numpy as np
 import pytest
 
@@ -81,68 +80,10 @@ class TestReduceBackendEquivalence:
         assert all(r == ref for r in results.values())
 
 
-class TestShuffleBackendEquivalence:
-    @pytest.fixture(scope="class")
-    def mesh1(self):
-        return jax.make_mesh((1,), ("workers",))
-
-    @pytest.mark.parametrize("M,R", [(4, 3), (6, 5)])
-    def test_all_to_all_matches_lexsort(self, mesh1, M, R):
-        """W=1 mesh runs the collective path in-process; results must match
-        the single-controller shuffle exactly (4-device run covered by
-        test_mapreduce_sharded)."""
-        corpus = wordcount_corpus(1200, vocab_size=97, seed=M)
-        app = wordcount(97)
-        for backend in ALL_REDUCE:
-            lex = _job_output(app, corpus, num_mappers=M, num_reducers=R,
-                              reduce_backend=backend)
-            cfg = JobConfig(num_mappers=M, num_reducers=R, num_workers=1,
-                            capacity_factor=8.0, reduce_backend=backend,
-                            shuffle_backend="all_to_all")
-            ok, ov, dropped = build_job(app, cfg, len(corpus),
-                                        mesh=mesh1)(corpus)
-            assert ok.shape[0] == R  # (R, cap), reducer-indexed like lexsort
-            assert (collect_results(ok, ov), int(dropped)) == lex, backend
-
-    def test_all_to_all_dropped_matches_under_skew(self, mesh1):
-        corpus = np.zeros(600, dtype=np.int32)
-        app = wordcount(16)
-        lex = _job_output(app, corpus, num_mappers=2, num_reducers=4,
-                          capacity_factor=1.0)
-        cfg = JobConfig(num_mappers=2, num_reducers=4, num_workers=1,
-                        capacity_factor=1.0, shuffle_backend="all_to_all")
-        ok, ov, dropped = build_job(app, cfg, len(corpus), mesh=mesh1)(corpus)
-        assert lex[1] > 0
-        assert (collect_results(ok, ov), int(dropped)) == lex
-
-    def test_collective_shuffle_requires_mesh(self):
-        cfg = JobConfig(num_mappers=2, num_reducers=2,
-                        shuffle_backend="all_to_all")
-        with pytest.raises(ValueError, match="mesh"):
-            build_job(wordcount(16), cfg, 100)
-
-    def test_sharded_per_phase_dropped_counters(self, mesh1):
-        """counters=True reduces per-worker overflow counters across
-        shards into true per-phase totals (ROADMAP's sharded telemetry
-        gap).  At W=1 the send stage cannot overflow (its capacity is
-        the whole local stream), so every drop must be attributed to the
-        receive/bucket stage — and match the single-controller count."""
-        from repro.mapreduce import build_job_sharded
-
-        corpus = np.zeros(600, dtype=np.int32)  # one key: max skew
-        app = wordcount(16)
-        lex = _job_output(app, corpus, num_mappers=2, num_reducers=4,
-                          capacity_factor=1.0)
-        cfg = JobConfig(num_mappers=2, num_reducers=4, num_workers=1,
-                        capacity_factor=1.0, shuffle_backend="all_to_all")
-        ok, ov, dropped, stats = build_job_sharded(
-            app, cfg, len(corpus), mesh1, counters=True
-        )(corpus)
-        assert int(dropped) == lex[1] > 0
-        assert stats["dropped_send"] == 0
-        assert stats["dropped_recv"] == lex[1]
-        assert stats["dropped_per_worker"].shape == (1, 2)
-        assert stats["dropped_per_worker"].sum() == int(dropped)
+# Shuffle-backend equivalence (lexsort vs all_to_all, emulated vs real
+# mesh, per-phase dropped counters) lives in tests/test_plan.py: both
+# shuffle families are modes of one ExecutionPlan, so their agreement is
+# asserted once by the mode-equivalence suite.
 
 
 class TestBackendValidation:

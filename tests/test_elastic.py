@@ -3,15 +3,21 @@ preemptive regrant scheduling.
 
 The load-bearing guarantees:
 
-* preempt-at-every-wave-boundary-then-resume is **bit-exact** against the
-  uninterrupted run for every reduce backend x shuffle backend;
+* preempt-at-every-wave-boundary-then-resume is **bit-exact** against
+  every other execution mode — asserted by the ExecutionPlan
+  mode-equivalence suite in ``tests/test_plan.py`` (the resumable path
+  is a derivation of the same plan, so the property is structural);
 * for the lexsort shuffle, results are bit-exact under *any* sequence of
   worker regrants (the canonical task-space buffers are grant-free);
 * snapshots round-trip through the checkpoint manager (dtypes included)
   and respect ``keep=`` retention;
-* the elastic simulator conserves workers through shrink/grow events,
-  tiles each job's lifetime with segments, and reproduces the base
-  simulator when nothing regrants;
+* the elastic simulator conserves workers through shrink/grow/suspend
+  events, tiles each job's lifetime with segments (disk-queued time is
+  its own ``suspended`` phase), and reproduces the base simulator when
+  nothing regrants;
+* a grant of **0** suspends a running job to disk; resume re-plans the
+  remaining waves under any new grant, and on engine-oracle runs the
+  charged checkpoint costs are *measured* save/load walls;
 * ``predict-elastic`` strictly beats ``predict-deadline`` on deadline
   attainment under contention and is identical without it.
 """
@@ -47,12 +53,10 @@ from repro.elastic import (
 from repro.mapreduce import (
     REDUCE_BACKENDS,
     JobConfig,
-    build_job,
     collect_results,
     wordcount,
     wordcount_corpus,
 )
-from repro.telemetry import JobTrace, PhaseRecorder
 
 ALL_REDUCE = sorted(REDUCE_BACKENDS)
 ALL_SHUFFLE = ("lexsort", "all_to_all")
@@ -75,66 +79,26 @@ def _outputs(job, state):
     return np.asarray(ok), np.asarray(ov), int(dropped)
 
 
-def _merge_segments(traces) -> JobTrace:
-    """One trace holding all segment phases (conservation spans segments)."""
-    merged = JobTrace(app=traces[0].app, config=dict(traces[0].config))
-    for t in traces:
-        merged.phases.extend(t.phases)
-    merged.finish(sum(t.total_s for t in traces))
-    return merged
-
-
 class TestResumableEquivalence:
-    def test_matches_fused_pipeline_bit_exact(self):
-        """W | M and W | R: the fused and wave-stepped pipelines share
-        shapes and capacities, so outputs must agree bit for bit."""
+    """Regrant-specific equivalences.  The full mode-equivalence
+    property suite (fused == traced == resumable at every preemption
+    point, all backend combinations) lives in tests/test_plan.py — the
+    resumable mode is one derivation of the same ExecutionPlan."""
+
+    def test_plan_shared_with_fused_mode(self):
+        """ResumableJob.from_plan shares the plan (and its stepper
+        caches) with the fused mode it must match."""
+        from repro.mapreduce import ExecutionPlan
+
         cfg = _cfg(num_mappers=6, num_reducers=4, num_workers=2)
-        ok_f, ov_f, d_f = build_job(APP, cfg, len(CORPUS))(CORPUS)
-        job = ResumableJob(APP, cfg, len(CORPUS))
+        plan = ExecutionPlan(APP, cfg, len(CORPUS))
+        ok_f, ov_f, d_f = plan.fused()(CORPUS)
+        job = ResumableJob.from_plan(plan)
+        assert job.plan is plan
         ok_r, ov_r, d_r = _outputs(job, run_resumable(job, CORPUS))
         assert np.array_equal(np.asarray(ok_f), ok_r)
         assert np.array_equal(np.asarray(ov_f), ov_r)
         assert int(d_f) == d_r
-
-    @pytest.mark.parametrize("reduce_backend", ALL_REDUCE)
-    @pytest.mark.parametrize("shuffle_backend", ALL_SHUFFLE)
-    def test_preempt_every_boundary_bit_exact(self, reduce_backend,
-                                              shuffle_backend):
-        """Preempt after k steps then resume, for every k: identical
-        outputs, counts, and merged-trace conservation laws."""
-        cfg = _cfg(reduce_backend=reduce_backend,
-                   shuffle_backend=shuffle_backend)
-        recorder = PhaseRecorder()
-        job = ResumableJob(APP, cfg, len(CORPUS), recorder=recorder)
-        ref_state = run_resumable(job, CORPUS)
-        ok0, ov0, d0 = _outputs(job, ref_state)
-        assert collect_results(ok0, ov0) == WANT
-        ref_trace = recorder.last
-        total_steps = ref_state.cursor.waves_executed
-        assert total_steps == 3 + 1 + 2  # map waves + shuffle + red waves
-        for k in range(1, total_steps):
-            recorder.clear()
-            part = run_resumable(job, CORPUS, preempt_after=k)
-            assert part.cursor.waves_executed == k
-            assert not part.cursor.done
-            full = run_resumable(job, CORPUS, state=part)
-            ok, ov, d = _outputs(job, full)
-            assert np.array_equal(ok, ok0), k
-            assert np.array_equal(ov, ov0), k
-            assert d == d0, k
-            merged = _merge_segments(recorder.traces)
-            assert merged.check_conservation() == [], k
-            # Bit-exact counts: the interrupted run measured the same
-            # phase totals as the uninterrupted one.
-            for phase, name in (
-                ("map", "pairs_emitted"),
-                ("shuffle", "pairs_out"),
-                ("shuffle", "pairs_dropped"),
-                ("reduce", "segments_out"),
-            ):
-                assert merged.counter(phase, name) == ref_trace.counter(
-                    phase, name
-                ), (k, phase, name)
 
     @pytest.mark.parametrize("reduce_backend", ALL_REDUCE)
     def test_regrant_any_schedule_bit_exact_lexsort(self, reduce_backend):
@@ -505,7 +469,268 @@ class TestElasticClusterSim:
 
     def test_regrant_action_validation(self):
         with pytest.raises(ValueError, match="bad regrant"):
-            Regrant(0, 0)
+            Regrant(0, -1)
+        Regrant(0, 0)  # grant 0 == suspend-to-disk: legal
+
+
+class _ScriptedSuspend(SchedulingPolicy):
+    """Dispatches at a fixed grant; suspends job 0 to disk when job 1
+    arrives, resumes it once the pool quiets down."""
+
+    name = "scripted-suspend"
+
+    def __init__(self, resume_workers=8):
+        self.resume_workers = resume_workers
+        self.suspended = False
+        self.resumed = False
+        self.overheads: list[tuple[float, float]] = []
+
+    def prepare(self, cluster, apps):
+        self.cluster = cluster
+
+    def observe_overhead(self, save_s, restore_s):
+        self.overheads.append((save_s, restore_s))
+
+    def select(self, queue, free, now):
+        if queue and queue[0].job_id == 1 and not self.suspended:
+            v = {u.job_id: u for u in self.cluster.running_jobs(now)}.get(0)
+            if (v is not None and v.pending_workers is None
+                    and v.steps_remaining >= 2):
+                self.suspended = True
+                return Regrant(0, 0, reason="scripted suspend")
+        if queue:
+            plan = Plan(backend="jnp", mappers=16, reducers=8,
+                        workers=min(8, free) or 1)
+            if plan.workers > free:
+                return None
+            return Dispatch(queue[0], plan)
+        return None
+
+    def idle(self, free, now):
+        if self.resumed or not self.suspended:
+            return None
+        sus = self.cluster.suspended_jobs()
+        if sus and free >= self.resume_workers:
+            self.resumed = True
+            return Regrant(sus[0].job_id, self.resume_workers,
+                           reason="scripted resume")
+        return None
+
+
+class TestSuspendToDisk:
+    def _jobs(self, n=2, gap=0.15, size=1 << 17):
+        return generate_workload(
+            n, seed=5, arrival="uniform", mean_interarrival=gap,
+            size_range=(size, size),
+        )
+
+    def test_scripted_suspend_resume_accounting(self):
+        oracle = AnalyticOracle(noise=0.0)
+        cluster = ElasticCluster(
+            8, oracle, snapshot_overhead_s=0.01, restore_overhead_s=0.02
+        )
+        policy = _ScriptedSuspend()
+        result = cluster.run(self._jobs(), policy)
+        assert policy.suspended and policy.resumed
+        rec = result.records[0]
+        assert rec.n_suspends == 1 and rec.n_regrants == 2
+        # Suspend charges the snapshot, resume the restore.
+        assert rec.overhead_s == pytest.approx(0.03)
+        # The suspended gap separates the two execution segments; the
+        # full grant was free in between (job 1 ran at 8 workers).
+        assert len(rec.segments) == 2
+        grants = [w for _, _, w in rec.segments]
+        assert grants == [8, 8]
+        assert rec.segments[1][0] > rec.segments[0][1]
+        assert all(r.completed for r in result.records)
+        m = result.metrics()
+        assert m["n_suspends"] == 1
+        assert m["n_regrants"] == 2
+
+    def test_suspended_trace_tiles_turnaround(self):
+        oracle = AnalyticOracle(noise=0.0)
+        cluster = ElasticCluster(8, oracle)
+        result = cluster.run(self._jobs(), _ScriptedSuspend())
+        trace = result.records[0].trace
+        times = trace.phase_times()
+        assert times.get("suspended", 0.0) > 0
+        assert times.get("regrant", 0.0) == pytest.approx(0.04)
+        # Phase walls (work + overhead + disk queue) tile the turnaround.
+        assert trace.check_conservation(time_rel_tol=1e-9,
+                                        time_abs_tol=1e-9) == []
+        assert trace.counter("suspended", "events") == 1
+
+    def test_suspended_view_exposes_progress(self):
+        oracle = AnalyticOracle(noise=0.0)
+        cluster = ElasticCluster(8, oracle)
+
+        class Peek(_ScriptedSuspend):
+            views = None
+
+            def idle(self, free, now):
+                sus = self.cluster.suspended_jobs()
+                if sus and Peek.views is None:
+                    Peek.views = sus
+                return super().idle(free, now)
+
+        cluster.run(self._jobs(), Peek())
+        (view,) = Peek.views
+        assert view.job_id == 0
+        assert view.workers_before == 8
+        assert not view.progress.done
+        assert view.progress.map_tasks_done > 0
+
+    def test_unresumed_suspension_is_stranding(self):
+        """A policy that suspends and never resumes must fail loudly,
+        not spin or silently drop the job."""
+
+        class NeverResume(_ScriptedSuspend):
+            def idle(self, free, now):
+                return None
+
+        oracle = AnalyticOracle(noise=0.0)
+        cluster = ElasticCluster(8, oracle)
+        with pytest.raises(RuntimeError, match="suspended"):
+            cluster.run(self._jobs(), NeverResume())
+
+    def test_resume_validation(self):
+        """Resume of a suspended job demands workers >= 1 and a grant
+        that fits the free pool."""
+
+        class BadResume(_ScriptedSuspend):
+            def __init__(self, workers):
+                super().__init__()
+                self.bad_workers = workers
+
+            def idle(self, free, now):
+                if self.suspended and not self.resumed:
+                    sus = self.cluster.suspended_jobs()
+                    if sus:
+                        self.resumed = True
+                        return Regrant(sus[0].job_id, self.bad_workers)
+                return None
+
+        with pytest.raises(ValueError, match="workers >= 1"):
+            ElasticCluster(8, AnalyticOracle(noise=0.0)).run(
+                self._jobs(), BadResume(0)
+            )
+        with pytest.raises(ValueError, match="free"):
+            ElasticCluster(8, AnalyticOracle(noise=0.0)).run(
+                self._jobs(), BadResume(100)
+            )
+
+    def test_predict_elastic_suspend_rescues_floor_victims(self):
+        """When every best-effort victim already sits at the shrink
+        floor, only a suspend can free workers for a starved deadline
+        job — the suspend=True policy does it and the job is resumed
+        and completed later."""
+        oracle = AnalyticOracle(noise=0.02, seed=1)
+        jobs = generate_workload(
+            30, seed=1, arrival="bursty", mean_interarrival=0.06,
+            size_range=(1 << 15, 1 << 18),
+        )
+        jobs = assign_deadlines(
+            jobs, lambda j: oracle.nominal_time(j.app, j.size),
+            slack_range=(1.1, 2.0), fraction=0.5, seed=2,
+        )
+        policy = get_policy("predict-elastic", seed=1, suspend=True,
+                            shrink_floor=4, worker_grid=(4, 8))
+        result = ElasticCluster(8, oracle).run(jobs, policy)
+        m = result.metrics()
+        assert policy.n_suspends > 0 and policy.n_resumes > 0
+        assert m["n_suspends"] >= policy.n_suspends
+        # Every suspended job finished (none stranded on disk).
+        assert all(
+            r.completed for r in result.records if r.n_suspends > 0
+        )
+
+    def test_suspend_resume_not_gated_on_regrow(self):
+        """Resume is a liveness obligation, not an optimization: with
+        regrow=False a suspended job must still come back (a policy that
+        suspends without a resume path strands the whole run)."""
+        oracle = AnalyticOracle(noise=0.02, seed=1)
+        jobs = generate_workload(
+            30, seed=1, arrival="bursty", mean_interarrival=0.06,
+            size_range=(1 << 15, 1 << 18),
+        )
+        jobs = assign_deadlines(
+            jobs, lambda j: oracle.nominal_time(j.app, j.size),
+            slack_range=(1.1, 2.0), fraction=0.5, seed=2,
+        )
+        policy = get_policy("predict-elastic", seed=1, suspend=True,
+                            regrow=False, shrink_floor=4,
+                            worker_grid=(4, 8))
+        result = ElasticCluster(8, oracle).run(jobs, policy)
+        assert policy.n_suspends > 0 and policy.n_resumes > 0
+        assert all(
+            r.completed for r in result.records if r.n_suspends > 0
+        )
+
+
+class TestMeasuredOverheadScheduling:
+    def test_analytic_oracle_keeps_configured_costs(self):
+        """No regrant_overhead on the oracle -> configured costs charged
+        (the pre-existing contract, asserted bit-for-bit above)."""
+        oracle = AnalyticOracle(noise=0.0)
+        assert not hasattr(oracle, "regrant_overhead")
+        cluster = ElasticCluster(
+            12, oracle, snapshot_overhead_s=0.01, restore_overhead_s=0.02
+        )
+        assert cluster._measure_overhead is None
+
+    @pytest.mark.slow
+    def test_engine_oracle_measures_real_snapshot_walls(self):
+        oracle = EngineOracle(warmup=0, size_quantum=1024)
+        save_s, restore_s = oracle.regrant_overhead(
+            "wordcount", "jnp", 4096, 4, 2
+        )
+        assert save_s > 0 and restore_s > 0
+        # Post-shuffle snapshots have a different layout; still measured.
+        save2, restore2 = oracle.regrant_overhead(
+            "wordcount", "jnp", 4096, 4, 2, shuffled=True
+        )
+        assert save2 > 0 and restore2 > 0
+
+    @pytest.mark.slow
+    def test_elastic_sim_charges_measured_overheads(self):
+        """On an engine-oracle run, the regrant gap equals the measured
+        save+restore walls and the policy's cost-model EWMA ingests the
+        pair — measured, not configured, checkpoint costs."""
+        oracle = EngineOracle(warmup=0, size_quantum=1024)
+        # Configured costs deliberately absurd: they must NOT be charged.
+        cluster = ElasticCluster(
+            8, oracle, snapshot_overhead_s=99.0, restore_overhead_s=99.0
+        )
+        import dataclasses as _dc
+
+        jobs = [
+            _dc.replace(j, arrival=0.0) for j in generate_workload(
+                2, seed=5, arrival="uniform", mean_interarrival=0.001,
+                size_range=(2048, 2048),
+            )
+        ]
+        # Both jobs arrive together: job 1 is queued the moment job 0
+        # dispatches, so the scripted suspend fires deterministically
+        # (no dependence on wall-clocked segment durations).
+        policy = _ScriptedSuspend(resume_workers=4)
+        result = cluster.run(jobs, policy)
+        rec = result.records[0]
+        assert policy.suspended and policy.resumed
+        assert policy.overheads, "observe_overhead hook never called"
+        save_s, restore_s = policy.overheads[0]
+        assert 0 < save_s < 1 and 0 < restore_s < 1
+        assert rec.overhead_s == pytest.approx(save_s + restore_s)
+
+    def test_cost_model_hook_on_predict_elastic(self):
+        """predict-elastic wires observe_overhead to its cost model."""
+        from repro.cluster.policies import ElasticDeadline
+
+        policy = ElasticDeadline(seed=0)
+        oracle = AnalyticOracle(noise=0.0)
+        policy.prepare(ElasticCluster(8, oracle), [])
+        before = policy.cost_model.n_observed
+        policy.observe_overhead(0.5, 0.25)
+        assert policy.cost_model.n_observed == before + 1
 
 
 class TestPredictElasticPolicy:
@@ -604,3 +829,34 @@ class TestEngineOracleWaveStepping:
                              workers=2)
         )
         assert all(r.completed for r in result.records)
+
+    def test_engine_sharded_oracle_per_phase_traces(self):
+        """The engine-sharded oracle schedules the real shard_map mesh
+        mode (W=1 mesh in-process; multi-device covered by the sharded
+        subprocess test) and completed jobs carry per-phase wall times
+        measured on that path."""
+        oracle = EngineOracle(warmup=0, size_quantum=1024, traced=True,
+                              sharded=True)
+        assert oracle.platform == "engine-sharded"
+        jobs = generate_workload(
+            2, seed=1, arrival="uniform", mean_interarrival=0.05,
+            size_range=(2048, 4096),
+        )
+        result = ElasticCluster(2, oracle).run(
+            jobs, get_policy("fifo-static", mappers=4, reducers=4,
+                             workers=1)
+        )
+        assert all(r.completed for r in result.records)
+        for rec in result.records:
+            times = rec.trace.phase_times()
+            assert set(times) >= {"map", "shuffle", "reduce"}
+            assert all(v > 0 for v in times.values())
+            assert rec.trace.check_conservation() == []
+
+    def test_engine_sharded_oracle_rejects_oversized_grant(self):
+        oracle = EngineOracle(warmup=0, sharded=True)
+        import jax
+
+        too_many = len(jax.devices()) + 1
+        with pytest.raises(ValueError, match="devices"):
+            oracle.time("wordcount", "jnp", 2048, 4, 2, too_many)

@@ -1,0 +1,280 @@
+"""ExecutionPlan mode equivalence: the one property suite.
+
+Every execution mode — fused, traced, resumable (preempted at *every*
+wave boundary), and the sharded mesh path — derives from the same
+lowered plan, so bit-exact agreement is a property of construction.
+This suite checks it once, for every reduce × shuffle backend
+combination, replacing the per-path equivalence copies that used to
+live in ``test_backends.py`` / ``test_elastic.py``.
+"""
+
+from collections import Counter
+
+import jax
+import numpy as np
+import pytest
+
+from repro.elastic import run_resumable
+from repro.mapreduce import (
+    ExecutionPlan,
+    JobConfig,
+    REDUCE_BACKENDS,
+    build_job,
+    build_job_sharded,
+    collect_results,
+    wordcount,
+    wordcount_corpus,
+)
+from repro.telemetry import PhaseRecorder
+
+ALL_REDUCE = sorted(REDUCE_BACKENDS)
+ALL_SHUFFLE = ("lexsort", "all_to_all")
+
+CORPUS = wordcount_corpus(360, vocab_size=53, seed=9)
+APP = wordcount(53)
+WANT = dict(Counter(np.asarray(CORPUS).tolist()))
+
+
+def _cfg(**kw):
+    kw.setdefault("num_mappers", 5)
+    kw.setdefault("num_reducers", 3)
+    kw.setdefault("num_workers", 2)
+    kw.setdefault("capacity_factor", 8.0)
+    return JobConfig(**kw)
+
+
+def _assert_same(a, b, ctx=None):
+    ok_a, ov_a, d_a = a
+    ok_b, ov_b, d_b = b
+    assert np.array_equal(np.asarray(ok_a), np.asarray(ok_b)), ctx
+    assert np.array_equal(np.asarray(ov_a), np.asarray(ov_b)), ctx
+    assert int(d_a) == int(d_b), ctx
+
+
+@pytest.mark.parametrize("reduce_backend", ALL_REDUCE)
+@pytest.mark.parametrize("shuffle_backend", ALL_SHUFFLE)
+class TestModeEquivalence:
+    """fused == traced == resumable, bit-exact, per backend combination."""
+
+    def test_fused_traced_resumable_bit_exact(self, reduce_backend,
+                                              shuffle_backend):
+        cfg = _cfg(reduce_backend=reduce_backend,
+                   shuffle_backend=shuffle_backend)
+        plan = ExecutionPlan(APP, cfg, len(CORPUS))
+        fused = plan.fused()(CORPUS)
+        recorder = PhaseRecorder()
+        traced = plan.traced(recorder)(CORPUS)
+        job = plan.resumable()
+        state = run_resumable(job, CORPUS)
+        resumable = job.result(state)
+        _assert_same(fused, traced, "traced")
+        _assert_same(fused, resumable, "resumable")
+        assert collect_results(fused[0], fused[1]) == WANT
+        assert recorder.last.check_conservation() == []
+
+    def test_preempt_every_boundary_bit_exact(self, reduce_backend,
+                                              shuffle_backend):
+        """Preempt after k steps then resume, for every k: identical
+        outputs, counts, and merged-trace conservation laws — and all of
+        it equal to the fused mode of the *same* plan."""
+        cfg = _cfg(reduce_backend=reduce_backend,
+                   shuffle_backend=shuffle_backend)
+        plan = ExecutionPlan(APP, cfg, len(CORPUS))
+        ref = plan.fused()(CORPUS)
+        recorder = PhaseRecorder()
+        job = plan.resumable(recorder=recorder)
+        ref_state = run_resumable(job, CORPUS)
+        _assert_same(ref, job.result(ref_state), "uninterrupted")
+        ref_trace = recorder.last
+        total_steps = ref_state.cursor.waves_executed
+        assert total_steps == 3 + 1 + 2  # map waves + shuffle + red waves
+        for k in range(1, total_steps):
+            recorder.clear()
+            part = run_resumable(job, CORPUS, preempt_after=k)
+            assert part.cursor.waves_executed == k
+            assert not part.cursor.done
+            full = run_resumable(job, CORPUS, state=part)
+            _assert_same(ref, job.result(full), k)
+            merged = _merge_segments(recorder.traces)
+            assert merged.check_conservation() == [], k
+            # Bit-exact counts: the interrupted run measured the same
+            # phase totals as the uninterrupted one.
+            for phase, name in (
+                ("map", "pairs_emitted"),
+                ("shuffle", "pairs_out"),
+                ("shuffle", "pairs_dropped"),
+                ("reduce", "segments_out"),
+            ):
+                assert merged.counter(phase, name) == ref_trace.counter(
+                    phase, name
+                ), (k, phase, name)
+
+
+def _merge_segments(traces):
+    """One trace holding all segment phases (conservation spans
+    segments)."""
+    from repro.telemetry import JobTrace
+
+    merged = JobTrace(app=traces[0].app, config=dict(traces[0].config))
+    for t in traces:
+        merged.phases.extend(t.phases)
+    merged.finish(sum(t.total_s for t in traces))
+    return merged
+
+
+class TestShardedEquivalence:
+    """The real mesh mode against the single-controller modes (W=1 mesh
+    in-process; the 4-device run lives in test_mapreduce_sharded)."""
+
+    @pytest.fixture(scope="class")
+    def mesh1(self):
+        return jax.make_mesh((1,), ("workers",))
+
+    @pytest.mark.parametrize("reduce_backend", ALL_REDUCE)
+    def test_sharded_matches_fused_and_lexsort(self, mesh1, reduce_backend):
+        corpus = wordcount_corpus(1200, vocab_size=97, seed=4)
+        app = wordcount(97)
+        want = dict(Counter(np.asarray(corpus).tolist()))
+        lex_cfg = _cfg(num_mappers=4, num_workers=1,
+                       reduce_backend=reduce_backend)
+        lex = ExecutionPlan(app, lex_cfg, len(corpus)).fused()(corpus)
+        cfg = _cfg(num_mappers=4, num_workers=1,
+                   reduce_backend=reduce_backend,
+                   shuffle_backend="all_to_all")
+        plan = ExecutionPlan(app, cfg, len(corpus))
+        emulated = plan.fused()(corpus)
+        sharded = plan.sharded(mesh1)(corpus)
+        _assert_same(emulated, sharded, reduce_backend)
+        assert sharded[0].shape[0] == cfg.num_reducers
+        assert collect_results(sharded[0], sharded[1]) == want
+        # The two shuffle families agree on results + overflow counts.
+        assert collect_results(lex[0], lex[1]) == want
+        assert int(lex[2]) == int(sharded[2])
+
+    def test_sharded_dropped_matches_lexsort_under_skew(self, mesh1):
+        corpus = np.zeros(600, dtype=np.int32)  # one key: max skew
+        app = wordcount(16)
+        lex_cfg = JobConfig(num_mappers=2, num_reducers=4, num_workers=1,
+                            capacity_factor=1.0)
+        lex = ExecutionPlan(app, lex_cfg, len(corpus)).fused()(corpus)
+        cfg = JobConfig(num_mappers=2, num_reducers=4, num_workers=1,
+                        capacity_factor=1.0, shuffle_backend="all_to_all")
+        sharded = ExecutionPlan(app, cfg, len(corpus)).sharded(mesh1)(
+            corpus
+        )
+        assert int(lex[2]) > 0  # skew actually overflows
+        _assert_same(lex, sharded)
+
+    def test_sharded_traced_per_phase_walls(self, mesh1):
+        """The new capability: per-phase wall times + measured counters
+        on the sharded path (three fenced mesh programs)."""
+        cfg = _cfg(num_workers=1, shuffle_backend="all_to_all")
+        plan = ExecutionPlan(APP, cfg, len(CORPUS))
+        fused = plan.sharded(mesh1)(CORPUS)
+        recorder = PhaseRecorder()
+        traced = plan.sharded(mesh1, recorder=recorder)(CORPUS)
+        _assert_same(fused, traced, "sharded traced")
+        trace = recorder.last
+        assert trace.phase_names() == ["map", "shuffle", "reduce"]
+        assert all(p.wall_s > 0 for p in trace.phases)
+        assert trace.check_conservation() == []
+        assert trace.counter("map", "pairs_emitted") == len(CORPUS)
+        assert trace.counter("shuffle", "dropped_send") == 0
+
+    def test_sharded_traced_counters_stats(self, mesh1):
+        """recorder + counters=True compose: per-worker overflow stats
+        ride alongside the per-phase trace."""
+        corpus = np.zeros(600, dtype=np.int32)
+        app = wordcount(16)
+        cfg = JobConfig(num_mappers=2, num_reducers=4, num_workers=1,
+                        capacity_factor=1.0, shuffle_backend="all_to_all")
+        plan = ExecutionPlan(app, cfg, len(corpus))
+        recorder = PhaseRecorder()
+        ok, ov, dropped, stats = plan.sharded(
+            mesh1, counters=True, recorder=recorder
+        )(corpus)
+        assert int(dropped) > 0
+        assert stats["dropped_per_worker"].shape == (1, 2)
+        assert stats["dropped_send"] + stats["dropped_recv"] == int(dropped)
+        trace = recorder.last
+        assert trace.counter("shuffle", "pairs_dropped") == int(dropped)
+        assert trace.check_conservation() == []
+
+
+class TestBuildJobWrappers:
+    """build_job / build_job_sharded are thin mode selectors."""
+
+    def test_build_job_routes_collective_with_recorder(self):
+        mesh = jax.make_mesh((1,), ("workers",))
+        cfg = _cfg(num_workers=1, shuffle_backend="all_to_all")
+        recorder = PhaseRecorder()
+        job = build_job(APP, cfg, len(CORPUS), mesh=mesh,
+                        recorder=recorder)
+        ok, ov, dropped = job(CORPUS)
+        assert collect_results(ok, ov) == WANT
+        assert recorder.last.phase_names() == ["map", "shuffle", "reduce"]
+
+    def test_build_job_collective_still_requires_mesh(self):
+        cfg = JobConfig(num_mappers=2, num_reducers=2,
+                        shuffle_backend="all_to_all")
+        with pytest.raises(ValueError, match="mesh"):
+            build_job(wordcount(16), cfg, 100)
+
+    def test_build_job_sharded_counters_contract(self):
+        mesh = jax.make_mesh((1,), ("workers",))
+        cfg = JobConfig(num_mappers=2, num_reducers=4, num_workers=1,
+                        capacity_factor=1.0, shuffle_backend="all_to_all")
+        corpus = np.zeros(600, dtype=np.int32)
+        ok, ov, dropped, stats = build_job_sharded(
+            wordcount(16), cfg, len(corpus), mesh, counters=True
+        )(corpus)
+        assert stats["dropped_send"] + stats["dropped_recv"] == int(dropped)
+
+    def test_plan_validates_reduce_op_at_lowering(self):
+        """pallas is sum-only; a max-op app must fail fast at plan
+        construction, not mis-reduce."""
+        from repro.mapreduce import MapReduceApp
+
+        app = MapReduceApp(
+            name="maxapp", key_space=8,
+            map_fn=lambda t, v: (t, t, v), reduce_op="max",
+        )
+        cfg = JobConfig(num_mappers=2, num_reducers=2,
+                        reduce_backend="pallas")
+        with pytest.raises(ValueError, match="supports"):
+            ExecutionPlan(app, cfg, 64)
+
+
+class TestCanonicalCapacity:
+    """The shuffle capacity is a property of the plan, not the grant."""
+
+    def test_lexsort_capacity_grant_free(self):
+        for W in (1, 2, 3, 5):
+            cfg = _cfg(num_mappers=7, num_reducers=4, num_workers=W)
+            plan = ExecutionPlan(APP, cfg, len(CORPUS))
+            assert plan.partition_cap() == plan.lex_capacity
+            ok, ov, dropped = plan.fused()(CORPUS)
+            assert ok.shape == (4, plan.lex_capacity)
+            assert collect_results(ok, ov) == WANT
+
+    def test_grant_changes_never_change_lexsort_output(self):
+        """W is a pure scheduling knob: any grant produces the identical
+        (R, cap) output block — the invariant that makes fused == the
+        wave-by-wave modes under arbitrary regrant histories."""
+        ref = None
+        for W in (1, 2, 3, 4, 7):
+            cfg = _cfg(num_mappers=7, num_reducers=4, num_workers=W)
+            out = ExecutionPlan(APP, cfg, len(CORPUS)).fused()(CORPUS)
+            if ref is None:
+                ref = out
+            else:
+                _assert_same(ref, out, W)
+
+    def test_meta_shape_facts(self):
+        cfg = _cfg(num_mappers=6, num_reducers=4, num_workers=2)
+        plan = ExecutionPlan(APP, cfg, len(CORPUS))
+        m = plan.meta()
+        assert m["mappers"] == 6 and m["reducers"] == 4
+        assert m["map_waves"] == 3 and m["reduce_waves"] == 2
+        assert m["n_pairs"] == plan.M * plan.P
+        assert m["partition_capacity"] == plan.lex_capacity

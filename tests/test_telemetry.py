@@ -91,10 +91,13 @@ class TestTracedExecution:
         assert trace.phase_names() == ["map", "shuffle", "reduce", "collect"]
         assert trace.counter("collect", "unique_keys") > 0
 
-    def test_recorder_rejected_on_collective_shuffle(self):
+    def test_recorder_on_collective_shuffle_needs_mesh(self):
+        """Per-phase telemetry now works on the sharded path (separate
+        mesh programs — see tests/test_plan.py), but the collective
+        shuffle still demands a mesh to run on."""
         cfg = JobConfig(num_mappers=2, num_reducers=2,
                         shuffle_backend="all_to_all")
-        with pytest.raises(ValueError, match="single-controller"):
+        with pytest.raises(ValueError, match="mesh"):
             build_job(wordcount(16), cfg, 100, recorder=PhaseRecorder())
 
     def test_phase_times_sum_to_total(self):
