@@ -4,7 +4,8 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast test-elastic test-plan bench-quick bench-backends \
-	bench-cluster bench-phases bench-elastic bench-check lint
+	bench-cluster bench-phases bench-elastic bench-pipeline bench-check \
+	lint
 
 # Tier-1 verify (ROADMAP.md).
 test:
@@ -59,3 +60,7 @@ bench-phases:
 # Just the elastic regrant-scheduling comparison.
 bench-elastic:
 	$(PYTHON) -m benchmarks.run --quick --sections elastic
+
+# Just the pipelined-vs-fused speedup + overlap-depth model axis.
+bench-pipeline:
+	$(PYTHON) -m benchmarks.run --quick --sections pipeline

@@ -108,6 +108,11 @@ def main(tokens: int, repeats: int) -> tuple[list[str], dict]:
             "makespan_sjf_s": ms_sjf,
             "no_regression": ms_res <= ms_sjf * 1.001,
         }
+    # Depth-aware policy: the histogram of chosen overlap depths is the
+    # evidence that depth is picked per job, not pinned globally.
+    pipeline_depths = None
+    if "predict-pipeline" in metrics:
+        pipeline_depths = metrics["predict-pipeline"]["depth_histogram"]
     refined = [
         (n, m) for n, m in predictive.items()
         if m["pred_mae_pct_first_half"] is not None
@@ -124,6 +129,7 @@ def main(tokens: int, repeats: int) -> tuple[list[str], dict]:
             predictive[best_name]["makespan_s"] < baseline
         ),
         "resource_vs_sjf": resource_vs_sjf,
+        "pipeline_depth_histogram": pipeline_depths,
         "online_refinement": {
             n: {
                 "mae_pct_first_half": m["pred_mae_pct_first_half"],
@@ -136,6 +142,11 @@ def main(tokens: int, repeats: int) -> tuple[list[str], dict]:
             for n, m in refined
         },
     }
+    if pipeline_depths is not None:
+        hist = "+".join(
+            f"d{d}:{n}" for d, n in sorted(pipeline_depths.items())
+        )
+        rows.append(f"cluster,_depths,predict-pipeline,{hist}")
     rows.append(
         f"cluster,_summary,best={best_name},"
         f"beats_baseline={summary['predictive_beats_baseline_makespan']},"

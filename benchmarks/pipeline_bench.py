@@ -1,0 +1,208 @@
+"""Benchmark section ``pipeline``: the pipelined execution mode and the
+overlap-depth model axis (beyond-paper: software pipelining as a
+configuration parameter).
+
+Part A — engine wall-clock: fused vs ``plan.pipelined(depth=D)`` on
+shuffle-heavy WordCount configs, asserting bit-exact outputs and reporting
+the measured speedup per depth.  The headline config (all_to_all shuffle,
+high wave count) is where the compute/commit pipeline pays; a contrast
+config where it does *not* pay is benched too — the point of the axis is
+that depth must be chosen per job, not pinned.
+
+Part B — model axis: overlap depth joins the paper's methodology as a
+categorical axis.  ``tune_categorical`` fits one polynomial model per
+depth over (M, R, W) samples of the analytic oracle and argmins jointly;
+heldout noiseless MAE per depth shows the depth categories model as well
+as the paper's M/R axes do.
+
+CSV rows:
+  pipeline,<config>,<mode>,<depth>,<best_s>,<speedup>
+  pipeline,<config>,bit_exact,ok,,
+  pipeline,depth_model,<cat>,mae_pct,<val>,
+  pipeline,_summary,speedup=<x>,target=1.15,meets_target=<bool>
+
+The JSON summary's top-level ``speedup`` is a --check guarded metric
+(lower than committed by >25% fails); per-config values live under
+``speedup_x`` keys so single-config noise never gates.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.cluster import AnalyticOracle
+from repro.core.tuner import tune_categorical
+from repro.mapreduce import (
+    ExecutionPlan,
+    JobConfig,
+    wordcount,
+    wordcount_corpus,
+)
+
+# Part A pins the corpus size: the fused-vs-pipelined comparison is
+# wave-count driven (the pipeline amortizes per-wave loop overhead), so the
+# committed artifact and the CI smoke (--tokens 8192) must measure the
+# *same* workload or the --check gate compares different experiments.
+TOKENS_A = 1 << 13
+VOCAB = 211
+DEPTHS = (2, 4, 8)
+TARGET_SPEEDUP = 1.15
+
+#: (name, JobConfig kwargs).  First entry is the headline: all_to_all with
+#: 128 single-worker map waves — maximal wave-loop overhead for fused, so
+#: maximal headroom for the pipeline, which retires waves ``depth`` at a
+#: time.  The contrast entries (paper-range shapes, wide waves) show the
+#: axis is non-trivial: near-1x or below, so depth must be *chosen*.
+CONFIGS = (
+    ("a2a_128x64_w1", dict(num_mappers=128, num_reducers=64, num_workers=1,
+                           shuffle_backend="all_to_all",
+                           capacity_factor=1.0)),
+    ("a2a_32x32_w2", dict(num_mappers=32, num_reducers=32, num_workers=2,
+                          shuffle_backend="all_to_all",
+                          capacity_factor=8.0)),
+    ("lex_40x40_w4", dict(num_mappers=40, num_reducers=40, num_workers=4,
+                          shuffle_backend="lexsort")),
+)
+HEADLINE = CONFIGS[0][0]
+
+
+def _assert_bit_exact(ref, got, name: str, depth: int) -> None:
+    for i, (a, b) in enumerate(zip(ref, got)):
+        if not np.array_equal(np.asarray(a), np.asarray(b)):
+            raise AssertionError(
+                f"pipelined depth={depth} diverges from fused on "
+                f"{name} (output {i})"
+            )
+
+
+def bench_engine(tokens: int, repeats: int) -> tuple[list[str], dict]:
+    corpus = wordcount_corpus(tokens, vocab_size=VOCAB, seed=3)
+    app = wordcount(VOCAB)
+    reps = max(10, 2 * repeats)
+    rows = []
+    per_config = {}
+    for name, kwargs in CONFIGS:
+        plan = ExecutionPlan(app, JobConfig(**kwargs), tokens)
+        modes = {1: plan.fused()}
+        ref = modes[1](corpus)
+        for d in DEPTHS:
+            modes[d] = plan.pipelined(depth=d)
+            _assert_bit_exact(ref, modes[d](corpus), name, d)
+        # Interleaved min-of-N: round-robin the modes inside each rep so a
+        # transient host stall penalizes all of them, not whichever mode
+        # happened to be running (single-core container, noisy neighbors).
+        for fn in modes.values():
+            jax.block_until_ready(fn(corpus))
+        best = {d: float("inf") for d in modes}
+        for _ in range(reps):
+            for d, fn in modes.items():
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(corpus))
+                best[d] = min(best[d], time.perf_counter() - t0)
+        t_fused = best[1]
+        rows.append(f"pipeline,{name},fused,1,{t_fused:.5f},1.000")
+        entry = {"fused_s": t_fused, "pipelined_s": {}, "speedup_x": {}}
+        for d in DEPTHS:
+            sp = t_fused / best[d]
+            entry["pipelined_s"][str(d)] = best[d]
+            entry["speedup_x"][str(d)] = sp
+            rows.append(
+                f"pipeline,{name},pipelined,{d},{best[d]:.5f},{sp:.3f}"
+            )
+        rows.append(f"pipeline,{name},bit_exact,ok,,")
+        per_config[name] = entry
+    return rows, per_config
+
+
+def bench_depth_model(seed: int = 7) -> tuple[list[str], dict]:
+    """Fit one model per overlap depth on analytic-oracle profiles and
+    measure heldout noiseless MAE — the depth analogue of Table 1."""
+    oracle = AnalyticOracle(noise=0.02, seed=seed)
+    size = 1 << 16
+
+    def run_fn(depth):
+        def f(row, _c=[0]):  # job_id varies so noise draws are iid
+            _c[0] += 1
+            return oracle.time(
+                "wordcount", "jnp", size,
+                int(round(row[0])), int(round(row[1])),
+                int(round(row[2])), job_id=_c[0], depth=depth,
+            )
+        return f
+
+    rng = np.random.default_rng(seed)
+    m = rng.integers(5, 41, size=160)
+    r = rng.integers(5, 41, size=160)
+    w = rng.choice([2, 4, 8], size=160)
+    space = np.stack([m, r, w], axis=1).astype(np.float64)
+    depths = (1,) + DEPTHS
+    result = tune_categorical(
+        {f"d{d}": run_fn(d) for d in depths}, space,
+        n_samples=48, seed=seed,
+    )
+
+    heldout = np.stack(
+        [rng.integers(5, 41, size=16), rng.integers(5, 41, size=16),
+         rng.choice([2, 4, 8], size=16)], axis=1,
+    ).astype(np.float64)
+    rows = []
+    mae = {}
+    for d in depths:
+        model = result.per_category[f"d{d}"].model
+        errs = []
+        for row in heldout:
+            truth = oracle.time(
+                "wordcount", "jnp", size, int(row[0]), int(row[1]),
+                int(row[2]), depth=d, _noiseless=True,
+            )
+            pred = float(np.asarray(model.predict(row)).ravel()[0])
+            errs.append(abs(pred - truth) / max(truth, 1e-12) * 100)
+        mae[f"d{d}"] = float(np.mean(errs))
+        rows.append(f"pipeline,depth_model,d{d},mae_pct,{mae[f'd{d}']:.2f},")
+    rows.append(
+        f"pipeline,depth_model,best_category,{result.best_category},,"
+    )
+    return rows, {
+        "mae_pct": mae,
+        "best_category": result.best_category,
+        # "comparable to the M/R axes": the depth>1 models must predict
+        # about as well as the depth-1 (paper-axes-only) model does.
+        "mae_comparable": all(
+            mae[f"d{d}"] <= max(2.0 * mae["d1"], mae["d1"] + 5.0)
+            for d in DEPTHS
+        ),
+    }
+
+
+def main(tokens: int, repeats: int) -> tuple[list[str], dict]:
+    del tokens  # Part A is pinned (see TOKENS_A); Part B is analytic
+    rows = ["pipeline,config,mode,depth,best_s,speedup"]
+    eng_rows, per_config = bench_engine(TOKENS_A, repeats)
+    rows += eng_rows
+    model_rows, depth_model = bench_depth_model()
+    rows += model_rows
+
+    headline = max(per_config[HEADLINE]["speedup_x"].values())
+    summary = {
+        "tokens": TOKENS_A,
+        "headline_config": HEADLINE,
+        "speedup": headline,                  # --check guarded metric
+        "target": TARGET_SPEEDUP,
+        "meets_target": headline >= TARGET_SPEEDUP,
+        "bit_exact": True,                    # bench_engine raises otherwise
+        "per_config": per_config,
+        "depth_model": depth_model,
+    }
+    rows.append(
+        f"pipeline,_summary,speedup={headline:.3f},"
+        f"target={TARGET_SPEEDUP},meets_target={summary['meets_target']}"
+    )
+    return rows, summary
+
+
+if __name__ == "__main__":
+    out_rows, out_summary = main(TOKENS_A, 3)
+    print("\n".join(out_rows))

@@ -11,6 +11,7 @@ Sections (CSV rows on stdout):
   phases  — beyond-paper: per-phase telemetry, composed-vs-monolithic models
   cluster — beyond-paper: predictive multi-job scheduling vs FIFO baseline
   elastic — beyond-paper: preemptive regrant scheduling vs admission-only
+  pipeline— beyond-paper: pipelined-vs-fused engine speedup + depth-axis MAE
   roofline— §Roofline table from the dry-run artifacts
   kernels — per-kernel microbench (us/call, interpret mode)
 
@@ -40,7 +41,7 @@ import time
 
 ALL_SECTIONS = (
     "table1", "fig3", "fig4", "tuner", "backends", "phases", "cluster",
-    "elastic", "roofline", "kernels",
+    "elastic", "pipeline", "roofline", "kernels",
 )
 
 
@@ -140,6 +141,9 @@ def run_section(sec: str, tokens: int, repeats: int):
     if sec == "elastic":
         from benchmarks import elastic_bench
         return elastic_bench.main(tokens, repeats)
+    if sec == "pipeline":
+        from benchmarks import pipeline_bench
+        return pipeline_bench.main(tokens, repeats)
     if sec == "roofline":
         from benchmarks import roofline
         return roofline.main(), None
@@ -157,7 +161,7 @@ def _walk_metrics(summary, path=""):
     if isinstance(summary, dict):
         for k, v in summary.items():
             p = f"{path}.{k}" if path else str(k)
-            if k in ("makespan_s", "slo_attainment") and isinstance(
+            if k in ("makespan_s", "slo_attainment", "speedup") and isinstance(
                 v, (int, float)
             ):
                 yield p, k, float(v)
@@ -180,14 +184,16 @@ def load_committed(outdir: str, sections) -> dict:
 
 
 def check_regressions(committed: dict, fresh: dict) -> list[str]:
-    """Compare guarded metrics (makespan_s / slo_attainment) of each
-    fresh section summary against the committed baseline.
+    """Compare guarded metrics (makespan_s / slo_attainment / speedup) of
+    each fresh section summary against the committed baseline.
 
     A regression is a makespan more than ``CHECK_TOLERANCE`` above the
-    committed value, or an SLO attainment more than ``CHECK_TOLERANCE``
-    below it.  Only metric paths present in both summaries compare; the
-    guarded sections (cluster, elastic) are deterministic analytic
-    simulations, so drift means a real behavior change, not noise.
+    committed value, or an SLO attainment (or pipelined-mode speedup)
+    more than ``CHECK_TOLERANCE`` below it.  Only metric paths present in
+    both summaries compare; the guarded sections (cluster, elastic) are
+    deterministic analytic simulations, so drift means a real behavior
+    change, not noise — the pipeline section's speedup is measured
+    wall-clock, which is why its tolerance band is the same generous 25%.
     """
     problems: list[str] = []
     for sec, old in committed.items():
@@ -211,7 +217,7 @@ def check_regressions(committed: dict, fresh: dict) -> list[str]:
                     f"{sec}: {p} regressed {old_v:.3f} -> {new_v:.3f} "
                     f"(+{(new_v / max(old_v, 1e-12) - 1) * 100:.0f}%)"
                 )
-            elif kind == "slo_attainment" and (
+            elif kind in ("slo_attainment", "speedup") and (
                 new_v < old_v * (1 - CHECK_TOLERANCE)
             ):
                 problems.append(
@@ -303,6 +309,13 @@ def main() -> None:
             f"_check,sections={'+'.join(checked) or 'none'},"
             f"regressions={len(problems)},tolerance={CHECK_TOLERANCE}"
         )
+        # A section with no committed BENCH_<sec>.json has nothing to gate
+        # against; warn instead of silently passing so a forgotten commit
+        # of the baseline artifact is visible in the check output.
+        rows += [
+            f"_check_warn,missing_baseline,{sec}"
+            for sec in sections if sec not in committed
+        ]
         rows += [f"_check_fail,{p}" for p in problems]
     print("\n".join(rows))
     if any(r.startswith("_error") for r in rows) or problems:

@@ -5,6 +5,12 @@ smarter; this benchmark closes the loop: sample a subset of the (M, R)
 space, fit the model, argmin the prediction over the whole space, and
 compare against exhaustive search.  Reported: profiling-cost savings vs
 regret (% time lost relative to the true optimum).
+
+Standalone, the overlap-depth axis joins the tuned space as categories
+(one model per depth, joint argmin — the same treatment backends get):
+
+    PYTHONPATH=src python -m benchmarks.tuner_vs_exhaustive \
+        --overlap-depth 1,2,4
 """
 
 from __future__ import annotations
@@ -12,23 +18,39 @@ from __future__ import annotations
 
 from benchmarks.common import make_app, JobRunner, DEFAULT_TOKENS
 from repro.core import grid, tune, validate
+from repro.core.tuner import tune_categorical
 
 
-def main(tokens: int = DEFAULT_TOKENS) -> list[str]:
+def main(tokens: int = DEFAULT_TOKENS,
+         depth_grid: tuple[int, ...] = (1,)) -> list[str]:
     out = [
         "tuner,app,space_size,profiles_used,chosen_m,chosen_r,"
-        "chosen_time_s,optimum_time_s,regret_pct"
+        "chosen_depth,chosen_time_s,optimum_time_s,regret_pct"
     ]
     space = grid([(5, 40, 5), (5, 40, 5)])  # 64 configs
     for app_name in ("wordcount", "eximparse"):
         app, corpus = make_app(app_name, tokens)
-        runner = JobRunner(app, corpus)
-        result = tune(runner, space, n_samples=24, repeats=2, seed=0)
+        if tuple(depth_grid) == (1,):
+            runner = JobRunner(app, corpus)
+            result = tune(runner, space, n_samples=24, repeats=2, seed=0)
+            depth = 1
+        else:
+            runners = {
+                f"d{d}": JobRunner(app, corpus, overlap_depth=d)
+                for d in depth_grid
+            }
+            cat = tune_categorical(
+                runners, space, n_samples=24, repeats=2, seed=0
+            )
+            result = cat.per_category[cat.best_category]
+            runner = runners[cat.best_category]
+            depth = int(cat.best_category.lstrip("d"))
         result = validate(result, runner, space, repeats=2)
         out.append(
             f"tuner,{app_name},{len(space)},"
             f"{len(result.sampled_configs)},"
             f"{int(result.best_config[0])},{int(result.best_config[1])},"
+            f"{depth},"
             f"{result.measured_best_time:.5f},"
             f"{result.true_optimum_time:.5f},"
             f"{result.regret_pct:.2f}"
@@ -37,4 +59,15 @@ def main(tokens: int = DEFAULT_TOKENS) -> list[str]:
 
 
 if __name__ == "__main__":
-    print("\n".join(main()))
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tokens", type=int, default=DEFAULT_TOKENS)
+    ap.add_argument("--overlap-depth", default="1", metavar="D1,D2,...",
+                    help="comma list of overlap depths to tune across "
+                         "(each is one categorical model; joint argmin)")
+    args = ap.parse_args()
+    depths = tuple(
+        int(d) for d in args.overlap_depth.split(",") if d.strip()
+    )
+    print("\n".join(main(args.tokens, depths)))

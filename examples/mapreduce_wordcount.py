@@ -1,12 +1,15 @@
 """Run the TPU-native MapReduce engine end-to-end: WordCount over a Zipf
 corpus, through one ExecutionPlan whose *mode* is picked by the flags —
 fused single-controller by default, the sharded (all_to_all) mesh mode
-with more than one worker, and the phase-fenced traced mode (per-phase
-wall times, on either path) with --phase-times.
+with more than one worker, the software-pipelined wave schedule with
+--depth 2+, and the phase-fenced traced mode (per-phase wall times, on
+any path) with --phase-times.
 
     PYTHONPATH=src python examples/mapreduce_wordcount.py
     # per-phase wall times (works on the sharded path too):
     PYTHONPATH=src python examples/mapreduce_wordcount.py --phase-times
+    # software-pipelined wave schedule (bit-exact vs fused):
+    PYTHONPATH=src python examples/mapreduce_wordcount.py --depth 4
     # multi-worker shuffle:
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
         PYTHONPATH=src python examples/mapreduce_wordcount.py --workers 4
@@ -32,15 +35,21 @@ def main() -> None:
     ap.add_argument("--mappers", type=int, default=20)
     ap.add_argument("--reducers", type=int, default=5)
     ap.add_argument("--workers", type=int, default=1)
+    ap.add_argument("--depth", type=int, default=1,
+                    help="overlap depth: group this many waves per "
+                         "software-pipeline step (1 = serial fused)")
     ap.add_argument("--phase-times", action="store_true",
                     help="run the traced mode: fence + wall-clock each "
                          "phase (three fenced mesh programs when sharded)")
     args = ap.parse_args()
+    if args.depth > 1 and args.workers > 1:
+        ap.error("--depth > 1 is a single-controller schedule; "
+                 "it does not compose with --workers > 1")
     corpus = wordcount_corpus(args.tokens, vocab_size=4096, seed=0)
     app = wordcount(4096)
     cfg = JobConfig(
         num_mappers=args.mappers, num_reducers=args.reducers,
-        num_workers=args.workers,
+        num_workers=args.workers, overlap_depth=args.depth,
     )
     recorder = None
     if args.phase_times:
@@ -56,8 +65,13 @@ def main() -> None:
         job = plan.sharded(mesh, recorder=recorder)
         path = f"sharded all_to_all over {args.workers} workers"
     elif recorder is not None:
-        job = plan.traced(recorder)
+        job = plan.traced(recorder)  # picks up cfg.overlap_depth
         path = "single-controller (traced)"
+        if args.depth > 1:
+            path += f", pipelined depth={args.depth}"
+    elif args.depth > 1:
+        job = plan.pipelined()
+        path = f"single-controller (pipelined, depth={args.depth})"
     else:
         job = plan.fused()
         path = "single-controller (fused)"

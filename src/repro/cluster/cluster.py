@@ -33,9 +33,12 @@ class Plan:
     reducers: int
     workers: int                      # worker slots granted from the pool
     predicted_time: float | None = None  # policy's prediction, if it made one
+    depth: int = 1                    # pipelined overlap depth (1 = serial)
 
     def __post_init__(self):
         if self.mappers < 1 or self.reducers < 1 or self.workers < 1:
+            raise ValueError(f"bad plan {self}")
+        if self.depth < 1:
             raise ValueError(f"bad plan {self}")
 
 
@@ -173,6 +176,14 @@ class TraceResult:
             "pred_mae_pct": mean(errs),
             "pred_mae_pct_first_half": mean(errs[:half]),
             "pred_mae_pct_second_half": mean(errs[half:]),
+            # Which overlap depths the policy actually dispatched (all 1s
+            # for depth-unaware policies).
+            "depth_histogram": {
+                str(r.plan.depth): sum(
+                    1 for q in done if q.plan.depth == r.plan.depth
+                )
+                for r in done
+            },
             # Elastic accounting (0 / 0.0 on inelastic runs).
             "n_regrants": sum(r.n_regrants for r in self.records),
             "n_preempted_jobs": sum(
@@ -258,10 +269,13 @@ class Cluster:
                 rec = records[job.job_id]
                 rec.plan = plan
                 rec.start = now
+                # depth=1 stays out of the call so depth-unaware oracle
+                # stand-ins (tests, stubs) keep their narrow signature.
+                extra = {"depth": plan.depth} if plan.depth != 1 else {}
                 rec.true_time = self.oracle.time(
                     job.app, plan.backend, job.size,
                     plan.mappers, plan.reducers, plan.workers,
-                    job_id=job.job_id,
+                    job_id=job.job_id, **extra,
                 )
                 take_trace = getattr(self.oracle, "take_trace", None)
                 if take_trace is not None:

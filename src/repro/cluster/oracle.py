@@ -35,13 +35,20 @@ _BACKEND_IDS = {"jnp": 1, "pallas": 2, "xla": 3}
 _PAIRS_PER_TOKEN = {"wordcount": 1.0, "eximparse": 1.0 / 3.0}
 
 
-def _analytic_trace(app, backend, size, M, R, W, phase_s, noise_factor):
+def _analytic_trace(app, backend, size, M, R, W, phase_s, noise_factor,
+                    depth: int = 1, overlap_s: float = 0.0):
     """Build a JobTrace-shaped record from closed-form phase components.
 
     The analytic oracle has no real arrays to count, so the counters are
     the closed-form expectations (shuffle bytes = pairs x PAIR_BYTES, no
     overflow); the *shape* matches the engine's traces exactly, which is
     what lets the online per-phase refit path treat both oracles alike.
+
+    With ``depth > 1`` the trace gains a fourth ``"pipeline"`` phase
+    whose wall is the (negative) overlap saving ``-overlap_s`` — the
+    serial phase components stay intact and the four walls still sum
+    exactly to the overlapped total, so the timing conservation law
+    closes on pipelined analytic traces too.
     """
     from repro.telemetry.trace import PAIR_BYTES, JobTrace
 
@@ -52,6 +59,7 @@ def _analytic_trace(app, backend, size, M, R, W, phase_s, noise_factor):
         config={
             "num_mappers": M, "num_reducers": R, "num_workers": W,
             "reduce_backend": backend, "input_len": int(size),
+            "overlap_depth": int(depth),
         },
     )
     trace.record_phase(
@@ -69,6 +77,11 @@ def _analytic_trace(app, backend, size, M, R, W, phase_s, noise_factor):
         "reduce", phase_s["reduce"] * noise_factor,
         tasks=R, waves=math.ceil(R / W),
     )
+    if depth > 1:
+        trace.record_phase(
+            "pipeline", -overlap_s,
+            overlap_depth=depth, overlap_s=overlap_s,
+        )
     trace.finish(sum(p.wall_s for p in trace.phases))
     return trace
 
@@ -98,6 +111,7 @@ class AnalyticOracle:
     C_SHUF = 2.0e-6     # shuffle bytes moved, per token
     C_PART = 0.004      # per-reducer partition/merge overhead
     C_RED = 6.0e-6      # reduce aggregation, per token
+    C_PIPE = 0.012      # per-extra-depth pipeline fill/drain overhead
 
     def __init__(self, *, noise: float = 0.02, seed: int = 0):
         self.noise = float(noise)
@@ -135,6 +149,28 @@ class AnalyticOracle:
         t_reduce = red_waves * (setup + self.C_RED * thr * n / R)
         return {"map": t_map, "shuffle": t_shuffle, "reduce": t_reduce}
 
+    def _overlapped_total(self, phase_s: dict[str, float], depth: int
+                          ) -> float:
+        """Closed-form total at overlap depth D.
+
+        D=1 is the serial sum.  For D>1 the steady state runs map
+        against shuffle+reduce concurrently: the longer side is fully
+        exposed, the shorter side's exposure shrinks as 1/D (deeper
+        pipelines hide more of it behind the critical path), and each
+        extra stage pays a fill/drain cost ``C_PIPE`` — so the optimum
+        depth is interior and config-dependent, exactly like M and R.
+        """
+        total = sum(phase_s.values())
+        if depth <= 1:
+            return total
+        t_map = phase_s["map"]
+        t_sr = phase_s["shuffle"] + phase_s["reduce"]
+        return (
+            max(t_map, t_sr)
+            + min(t_map, t_sr) / depth
+            + self.C_PIPE * (depth - 1)
+        )
+
     def _noise_factor(
         self, app, backend, M, R, W, job_id
     ) -> float:
@@ -156,15 +192,18 @@ class AnalyticOracle:
         reducers: int,
         workers: int,
         job_id: int = 0,
+        depth: int = 1,
         _noiseless: bool = False,
     ) -> float:
+        if int(depth) < 1:
+            raise ValueError(f"depth must be >= 1, got {depth}")
         phase_s = self._phase_components(
             app, backend, size, mappers, reducers, workers
         )
-        t = sum(phase_s.values())
+        t = self._overlapped_total(phase_s, int(depth))
         self._last_call = (
             app, backend, int(size), int(mappers), int(reducers),
-            int(workers), int(job_id), bool(_noiseless),
+            int(workers), int(job_id), int(depth), bool(_noiseless),
         )
         if not _noiseless:
             t *= self._noise_factor(
@@ -181,12 +220,19 @@ class AnalyticOracle:
         """
         if self._last_call is None:
             return None
-        app, backend, size, M, R, W, job_id, noiseless = self._last_call
+        app, backend, size, M, R, W, job_id, depth, noiseless = \
+            self._last_call
         phase_s = self._phase_components(app, backend, size, M, R, W)
         factor = 1.0 if noiseless else self._noise_factor(
             app, backend, M, R, W, job_id
         )
-        return _analytic_trace(app, backend, size, M, R, W, phase_s, factor)
+        overlap = (
+            sum(phase_s.values()) - self._overlapped_total(phase_s, depth)
+        ) * factor
+        return _analytic_trace(
+            app, backend, size, M, R, W, phase_s, factor,
+            depth=depth, overlap_s=overlap,
+        )
 
     # ---- partial execution (elastic layer) ------------------------------
 
@@ -296,11 +342,21 @@ class EngineOracle:
     def __init__(
         self, *, warmup: int = 1, size_quantum: int = 1024,
         traced: bool = False, sharded: bool = False,
-        mesh_axis: str = "workers",
+        pipelined: bool = False, mesh_axis: str = "workers",
     ):
         self.warmup = warmup
         self.size_quantum = size_quantum
         self.sharded = bool(sharded)
+        #: with pipelined=True, ``time(..., depth=D)`` with D > 1
+        #: wall-clocks the plan's pipelined mode — the knob a depth-aware
+        #: predictive policy profiles and chooses per job.  Off by
+        #: default so depth requests can't silently hit the fused path.
+        self.pipelined = bool(pipelined)
+        if self.pipelined and self.sharded:
+            raise ValueError(
+                "pipelined=True is a single-controller mode; it does not "
+                "compose with sharded=True"
+            )
         self.mesh_axis = mesh_axis
         self.platform = "engine-sharded" if sharded else "engine-wallclock"
         #: with traced=True, jobs run through the phase-split telemetry
@@ -367,7 +423,7 @@ class EngineOracle:
         return self._meshes[W]
 
     def _build_mode(self, app, backend, size, mappers, reducers, workers,
-                    recorder):
+                    recorder, depth: int = 1):
         """One ExecutionPlan, lowered in this oracle's scheduling mode."""
         from repro.mapreduce import ExecutionPlan, JobConfig
 
@@ -379,6 +435,7 @@ class EngineOracle:
                 num_reducers=int(reducers),
                 num_workers=int(workers),
                 reduce_backend=backend,
+                overlap_depth=int(depth),
             ),
             len(corpus),
         )
@@ -387,19 +444,23 @@ class EngineOracle:
                 self._mesh_for(workers), self.mesh_axis, recorder=recorder
             )
         elif recorder is not None:
-            job = plan.traced(recorder)
+            job = plan.traced(recorder)  # depth from the config
+        elif int(depth) > 1:
+            job = plan.pipelined()
         else:
             job = plan.fused()
         return job, corpus
 
-    def _get_job(self, app, backend, size, mappers, reducers, workers):
+    def _get_job(self, app, backend, size, mappers, reducers, workers,
+                 depth: int = 1):
         import jax
 
-        key = (app, size, backend, int(mappers), int(reducers), int(workers))
+        key = (app, size, backend, int(mappers), int(reducers),
+               int(workers), int(depth))
         if key not in self._jobs:
             job, corpus = self._build_mode(
                 app, backend, size, mappers, reducers, workers,
-                self.recorder,
+                self.recorder, depth,
             )
             for _ in range(self.warmup):
                 jax.block_until_ready(job(corpus))
@@ -415,15 +476,22 @@ class EngineOracle:
         reducers: int,
         workers: int,
         job_id: int = 0,
+        depth: int = 1,
     ) -> float:
         import time as _time
 
         import jax
 
+        if int(depth) < 1:
+            raise ValueError(f"depth must be >= 1, got {depth}")
+        if int(depth) > 1 and not self.pipelined:
+            raise ValueError(
+                "depth > 1 requires EngineOracle(pipelined=True)"
+            )
         size = max(self.size_quantum,
                    (int(size) // self.size_quantum) * self.size_quantum)
         job, corpus = self._get_job(
-            app, backend, size, mappers, reducers, workers
+            app, backend, size, mappers, reducers, workers, int(depth)
         )
         t0 = _time.perf_counter()
         jax.block_until_ready(job(corpus))

@@ -42,6 +42,24 @@ from repro.core.tuner import tune_categorical
 SIZE_UNIT = 1024.0
 
 
+def _cat_key(backend: str, depth: int = 1) -> str:
+    """Category key for the (backend, overlap_depth) model slot.
+
+    Depth joins the model database the same way the backend did: as a
+    *categorical* axis — one polynomial model per category value (the
+    paper's numeric basis can't embed it; see ``tune_categorical``).
+    Depth 1 keys as the bare backend so existing on-disk databases and
+    every depth-unaware policy keep their exact legacy keys."""
+    d = int(depth)
+    return backend if d == 1 else f"{backend}@d{d}"
+
+
+def _parse_cat(key: str) -> tuple[str, int]:
+    """Inverse of :func:`_cat_key`: ``"xla@d2" -> ("xla", 2)``."""
+    backend, _, d = key.partition("@d")
+    return backend, int(d) if d else 1
+
+
 def _np_design(spec, rows: np.ndarray) -> np.ndarray:
     """Numpy twin of ``features.design_matrix`` for hot scheduler loops.
 
@@ -166,12 +184,16 @@ class PredictivePolicy(SchedulingPolicy):
         refit_every: int = 1,
         seed: int = 0,
         fit_kwargs: dict | None = None,
+        depth_grid: tuple[int, ...] = (1,),
     ):
         self.db = db if db is not None else ModelDatabase()
         self._backends_arg = backends
         self.mapper_grid = tuple(mapper_grid)
         self.reducer_grid = tuple(reducer_grid)
         self.worker_grid = tuple(sorted(worker_grid))
+        self.depth_grid = tuple(sorted(set(int(d) for d in depth_grid)))
+        if not self.depth_grid or self.depth_grid[0] < 1:
+            raise ValueError(f"bad depth_grid {depth_grid!r}")
         self.bootstrap_sizes = tuple(bootstrap_sizes)
         self.n_bootstrap = n_bootstrap
         self.bootstrap_repeats = bootstrap_repeats
@@ -190,6 +212,14 @@ class PredictivePolicy(SchedulingPolicy):
         oracle = cluster.oracle
         self.platform = oracle.platform
         self.backends = tuple(self._backends_arg or oracle.backends())
+        #: one model category per (backend, overlap_depth) — depth is a
+        #: categorical axis exactly like the backend, so the numeric
+        #: feature rows (M, R, W, size) and the wire format of every
+        #: stored model are unchanged.
+        self.categories = tuple(
+            _cat_key(b, d)
+            for b, d in itertools.product(self.backends, self.depth_grid)
+        )
         self.worker_grid = tuple(
             w for w in self.worker_grid if w <= cluster.total_workers
         ) or (cluster.total_workers,)
@@ -210,31 +240,39 @@ class PredictivePolicy(SchedulingPolicy):
         profile_seq = itertools.count()  # distinct noise draw per profile run
         for app in apps:
             if all(
-                (app, self.platform, b) in self.db for b in self.backends
+                (app, self.platform, c) in self.db for c in self.categories
             ):
                 continue  # warm start: models reloaded from disk
 
-            def make_run_fn(app_name, backend_name):
+            def make_run_fn(app_name, backend_name, depth):
+                extra = {} if depth == 1 else {"depth": depth}
+
                 def run(row):
                     return oracle.time(
                         app_name, backend_name, int(row[3] * SIZE_UNIT),
                         int(row[0]), int(row[1]), int(row[2]),
                         job_id=1_000_000 + next(profile_seq),
+                        **extra,
                     )
                 return run
 
             result = tune_categorical(
-                {b: make_run_fn(app, b) for b in self.backends},
+                {
+                    _cat_key(b, d): make_run_fn(app, b, d)
+                    for b, d in itertools.product(
+                        self.backends, self.depth_grid
+                    )
+                },
                 space,
                 n_samples=self.n_bootstrap,
                 repeats=self.bootstrap_repeats,
                 seed=self.seed,
                 **self.fit_kwargs,
             )
-            for backend, tr in result.per_category.items():
-                self.db.put(app, self.platform, tr.model, backend=backend)
+            for cat, tr in result.per_category.items():
+                self.db.put(app, self.platform, tr.model, backend=cat)
                 self.refiner.seed_profiles(
-                    app, backend, tr.sampled_configs, tr.sampled_times
+                    app, cat, tr.sampled_configs, tr.sampled_times
                 )
 
     # ---- per-job planning (paper Fig. 2b: predict before dispatch) ------
@@ -273,24 +311,25 @@ class PredictivePolicy(SchedulingPolicy):
     ) -> tuple[np.ndarray, dict[str, np.ndarray]]:
         rows = self._candidate_rows(job, w_options)
         preds = {}
-        for backend in self.backends:
-            model = self.db.get(job.app, self.platform, backend=backend)
+        for cat in self.categories:
+            model = self.db.get(job.app, self.platform, backend=cat)
             # A polynomial happily predicts <= 0 outside its training mass;
             # floor it so rankings and deadline math stay sane.
-            preds[backend] = np.maximum(_np_predict(model, rows), 1e-3)
+            preds[cat] = np.maximum(_np_predict(model, rows), 1e-3)
         return rows, preds
 
     def _argmin_plan(self, job: JobSpec, w_options) -> Plan:
         rows, preds = self._predict_grid(job, w_options)
         best = None
-        for backend, pred in preds.items():
+        for cat, pred in preds.items():
             i = int(np.argmin(pred))
             if best is None or pred[i] < best[0]:
-                best = (float(pred[i]), backend, rows[i])
-        t, backend, row = best
+                best = (float(pred[i]), cat, rows[i])
+        t, cat, row = best
+        backend, depth = _parse_cat(cat)
         return Plan(
             backend=backend, mappers=int(row[0]), reducers=int(row[1]),
-            workers=int(row[2]), predicted_time=t,
+            workers=int(row[2]), predicted_time=t, depth=depth,
         )
 
     # ---- online refinement ----------------------------------------------
@@ -301,8 +340,9 @@ class PredictivePolicy(SchedulingPolicy):
         plan, spec = record.plan, record.spec
         row = (plan.mappers, plan.reducers, plan.workers,
                spec.size / SIZE_UNIT)
+        cat = _cat_key(plan.backend, getattr(plan, "depth", 1))
         refitted = self.refiner.observe(
-            spec.app, plan.backend, row, record.true_time
+            spec.app, cat, row, record.true_time
         )
         if refitted:
             self._model_version += 1
@@ -312,7 +352,7 @@ class PredictivePolicy(SchedulingPolicy):
         # so no cache invalidation is needed.
         if record.trace is not None:
             self.refiner.observe_phases(
-                spec.app, plan.backend, row, record.trace.phase_times()
+                spec.app, cat, row, record.trace.phase_times()
             )
 
 
@@ -352,6 +392,30 @@ class PredictedSJF(PredictivePolicy):
             if best is None or plan.predicted_time < best[1].predicted_time:
                 best = (job, plan)
         return Dispatch(*best) if best else None
+
+
+@register_policy
+class PipelinedSJF(PredictedSJF):
+    """``predict-sjf`` with the overlap-depth axis switched on.
+
+    Profiles every (backend, depth) category during bootstrap (depth
+    rides :func:`tune_categorical` exactly like the backend does), so
+    per job the joint (backend, M, R, W, depth) argmin decides whether —
+    and how deep — the engine's software-pipelined mode pays off.
+    Against an oracle whose depth axis is flat this degenerates to
+    ``predict-sjf`` with extra profiling; against the pipelined-aware
+    oracles the chosen depth is an interior, size-dependent optimum —
+    the paper's configuration-dependency thesis on a brand-new axis.
+
+    Requires an oracle whose ``time`` accepts ``depth=`` for every value
+    in ``depth_grid`` beyond 1 (AnalyticOracle always does;
+    EngineOracle needs ``pipelined=True``)."""
+
+    name = "predict-pipeline"
+
+    def __init__(self, **kwargs):
+        kwargs.setdefault("depth_grid", (1, 2, 4))
+        super().__init__(**kwargs)
 
 
 @register_policy
@@ -400,18 +464,19 @@ class DeadlineAware(PredictivePolicy):
             return None
         rows, preds = self._predict_grid(job, w_options)
         best = None
-        for backend, pred in preds.items():
+        for cat, pred in preds.items():
             ok = np.nonzero(pred <= budget)[0]
             for i in ok:
-                cand = (int(rows[i][2]), float(pred[i]), backend, rows[i])
+                cand = (int(rows[i][2]), float(pred[i]), cat, rows[i])
                 if best is None or cand[:2] < best[:2]:
                     best = cand
         if best is None:
             return None
-        _, t, backend, row = best
+        _, t, cat, row = best
+        backend, depth = _parse_cat(cat)
         return Plan(
             backend=backend, mappers=int(row[0]), reducers=int(row[1]),
-            workers=int(row[2]), predicted_time=t,
+            workers=int(row[2]), predicted_time=t, depth=depth,
         )
 
     def _admission_sweep(self, order, free_workers, now):
@@ -731,7 +796,10 @@ class ElasticDeadline(DeadlineAware):
                          workers: int) -> float:
         """Model-predicted total time of (spec, plan) at grant ``workers``
         — the regression evaluated off the plan's frozen (M, R)."""
-        model = self.db.get(spec.app, self.platform, backend=plan.backend)
+        model = self.db.get(
+            spec.app, self.platform,
+            backend=_cat_key(plan.backend, getattr(plan, "depth", 1)),
+        )
         row = np.asarray(
             (plan.mappers, plan.reducers, workers, spec.size / SIZE_UNIT),
             dtype=np.float64,

@@ -10,6 +10,9 @@ prints a comparison table plus the online-refinement error trajectory.
 scheduler — can ``--load-models`` and skip the bootstrap profiling phase.
 ``--oracle engine`` wall-clocks the live MapReduce engine instead of the
 analytic cost (small traces only: every distinct config compiles once).
+``--overlap-depth 1,2,4`` widens every predictive policy's category grid
+with the pipelined execution mode's overlap depth, so plans carry a
+per-job depth choice (the ``depths`` column histograms what was picked).
 ``--elastic`` runs the trace on the :class:`repro.elastic.ElasticCluster`,
 where the ``predict-elastic`` policy may preempt running jobs at wave
 boundaries and shrink/grow their worker grants (``--ckpt-overhead`` /
@@ -69,6 +72,12 @@ def build_parser() -> argparse.ArgumentParser:
                          "--xla_force_host_platform_device_count=N for CPU "
                          "emulation), traced, so per-phase wall times come "
                          "from the sharded engine")
+    ap.add_argument("--overlap-depth", default=None, metavar="D1,D2,...",
+                    help="overlap-depth grid for predictive policies "
+                         "(e.g. '1,2,4'): each depth becomes one more "
+                         "profiled category and plans carry the chosen "
+                         "depth per job (default: policy-specific — "
+                         "predict-pipeline tunes 1,2,4; others stay at 1)")
     ap.add_argument("--net-capacity", type=float, default=None,
                     help="fabric bytes/s budget for the predict-resource "
                          "policy (default: unconstrained = pure SJF)")
@@ -102,10 +111,22 @@ def build_parser() -> argparse.ArgumentParser:
 
 def main(argv=None) -> None:
     args = build_parser().parse_args(argv)
+    depth_grid = None
+    if args.overlap_depth is not None:
+        depth_grid = tuple(
+            int(d) for d in args.overlap_depth.split(",") if d.strip()
+        )
+    deep = depth_grid is not None and max(depth_grid) > 1
     if args.oracle in ("engine", "engine-traced", "engine-sharded"):
+        if deep and args.oracle == "engine-sharded":
+            raise SystemExit(
+                "--overlap-depth > 1 is a single-controller schedule; "
+                "it does not compose with --oracle engine-sharded"
+            )
         oracle = EngineOracle(
             traced=args.oracle in ("engine-traced", "engine-sharded"),
             sharded=args.oracle == "engine-sharded",
+            pipelined=deep,
         )
         print("[cluster] note: the engine oracle compiles every distinct "
               "(app, size, backend, M, R, W) once — predictive policies' "
@@ -141,7 +162,7 @@ def main(argv=None) -> None:
     header = (
         f"{'policy':<18} {'makespan':>9} {'wait':>7} {'turnaround':>10} "
         f"{'util':>5} {'SLO':>5} {'rej':>4} {'rgr':>4} {'MAE%':>6} "
-        f"{'MAE% 1st→2nd half':>18}"
+        f"{'MAE% 1st→2nd half':>18} {'depths':>12}"
     )
     print(f"[cluster] {args.jobs} jobs, {args.workers} workers, "
           f"arrival={args.arrival}, oracle={oracle.platform}")
@@ -153,6 +174,8 @@ def main(argv=None) -> None:
         kwargs: dict = {}
         if issubclass(POLICIES[name], PredictivePolicy):
             kwargs["seed"] = args.seed
+            if depth_grid is not None:
+                kwargs["depth_grid"] = depth_grid
             if name == "predict-resource" and args.net_capacity is not None:
                 kwargs["net_capacity"] = args.net_capacity
             if name == "predict-elastic" and args.suspend:
@@ -175,12 +198,17 @@ def main(argv=None) -> None:
             f"{f(m['pred_mae_pct_second_half'], 1)}"
             if m["pred_mae_pct"] is not None else "n/a"
         )
+        depths = "+".join(
+            f"{d}:{n}" for d, n in sorted(
+                m["depth_histogram"].items(), key=lambda kv: int(kv[0])
+            )
+        )
         print(
             f"{name:<18} {f(m['makespan_s']):>9} {f(m['mean_wait_s']):>7} "
             f"{f(m['mean_turnaround_s']):>10} {f(m['utilization']):>5} "
             f"{f(m['slo_attainment']):>5} {m['n_rejected']:>4} "
             f"{m['n_regrants']:>4} {f(m['pred_mae_pct'], 1):>6} "
-            f"{halves:>18}"
+            f"{halves:>18} {depths:>12}"
         )
         if hasattr(policy, "db"):
             save_db = policy.db

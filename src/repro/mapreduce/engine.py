@@ -62,10 +62,15 @@ class JobConfig:
     setup_dim: int = 32         # startup compute size
     reduce_backend: str = "jnp"     # categorical knob: "jnp"|"pallas"|"xla"
     shuffle_backend: str = "lexsort"  # "lexsort"|"all_to_all"
+    overlap_depth: int = 1          # software-pipeline depth (1 = serial)
 
     def __post_init__(self):
         if self.num_mappers < 1 or self.num_reducers < 1 or self.num_workers < 1:
             raise ValueError(f"bad config {self}")
+        if self.overlap_depth < 1:
+            raise ValueError(
+                f"overlap_depth must be >= 1, got {self.overlap_depth}"
+            )
         _backends.get_reduce_backend(self.reduce_backend)
         _backends.get_shuffle_backend(self.shuffle_backend)
 
@@ -134,6 +139,8 @@ def build_job(app: MapReduceApp, cfg: JobConfig, input_len: int,
     plan = ExecutionPlan(app, cfg, input_len)
     if recorder is not None:
         return plan.traced(recorder)
+    if cfg.overlap_depth > 1:
+        return plan.pipelined()
     return plan.fused()
 
 

@@ -15,6 +15,10 @@ buffers**, and every entry point is a *mode* over that one plan:
   the zero-overhead hot path (``build_job``'s default);
 * :meth:`traced`    — the same stepper loops jitted per phase, fenced and
   wall-clocked, feeding a :class:`repro.telemetry.PhaseRecorder`;
+* :meth:`pipelined` — the fused pipeline with map/reduce waves
+  software-pipelined at ``cfg.overlap_depth``: wave group g's compute
+  overlaps group g-1's commit in one loop carry (prologue / steady
+  state / epilogue), bit-exact vs fused by construction;
 * :meth:`sharded`   — ``shard_map`` around the same phase primitives
   (workers = mesh axis, shuffle = literal ``all_to_all``); with a
   recorder the phases compile as *separate* mesh programs, which is what
@@ -100,11 +104,17 @@ class ExecutionPlan:
             self.M * self.P, self.R, cfg.capacity_factor
         )
         # Per-grant jitted stepper caches (shared by every mode and every
-        # ResumableJob derived from this plan).
+        # ResumableJob derived from this plan).  Keys are canonicalized:
+        # any grant W >= M (or R) compiles the same stepper as W == M, so
+        # re-planning after a regrant to an equivalent grant is a cache
+        # hit, not a re-trace.
         self._jit_prep = None
         self._jit_map: dict[int, callable] = {}
         self._jit_shuffle: dict[int, callable] = {}
         self._jit_reduce: dict[tuple[int, int], callable] = {}
+        self._jit_pipelined: dict[tuple[int, int], callable] = {}
+        self._cache_hits = 0
+        self._cache_misses = 0
 
     # ------------------------------------------------------------- metadata
 
@@ -134,6 +144,7 @@ class ExecutionPlan:
             "n_pairs": self.M * self.P,
             "partition_capacity": self.partition_cap(W),
             "r_pad": self.R,
+            "overlap_depth": getattr(self.cfg, "overlap_depth", 1),
         }
 
     # ------------------------------------------------- raw stepper builders
@@ -304,6 +315,167 @@ class ExecutionPlan:
 
         return step
 
+    # ------------------------------------- split compute/commit steppers
+    #
+    # The pipelined mode needs the wave step split at its data-dependency
+    # boundary: ``compute`` reads only the immutable inputs (splits /
+    # partitions) and produces a task block; ``commit`` writes the block
+    # into the carried accumulators.  Wave group g's compute therefore has
+    # no dependency on group g-1's commit, and the scheduler can overlap
+    # them inside one loop iteration.  compute∘commit at the same start is
+    # exactly the fused step — same slices, same clamping — so the split
+    # changes scheduling, never values.
+
+    def _map_compute_fn(self, Weff: int):
+        app, cfg, M = self.app, self.cfg, self.M
+        pad = max(0, Weff - M)
+
+        def compute(splits, svalid, start):
+            tok = jax.lax.dynamic_slice_in_dim(
+                _pad_rows(splits, pad, 0), start, Weff, 0
+            )
+            val = jax.lax.dynamic_slice_in_dim(
+                _pad_rows(svalid, pad, False), start, Weff, 0
+            )
+            return jax.vmap(
+                lambda t, m: run_map_task(app, cfg, t, m)
+            )(tok, val)
+
+        return compute
+
+    def _map_commit_fn(self, Weff: int):
+        M = self.M
+        pad = max(0, Weff - M)
+
+        def commit(bufs, blk, start):
+            bk, bv, bp = bufs
+            k, v, pv = blk
+
+            def upd(buf, b, fill):
+                return jax.lax.dynamic_update_slice_in_dim(
+                    _pad_rows(buf, pad, fill), b, start, 0
+                )[:M]
+
+            return upd(bk, k, PAD_KEY), upd(bv, v, 0), upd(bp, pv, False)
+
+        return commit
+
+    def _reduce_compute_fn(self, Weff: int):
+        app, cfg = self.app, self.cfg
+        backend = self.reduce_backend
+        pad = max(0, Weff - self.R)
+
+        def compute(pk, pv, start):
+            kblk = jax.lax.dynamic_slice_in_dim(
+                _pad_rows(pk, pad, PAD_KEY), start, Weff, 0
+            )
+            vblk = jax.lax.dynamic_slice_in_dim(
+                _pad_rows(pv, pad, 0), start, Weff, 0
+            )
+            ok, ov = backend.reduce(kblk, vblk, app.reduce_op)
+            ov = phases._masked_setup(cfg, kblk, ok, ov)
+            return ok, ov
+
+        return compute
+
+    def _reduce_commit_fn(self, Weff: int):
+        R = self.R
+        pad = max(0, Weff - R)
+
+        def commit(bufs, blk, start):
+            ok_buf, ov_buf = bufs
+            ok, ov = blk
+
+            def upd(buf, b, fill):
+                return jax.lax.dynamic_update_slice_in_dim(
+                    _pad_rows(buf, pad, fill), b, start, 0
+                )[:R]
+
+            return upd(ok_buf, ok, PAD_KEY), upd(ov_buf, ov, 0)
+
+        return commit
+
+    @staticmethod
+    def _software_pipeline(compute, commit, groups: int, stride: int,
+                           init_bufs):
+        """Prologue / steady-state / epilogue over ``groups`` wave groups.
+
+        Iteration g of the steady-state ``fori_loop`` commits group g-1's
+        block *and* computes group g's — the two halves touch disjoint
+        state, so XLA's thunk scheduler may overlap them.  The commit
+        order (0, 1, ..., G-1) and every slice/clamp is identical to the
+        serial loop, so outputs are bit-exact by construction.
+        """
+
+        def run(*inputs):
+            blk = compute(*inputs, 0)
+
+            def body(g, carry):
+                bufs, blk = carry
+                bufs = commit(bufs, blk, (g - 1) * stride)
+                return bufs, compute(*inputs, g * stride)
+
+            bufs, blk = jax.lax.fori_loop(
+                1, groups, body, (init_bufs(), blk)
+            )
+            return commit(bufs, blk, (groups - 1) * stride)
+
+        return run
+
+    def pipelined_phase_fns(self, workers: int | None = None,
+                            depth: int | None = None) -> dict:
+        """The pipeline's phase functions with map and reduce waves
+        software-pipelined at overlap depth D: waves are grouped D at a
+        time into blocks of ``W*D`` tasks, and the steady-state loop
+        commits group g-1 while computing group g.  The shuffle is the
+        global barrier between the two pipelines and is byte-identical
+        to the serial mode's.  ``depth=1`` degenerates to
+        :meth:`phase_fns` (today's schedule).
+        """
+        W = self.cfg.num_workers if workers is None else int(workers)
+        D = (getattr(self.cfg, "overlap_depth", 1)
+             if depth is None else int(depth))
+        if D < 1:
+            raise ValueError(f"overlap depth must be >= 1, got {D}")
+        if D == 1:
+            return self.phase_fns(W)
+        Weff_m = min(W * D, self.M)
+        Weff_r = min(W * D, self.R)
+        groups_m = math.ceil(self.M / Weff_m)
+        groups_r = math.ceil(self.R / Weff_r)
+        prep = self._prep_fn()
+        shuffle_step = self._shuffle_step_fn(
+            W if self.shuffle.collective else 1
+        )
+        map_pipe = self._software_pipeline(
+            self._map_compute_fn(Weff_m), self._map_commit_fn(Weff_m),
+            groups_m, Weff_m, self.initial_map_buffers,
+        )
+        red_compute = self._reduce_compute_fn(Weff_r)
+        red_commit = self._reduce_commit_fn(Weff_r)
+        groups_r_, Weff_r_ = groups_r, Weff_r
+        init_red = self.initial_reduce_buffers
+
+        def phase_map(tokens):
+            return map_pipe(*prep(tokens))
+
+        def phase_shuffle(bk, bv, bp):
+            pk, pv, dropped, _, _ = shuffle_step(bk, bv, bp)
+            return pk, pv, dropped
+
+        def phase_reduce(pk, pv):
+            pipe = self._software_pipeline(
+                red_compute, red_commit, groups_r_, Weff_r_,
+                lambda: init_red(pk.shape[1]),
+            )
+            return pipe(pk, pv)
+
+        return {
+            "map": phase_map,
+            "shuffle": phase_shuffle,
+            "reduce": phase_reduce,
+        }
+
     # ----------------------------------------- jitted steppers (per grant)
 
     def prep(self):
@@ -312,21 +484,46 @@ class ExecutionPlan:
         return self._jit_prep
 
     def map_stepper(self, W: int):
-        if W not in self._jit_map:
-            self._jit_map[W] = jax.jit(self._map_step_fn(W))
-        return self._jit_map[W]
+        # A grant wider than the task count slices/updates the identical
+        # M-row window (the pad rows are write-through ballast), so every
+        # W >= M is the same stepper: canonicalize the key to min(W, M).
+        key = min(int(W), self.M)
+        if key not in self._jit_map:
+            self._cache_misses += 1
+            self._jit_map[key] = jax.jit(self._map_step_fn(key))
+        else:
+            self._cache_hits += 1
+        return self._jit_map[key]
 
     def shuffle_stepper(self, W: int):
         key = W if self.shuffle.collective else 1
         if key not in self._jit_shuffle:
+            self._cache_misses += 1
             self._jit_shuffle[key] = jax.jit(self._shuffle_step_fn(key))
+        else:
+            self._cache_hits += 1
         return self._jit_shuffle[key]
 
     def reduce_stepper(self, W: int, cap: int):
-        key = (W, cap)
+        key = (min(int(W), self.R), cap)
         if key not in self._jit_reduce:
-            self._jit_reduce[key] = jax.jit(self._reduce_step_fn(W))
+            self._cache_misses += 1
+            self._jit_reduce[key] = jax.jit(self._reduce_step_fn(key[0]))
+        else:
+            self._cache_hits += 1
         return self._jit_reduce[key]
+
+    def cache_info(self) -> dict:
+        """Stepper-cache occupancy and hit/miss counters (regrant
+        re-planning should mostly *hit*; equivalent grants share keys)."""
+        return {
+            "map_entries": len(self._jit_map),
+            "shuffle_entries": len(self._jit_shuffle),
+            "reduce_entries": len(self._jit_reduce),
+            "pipelined_entries": len(self._jit_pipelined),
+            "hits": self._cache_hits,
+            "misses": self._cache_misses,
+        }
 
     # ------------------------------------------------- phase compositions
 
@@ -393,14 +590,57 @@ class ExecutionPlan:
 
         return jax.jit(job)
 
-    def traced(self, recorder, workers: int | None = None):
+    def pipelined(self, workers: int | None = None,
+                  depth: int | None = None):
+        """Mode ``pipelined``: the fused pipeline with map and reduce
+        waves software-pipelined at overlap depth D (default
+        ``cfg.overlap_depth``) — wave group g's compute overlaps group
+        g-1's commit inside one loop carry, prologue/epilogue included
+        (see :meth:`pipelined_phase_fns`).  Fewer, wider loop iterations
+        plus commit/compute overlap is where the wall-clock win comes
+        from on wave-count-dominated (shuffle-heavy) configs.  Outputs
+        are bit-exact vs :meth:`fused` by construction; jitted jobs are
+        cached per ``(W, depth)`` grant."""
+        W = self.cfg.num_workers if workers is None else int(workers)
+        D = (getattr(self.cfg, "overlap_depth", 1)
+             if depth is None else int(depth))
+        if D < 1:
+            raise ValueError(f"overlap depth must be >= 1, got {D}")
+        key = (W, D)
+        if key in self._jit_pipelined:
+            self._cache_hits += 1
+            return self._jit_pipelined[key]
+        self._cache_misses += 1
+        fns = self.pipelined_phase_fns(W, D)
+
+        def job(tokens):
+            bk, bv, bp = fns["map"](tokens)
+            pk, pv, dropped = fns["shuffle"](bk, bv, bp)
+            ok, ov = fns["reduce"](pk, pv)
+            return ok, ov, dropped
+
+        jitted = jax.jit(job)
+        self._jit_pipelined[key] = jitted
+        return jitted
+
+    def traced(self, recorder, workers: int | None = None,
+               depth: int | None = None):
         """Mode ``traced``: phase-fenced stepper loops feeding a
         :class:`repro.telemetry.PhaseRecorder`.  Same semantics and
         outputs as :meth:`fused`; counters are measured from the actual
         phase outputs (host-side numpy reductions), so conservation laws
         are checkable invariants rather than config-derived tautologies.
+
+        With overlap depth D > 1 (``depth=`` or ``cfg.overlap_depth``)
+        the map/reduce phases compile in their pipelined form and the
+        trace gains a fourth ``"pipeline"`` phase carrying the
+        cross-phase residual wall time (total minus the three fenced
+        phases) plus ``overlap_depth`` / ``overlap_s`` counters — so the
+        timing conservation law still closes over the phase list.
         """
-        fns = self.phase_fns(workers)
+        D = (getattr(self.cfg, "overlap_depth", 1)
+             if depth is None else int(depth))
+        fns = self.pipelined_phase_fns(workers, D)
         jit_map = jax.jit(fns["map"])
         jit_shuffle = jax.jit(fns["shuffle"])
         jit_reduce = jax.jit(fns["reduce"])
@@ -462,7 +702,18 @@ class ExecutionPlan:
                 segment_slots=m["reducers"] * int(pk.shape[1]),
             )
 
-            trace.finish(_time.perf_counter() - t_job)
+            total = _time.perf_counter() - t_job
+            if D > 1:
+                # Overlap happens *inside* the fenced map/reduce phases
+                # (their walls already absorb it), so the explicit
+                # pipeline phase carries only the cross-phase residual —
+                # conservation still closes over the phase list.
+                residual = max(0.0, total - trace.phase_time_sum())
+                trace.record_phase(
+                    "pipeline", residual,
+                    overlap_depth=D, overlap_s=0.0,
+                )
+            trace.finish(total)
             return ok, ov, dropped
 
         return job

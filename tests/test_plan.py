@@ -8,13 +8,15 @@ combination, replacing the per-path equivalence copies that used to
 live in ``test_backends.py`` / ``test_elastic.py``.
 """
 
+import time as _time
 from collections import Counter
 
 import jax
 import numpy as np
 import pytest
 
-from repro.elastic import run_resumable
+from repro.checkpoint import CheckpointManager
+from repro.elastic import load_snapshot, run_resumable, save_snapshot
 from repro.mapreduce import (
     ExecutionPlan,
     JobConfig,
@@ -278,3 +280,149 @@ class TestCanonicalCapacity:
         assert m["map_waves"] == 3 and m["reduce_waves"] == 2
         assert m["n_pairs"] == plan.M * plan.P
         assert m["partition_capacity"] == plan.lex_capacity
+        assert m["overlap_depth"] == 1
+
+
+@pytest.mark.parametrize("reduce_backend", ALL_REDUCE)
+@pytest.mark.parametrize("shuffle_backend", ALL_SHUFFLE)
+class TestPipelinedEquivalence:
+    """Mode ``pipelined`` is the fused lowering with a different
+    schedule: bit-exact at every depth, for every backend combination,
+    on ragged (W∤M) wave configurations."""
+
+    def test_pipelined_bit_exact_vs_fused(self, reduce_backend,
+                                          shuffle_backend):
+        # The default fixture config is already ragged: M=5 over W=2
+        # (3 map waves, last partial) and R=3 over W=2 (2 reduce waves).
+        cfg = _cfg(reduce_backend=reduce_backend,
+                   shuffle_backend=shuffle_backend)
+        plan = ExecutionPlan(APP, cfg, len(CORPUS))
+        fused = plan.fused()(CORPUS)
+        for depth in (1, 2, 3):
+            out = plan.pipelined(depth=depth)(CORPUS)
+            _assert_same(fused, out, (depth, "pipelined"))
+            assert collect_results(out[0], out[1]) == WANT
+
+    def test_pipelined_ragged_wave_groups(self, reduce_backend,
+                                          shuffle_backend):
+        """D∤waves and W∤M at once: the epilogue group is partial both
+        in waves-per-group and tasks-per-wave."""
+        cfg = _cfg(num_mappers=7, num_reducers=5, num_workers=3,
+                   reduce_backend=reduce_backend,
+                   shuffle_backend=shuffle_backend)
+        plan = ExecutionPlan(APP, cfg, len(CORPUS))
+        fused = plan.fused()(CORPUS)
+        for depth in (2, 3):
+            _assert_same(
+                fused, plan.pipelined(depth=depth)(CORPUS), depth
+            )
+
+    def test_traced_pipelined_records_pipeline_phase(self, reduce_backend,
+                                                     shuffle_backend):
+        cfg = _cfg(reduce_backend=reduce_backend,
+                   shuffle_backend=shuffle_backend, overlap_depth=2)
+        plan = ExecutionPlan(APP, cfg, len(CORPUS))
+        fused = plan.fused()(CORPUS)
+        recorder = PhaseRecorder()
+        traced = plan.traced(recorder)(CORPUS)  # depth from the config
+        _assert_same(fused, traced, "traced depth=2")
+        trace = recorder.last
+        assert trace.phase_names() == ["map", "shuffle", "reduce",
+                                       "pipeline"]
+        assert trace.counter("pipeline", "overlap_depth") == 2
+        assert trace.config["overlap_depth"] == 2
+        assert trace.check_conservation() == []
+
+
+class TestPipelinedRouting:
+    """build_job routes overlap_depth; bad depths fail fast."""
+
+    def test_build_job_routes_overlap_depth(self):
+        ref = build_job(APP, _cfg(), len(CORPUS))(CORPUS)
+        out = build_job(APP, _cfg(overlap_depth=3), len(CORPUS))(CORPUS)
+        _assert_same(ref, out, "build_job depth=3")
+
+    def test_config_validates_depth(self):
+        with pytest.raises(ValueError, match="overlap_depth"):
+            _cfg(overlap_depth=0)
+
+    def test_plan_validates_depth(self):
+        plan = ExecutionPlan(APP, _cfg(), len(CORPUS))
+        with pytest.raises(ValueError, match="depth"):
+            plan.pipelined(depth=0)
+
+
+class TestPipelinedPreemption:
+    """``resumable`` only materializes states at wave boundaries, so a
+    snapshot taken while a pipelined job is preempted has — by
+    construction — drained the in-flight wave group; resuming from any
+    such snapshot (through a real checkpoint round trip) reproduces the
+    pipelined output bit-exactly."""
+
+    def test_snapshot_mid_pipeline_drains_in_flight_wave(self, tmp_path):
+        cfg = _cfg(overlap_depth=3)
+        plan = ExecutionPlan(APP, cfg, len(CORPUS))
+        ref = plan.pipelined()(CORPUS)
+        job = plan.resumable()
+        total = run_resumable(job, CORPUS).cursor.waves_executed
+        for k in range(1, total):
+            part = run_resumable(job, CORPUS, preempt_after=k)
+            mgr = CheckpointManager(str(tmp_path / f"k{k}"))
+            save_snapshot(mgr, part)
+            restored, _, _ = load_snapshot(mgr)
+            full = run_resumable(job, CORPUS, state=restored)
+            _assert_same(ref, job.result(full), k)
+
+
+class TestStepperCaches:
+    """Per-grant jit caches: equivalent grants share one stepper, and
+    cache_info() exposes occupancy + hit/miss counters."""
+
+    def test_equivalent_grants_share_steppers(self):
+        plan = ExecutionPlan(APP, _cfg(), len(CORPUS))  # M=5, R=3
+        # Any W >= M is the same map stepper (the regrant re-trace bug).
+        assert plan.map_stepper(5) is plan.map_stepper(9)
+        assert plan.map_stepper(2) is not plan.map_stepper(3)
+        cap = plan.partition_cap()
+        assert plan.reduce_stepper(3, cap) is plan.reduce_stepper(7, cap)
+        info = plan.cache_info()
+        assert info["map_entries"] == 3  # keys {5, 2, 3}
+        assert info["reduce_entries"] == 1
+        assert info["hits"] == 2
+        assert info["misses"] == 4
+
+    def test_pipelined_jobs_cached_per_grant_and_depth(self):
+        plan = ExecutionPlan(APP, _cfg(), len(CORPUS))
+        a = plan.pipelined(depth=2)
+        assert plan.pipelined(depth=2) is a
+        assert plan.pipelined(depth=3) is not a
+        assert plan.pipelined(workers=3, depth=2) is not a
+        assert plan.cache_info()["pipelined_entries"] == 3
+
+
+@pytest.mark.slow
+class TestPipelinedPerfSmoke:
+    def test_depth2_not_slower_than_fused_beyond_noise(self):
+        """On a shuffle-heavy (all_to_all, high wave count) config the
+        pipelined schedule must at minimum not lose to fused beyond
+        measurement noise; the real speedup target lives in
+        benchmarks/pipeline_bench.py."""
+        tokens = 8192
+        corpus = wordcount_corpus(tokens, vocab_size=101, seed=3)
+        app = wordcount(101)
+        cfg = JobConfig(num_mappers=32, num_reducers=32, num_workers=2,
+                        shuffle_backend="all_to_all", capacity_factor=8.0)
+        plan = ExecutionPlan(app, cfg, tokens)
+
+        def best(fn, reps=3):
+            jax.block_until_ready(fn(corpus))  # compile + warm
+            vals = []
+            for _ in range(reps):
+                t0 = _time.perf_counter()
+                jax.block_until_ready(fn(corpus))
+                vals.append(_time.perf_counter() - t0)
+            return min(vals)
+
+        t_fused = best(plan.fused())
+        t_pipe = best(plan.pipelined(depth=2))
+        assert t_pipe <= t_fused * 1.25, (t_pipe, t_fused)
