@@ -4,8 +4,8 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast test-elastic test-plan bench-quick bench-backends \
-	bench-cluster bench-phases bench-elastic bench-pipeline bench-check \
-	lint
+	bench-cluster bench-phases bench-elastic bench-pipeline bench-obs \
+	bench-check trace-demo lint
 
 # Tier-1 verify (ROADMAP.md).
 test:
@@ -64,3 +64,18 @@ bench-elastic:
 # Just the pipelined-vs-fused speedup + overlap-depth model axis.
 bench-pipeline:
 	$(PYTHON) -m benchmarks.run --quick --sections pipeline
+
+# Just the observability section: span-tiling validation + drift-alarm
+# recovery experiment (lands run.trace.json / metrics.json artifacts).
+bench-obs:
+	$(PYTHON) -m benchmarks.run --quick --sections obs
+
+# Small committed example trace: a contended elastic run with
+# suspend-to-disk, exported as Chrome trace-event JSON + service metrics.
+# Open examples/trace_demo/run.trace.json in Perfetto (ui.perfetto.dev).
+trace-demo:
+	$(PYTHON) -m repro.launch.cluster --jobs 25 --workers 6 --seed 1 \
+		--policies predict-elastic --elastic --suspend \
+		--mean-interarrival 0.08 --arrival bursty \
+		--trace-out examples/trace_demo/run.trace.json \
+		--metrics-out examples/trace_demo/metrics.json

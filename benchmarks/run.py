@@ -12,6 +12,9 @@ Sections (CSV rows on stdout):
   cluster — beyond-paper: predictive multi-job scheduling vs FIFO baseline
   elastic — beyond-paper: preemptive regrant scheduling vs admission-only
   pipeline— beyond-paper: pipelined-vs-fused engine speedup + depth-axis MAE
+  obs     — beyond-paper: span-tiling validation + drift-alarm-triggered
+            refits recovering prediction MAE after a mid-trace platform
+            shift (also lands run.trace.json / metrics.json artifacts)
   roofline— §Roofline table from the dry-run artifacts
   kernels — per-kernel microbench (us/call, interpret mode)
 
@@ -41,7 +44,7 @@ import time
 
 ALL_SECTIONS = (
     "table1", "fig3", "fig4", "tuner", "backends", "phases", "cluster",
-    "elastic", "pipeline", "roofline", "kernels",
+    "elastic", "pipeline", "obs", "roofline", "kernels",
 )
 
 
@@ -115,7 +118,7 @@ def _kernel_micro() -> list[str]:
     return rows
 
 
-def run_section(sec: str, tokens: int, repeats: int):
+def run_section(sec: str, tokens: int, repeats: int, outdir: str = ""):
     """Dispatch one section; returns (rows, summary_dict_or_None)."""
     if sec == "table1":
         from benchmarks import table1_prediction_error
@@ -144,6 +147,9 @@ def run_section(sec: str, tokens: int, repeats: int):
     if sec == "pipeline":
         from benchmarks import pipeline_bench
         return pipeline_bench.main(tokens, repeats)
+    if sec == "obs":
+        from benchmarks import obs_bench
+        return obs_bench.main(tokens, repeats, outdir=outdir or None)
     if sec == "roofline":
         from benchmarks import roofline
         return roofline.main(), None
@@ -161,26 +167,41 @@ def _walk_metrics(summary, path=""):
     if isinstance(summary, dict):
         for k, v in summary.items():
             p = f"{path}.{k}" if path else str(k)
-            if k in ("makespan_s", "slo_attainment", "speedup") and isinstance(
-                v, (int, float)
-            ):
+            if k in (
+                "makespan_s", "slo_attainment", "speedup", "recovery"
+            ) and isinstance(v, (int, float)):
                 yield p, k, float(v)
             else:
                 yield from _walk_metrics(v, p)
 
 
-def load_committed(outdir: str, sections) -> dict:
+def load_committed(outdir: str, sections) -> tuple[dict, list[str]]:
     """The BENCH_<sec>.json summaries as committed, read *before* this
-    run overwrites them — the baseline the --check gate compares against."""
-    committed = {}
+    run overwrites them — the baseline the --check gate compares against.
+
+    Returns ``(committed, malformed)``: a baseline file that exists but
+    does not parse as a JSON object (truncated commit, merge damage) must
+    not crash the gate with a raw traceback, nor silently pass as if no
+    baseline existed — it is reported as ``_check_warn,malformed_baseline``
+    and excluded from comparison, same exit behavior as a missing one.
+    """
+    committed: dict = {}
+    malformed: list[str] = []
     for sec in sections:
         path = os.path.join(outdir, f"BENCH_{sec}.json")
         try:
             with open(path) as f:
-                committed[sec] = json.load(f)
-        except (OSError, json.JSONDecodeError):
+                doc = json.load(f)
+        except OSError:
             continue
-    return committed
+        except (json.JSONDecodeError, UnicodeDecodeError, ValueError):
+            malformed.append(sec)
+            continue
+        if not isinstance(doc, dict):
+            malformed.append(sec)
+            continue
+        committed[sec] = doc
+    return committed, malformed
 
 
 def check_regressions(committed: dict, fresh: dict) -> list[str]:
@@ -188,8 +209,9 @@ def check_regressions(committed: dict, fresh: dict) -> list[str]:
     each fresh section summary against the committed baseline.
 
     A regression is a makespan more than ``CHECK_TOLERANCE`` above the
-    committed value, or an SLO attainment (or pipelined-mode speedup)
-    more than ``CHECK_TOLERANCE`` below it.  Only metric paths present in
+    committed value, or an SLO attainment (or pipelined-mode speedup, or
+    the obs section's drift-recovery ratio) more than ``CHECK_TOLERANCE``
+    below it.  Only metric paths present in
     both summaries compare; the guarded sections (cluster, elastic) are
     deterministic analytic simulations, so drift means a real behavior
     change, not noise — the pipeline section's speedup is measured
@@ -217,7 +239,7 @@ def check_regressions(committed: dict, fresh: dict) -> list[str]:
                     f"{sec}: {p} regressed {old_v:.3f} -> {new_v:.3f} "
                     f"(+{(new_v / max(old_v, 1e-12) - 1) * 100:.0f}%)"
                 )
-            elif kind in ("slo_attainment", "speedup") and (
+            elif kind in ("slo_attainment", "speedup", "recovery") and (
                 new_v < old_v * (1 - CHECK_TOLERANCE)
             ):
                 problems.append(
@@ -255,7 +277,17 @@ def main() -> None:
                          "summaries against the committed BENCH_<sec>.json "
                          "baselines and exit non-zero on a >25%% makespan "
                          "or SLO-attainment regression (CI smoke gate)")
+    ap.add_argument("--log-level", default="info",
+                    choices=("debug", "info", "warning", "error"))
+    ap.add_argument("--log-json", action="store_true",
+                    help="section progress on stderr as JSON lines "
+                         "instead of text (CSV rows stay on stdout)")
     args = ap.parse_args()
+    from repro.obs import get_logger
+
+    log = get_logger(
+        "bench", level=args.log_level, json_lines=args.log_json
+    )
     tokens = args.tokens or (1 << 14 if args.quick else 1 << 16)
     repeats = 2 if args.quick else 5
     sections = (
@@ -265,13 +297,14 @@ def main() -> None:
     rows: list[str] = []
     t_start = time.time()
     stamp = provenance()
-    committed = (
+    committed, malformed = (
         load_committed(args.outdir, sections)
-        if args.check and args.outdir else {}
+        if args.check and args.outdir else ({}, [])
     )
     fresh: dict[str, dict] = {}
     for sec in sections:
         t0 = time.time()
+        log.info("section_start", section=sec, msg=f"running {sec}...")
         sec_rows: list[str] = []
         summary: dict = {
             "section": sec,
@@ -281,7 +314,9 @@ def main() -> None:
             "provenance": stamp,
         }
         try:
-            sec_rows, sec_summary = run_section(sec, tokens, repeats)
+            sec_rows, sec_summary = run_section(
+                sec, tokens, repeats, args.outdir
+            )
             if sec_summary:
                 summary["summary"] = sec_summary
         except Exception as e:  # noqa: BLE001
@@ -289,12 +324,23 @@ def main() -> None:
             summary["error"] = f"{type(e).__name__}: {e}"
             sec_rows = sec_rows or []
             sec_rows.append(f"_error,{sec},{type(e).__name__},{e}")
+            log.error(
+                "section_error", section=sec, error=summary["error"],
+                msg=f"{sec} failed: {summary['error']}",
+            )
         summary["n_rows"] = len(sec_rows)
         summary["wall_seconds"] = round(time.time() - t0, 3)
         rows += sec_rows
         fresh[sec] = summary
         if summary["status"] == "ok":
             rows.append(f"_timing,{sec},{summary['wall_seconds']:.1f}s,")
+            log.info(
+                "section_done", section=sec,
+                wall_seconds=summary["wall_seconds"],
+                n_rows=summary["n_rows"],
+                msg=f"{sec} done in {summary['wall_seconds']:.1f}s "
+                    f"({summary['n_rows']} rows)",
+            )
         if args.outdir:
             write_artifacts(args.outdir, sec, sec_rows, summary)
     rows.append(f"_timing,total,{time.time() - t_start:.1f}s,")
@@ -313,8 +359,12 @@ def main() -> None:
         # against; warn instead of silently passing so a forgotten commit
         # of the baseline artifact is visible in the check output.
         rows += [
+            f"_check_warn,malformed_baseline,{sec}" for sec in malformed
+        ]
+        rows += [
             f"_check_warn,missing_baseline,{sec}"
-            for sec in sections if sec not in committed
+            for sec in sections
+            if sec not in committed and sec not in malformed
         ]
         rows += [f"_check_fail,{p}" for p in problems]
     print("\n".join(rows))

@@ -67,6 +67,7 @@ class JobRecord:
     plan: Plan | None = None
     admitted: bool = True
     reject_reason: str | None = None
+    reject_time: float | None = None
     start: float | None = None
     finish: float | None = None
     true_time: float | None = None
@@ -78,6 +79,12 @@ class JobRecord:
     #: checkpoint/restore gaps between them hold workers but do no work),
     #: the number of regrants applied, and the total overhead paid.
     segments: list | None = None
+    #: executed wave intervals [t0, t1, kind, workers] and non-executing
+    #: holes [t0, t1, kind, workers_held] between segments (regrant /
+    #: suspended), recorded by the elastic sim for the span exporter —
+    #: together with ``segments`` they tile [start, finish] exactly.
+    waves: list | None = None
+    gaps: list | None = None
     n_regrants: int = 0
     n_suspends: int = 0
     overhead_s: float = 0.0
@@ -197,11 +204,15 @@ class TraceResult:
 class Cluster:
     """W worker slots + a runtime oracle; runs (trace, policy) -> result."""
 
-    def __init__(self, total_workers: int, oracle):
+    def __init__(self, total_workers: int, oracle, *, metrics=None):
         if total_workers < 1:
             raise ValueError("total_workers must be >= 1")
         self.total_workers = int(total_workers)
         self.oracle = oracle
+        #: optional :class:`repro.obs.metrics.ClusterMetrics` hook object;
+        #: None (the default) keeps every event unobserved at the cost of
+        #: one ``if`` per event.
+        self.metrics = metrics
 
     def run(self, jobs: list[JobSpec], policy) -> TraceResult:
         jobs = sorted(jobs, key=lambda j: (j.arrival, j.job_id))
@@ -216,6 +227,9 @@ class Cluster:
         i = 0       # next arrival index
         seq = 0     # heap tiebreak
         now = jobs[0].arrival if jobs else 0.0
+        metrics = self.metrics
+        if metrics is not None:
+            metrics.on_run_start(now)
 
         while i < len(jobs) or pending or running:
             next_arrival = jobs[i].arrival if i < len(jobs) else math.inf
@@ -232,12 +246,16 @@ class Cluster:
 
             while i < len(jobs) and jobs[i].arrival <= now:
                 pending.append(jobs[i])
+                if metrics is not None:
+                    metrics.on_arrival(jobs[i].arrival, jobs[i])
                 i += 1
             while running and running[0][0] <= now:
                 _, _, done_id = heapq.heappop(running)
                 rec = records[done_id]
                 rec.finish = rec.start + rec.true_time
                 free += rec.plan.workers
+                if metrics is not None:
+                    metrics.on_finish(rec.finish, rec)
                 policy.observe(rec)
 
             while pending:
@@ -248,7 +266,10 @@ class Cluster:
                     rec = records[decision.job.job_id]
                     rec.admitted = False
                     rec.reject_reason = decision.reason
+                    rec.reject_time = now
                     pending.remove(decision.job)
+                    if metrics is not None:
+                        metrics.on_reject(now, rec)
                     continue
                 if not isinstance(decision, Dispatch):
                     raise TypeError(
@@ -283,6 +304,12 @@ class Cluster:
                 free -= plan.workers
                 seq += 1
                 heapq.heappush(running, (now + rec.true_time, seq, job.job_id))
+                if metrics is not None:
+                    metrics.on_dispatch(now, rec)
+            if metrics is not None:
+                metrics.sample(
+                    now, len(pending), self.total_workers - free, 0
+                )
 
         assert free == self.total_workers, "worker accounting leaked"
         return TraceResult(

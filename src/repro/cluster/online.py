@@ -13,6 +13,8 @@ and prediction error shrinks over the trace (measured by
 
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
 from repro.core import regression
@@ -78,6 +80,7 @@ class OnlineRefiner:
         self._obs: dict[tuple[str, str], list[tuple[np.ndarray, float]]] = {}
         self._since_refit: dict[tuple[str, str], int] = {}
         self.n_refits = 0
+        self.n_drift_refits = 0
         # (app, backend, phase) -> per-phase time observations (telemetry).
         self._phase_obs: dict[
             tuple[str, str, str], list[tuple[np.ndarray, float]]
@@ -148,6 +151,69 @@ class OnlineRefiner:
         self.db.put(app, self.platform, model, backend=backend)
         self._since_refit[key] = 0
         self.n_refits += 1
+        return True
+
+    # ---- drift response (repro.obs.drift alarms) ------------------------
+
+    def refit_category(
+        self,
+        app: str,
+        category: str,
+        *,
+        keep_last: int | None = None,
+        drop_seed: bool = True,
+        scale_hint: float | None = None,
+    ) -> bool:
+        """Category-targeted refit in response to a drift alarm.
+
+        A drifted category means its historical rows — above all the
+        bootstrap seed anchors, profiled *before* the shift — now describe
+        a platform that no longer exists, so the every-completion
+        :meth:`observe` path (which keeps them as anchors) cannot recover:
+        a handful of post-shift rows never outweighs hundreds of stale
+        ones.  This method evicts the seed anchors (``drop_seed``), trims
+        the live history to the most recent ``keep_last`` rows, and refits
+        from what remains.  When too few rows survive for a determinable
+        fit, the published model's coefficient vector is rescaled by
+        ``scale_hint`` (the ledger's EWMA of realized/predicted) instead —
+        predictions are linear in ``coef``, so for the canonical
+        multiplicative platform shift this one-line correction is already
+        the right answer, available from the very first alarm.
+
+        Returns True when the database model was updated (the caller must
+        invalidate cached plans).
+        """
+        key = (app, category)
+        if drop_seed:
+            self._seed.pop(key, None)
+        if keep_last is not None and key in self._obs:
+            self._obs[key] = self._obs[key][-int(keep_last):]
+        params, times = self.training_set(app, category)
+        if params.shape[0]:
+            spec_probe = fit_feature_spec(
+                params,
+                degree=self.fit_kwargs.get("degree", 3),
+                cross_terms=self.fit_kwargs.get("cross_terms", False),
+            )
+            if params.shape[0] >= 2 * spec_probe.n_features:
+                model = regression.fit(params, times, **self.fit_kwargs)
+                self.db.put(app, self.platform, model, backend=category)
+                self._since_refit[key] = 0
+                self.n_drift_refits += 1
+                return True
+        if scale_hint is None or scale_hint <= 0:
+            return False
+        try:
+            current = self.db.get(app, self.platform, backend=category)
+        except KeyError:
+            return False
+        rescaled = dataclasses.replace(
+            current,
+            coef=np.asarray(current.coef, dtype=np.float64) * scale_hint,
+        )
+        self.db.put(app, self.platform, rescaled, backend=category)
+        self._since_refit[key] = 0
+        self.n_drift_refits += 1
         return True
 
     # ---- per-phase refinement (telemetry traces) ------------------------

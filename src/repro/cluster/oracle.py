@@ -30,6 +30,12 @@ import numpy as np
 _APP_IDS = {"wordcount": 1, "eximparse": 2}
 _BACKEND_IDS = {"jnp": 1, "pallas": 2, "xla": 3}
 
+#: job_ids at/above this mark bootstrap-profiling runs, not trace jobs —
+#: policies allocate ``PROFILE_JOB_ID + seq`` for their profiling calls,
+#: and injected platform shifts (``AnalyticOracle(shift_after_job=...)``)
+#: never apply to them: profiling always happened *before* the shift.
+PROFILE_JOB_ID = 1_000_000
+
 #: map-output pairs emitted per input token (wordcount: one pair per word;
 #: eximparse: one pair per 3-token record) — sizes the shuffle traffic.
 _PAIRS_PER_TOKEN = {"wordcount": 1.0, "eximparse": 1.0 / 3.0}
@@ -113,10 +119,37 @@ class AnalyticOracle:
     C_RED = 6.0e-6      # reduce aggregation, per token
     C_PIPE = 0.012      # per-extra-depth pipeline fill/drain overhead
 
-    def __init__(self, *, noise: float = 0.02, seed: int = 0):
+    def __init__(
+        self,
+        *,
+        noise: float = 0.02,
+        seed: int = 0,
+        shift_after_job: int | None = None,
+        shift_factor: float = 1.0,
+    ):
         self.noise = float(noise)
         self.seed = int(seed)
+        #: injected mid-trace platform shift: every trace job with
+        #: ``shift_after_job <= job_id < PROFILE_JOB_ID`` runs
+        #: ``shift_factor`` x slower (same platform string — the point is
+        #: that the *models* don't know).  Profiling job_ids are exempt:
+        #: the bootstrap ran before the platform drifted.  This is the
+        #: drift-alarm bench's ground truth (see ``repro.obs.drift``).
+        self.shift_after_job = (
+            None if shift_after_job is None else int(shift_after_job)
+        )
+        self.shift_factor = float(shift_factor)
+        if self.shift_factor <= 0:
+            raise ValueError("shift_factor must be > 0")
         self._last_call: tuple | None = None
+
+    def _shift(self, job_id: int) -> float:
+        if self.shift_after_job is None:
+            return 1.0
+        jid = int(job_id)
+        if jid < self.shift_after_job or jid >= PROFILE_JOB_ID:
+            return 1.0
+        return self.shift_factor
 
     def backends(self) -> tuple[str, ...]:
         return tuple(self.BACKENDS)
@@ -209,7 +242,7 @@ class AnalyticOracle:
             t *= self._noise_factor(
                 app, backend, mappers, reducers, workers, job_id
             )
-        return t
+        return t * self._shift(job_id)
 
     def take_trace(self):
         """Per-phase trace of the most recent :meth:`time` call (or None).
@@ -223,9 +256,9 @@ class AnalyticOracle:
         app, backend, size, M, R, W, job_id, depth, noiseless = \
             self._last_call
         phase_s = self._phase_components(app, backend, size, M, R, W)
-        factor = 1.0 if noiseless else self._noise_factor(
+        factor = (1.0 if noiseless else self._noise_factor(
             app, backend, M, R, W, job_id
-        )
+        )) * self._shift(job_id)
         overlap = (
             sum(phase_s.values()) - self._overlapped_total(phase_s, depth)
         ) * factor
@@ -270,9 +303,9 @@ class AnalyticOracle:
             app, backend, size, mappers, reducers, workers
         )
         M, R, W = int(mappers), int(reducers), int(workers)
-        factor = 1.0 if _noiseless else self._noise_factor(
+        factor = (1.0 if _noiseless else self._noise_factor(
             app, backend, M, R, W, job_id
-        )
+        )) * self._shift(job_id)
         segs: list[tuple[str, float]] = []
         map_waves_left = math.ceil(max(0, M - int(map_tasks_done)) / W)
         per_map_wave = phase_s["map"] / math.ceil(M / W)

@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.cluster.cluster import Dispatch, Plan, Reject
 from repro.cluster.online import DEFAULT_FIT_KWARGS, OnlineRefiner
+from repro.cluster.oracle import PROFILE_JOB_ID
 from repro.cluster.workload import JobSpec
 from repro.core.predictor import ModelDatabase
 from repro.core.regression import RegressionModel, fit as regression_fit
@@ -185,6 +186,7 @@ class PredictivePolicy(SchedulingPolicy):
         seed: int = 0,
         fit_kwargs: dict | None = None,
         depth_grid: tuple[int, ...] = (1,),
+        ledger=None,
     ):
         self.db = db if db is not None else ModelDatabase()
         self._backends_arg = backends
@@ -202,8 +204,22 @@ class PredictivePolicy(SchedulingPolicy):
         self.seed = seed
         self.fit_kwargs = dict(fit_kwargs or DEFAULT_FIT_KWARGS)
         self.refiner: OnlineRefiner | None = None
+        #: optional :class:`repro.obs.drift.PredictionLedger`: every
+        #: completion's (predicted, realized) pair is recorded per
+        #: category, and a drift alarm triggers a category-targeted
+        #: ``refit_category`` instead of trusting the every-completion
+        #: refit to dig the model out from under its stale seed anchors.
+        self.ledger = ledger
+        self.n_drift_alarms = 0
         self._model_version = 0
         self._plan_cache: dict = {}
+        # Drift-refit epoch, bumped per alarm-triggered refit.  Jobs in
+        # flight when a correction lands still carry pre-correction
+        # predictions; the ledger must not see those completions or every
+        # one re-alarms and the corrections compound (a 1.5x rescale
+        # applied N times).  Each plan stamps the epoch it was made under.
+        self._drift_epoch = 0
+        self._plan_drift_epoch: dict[int, int] = {}
 
     # ---- bootstrap profiling (paper Fig. 2a + 2b) -----------------------
 
@@ -251,7 +267,7 @@ class PredictivePolicy(SchedulingPolicy):
                     return oracle.time(
                         app_name, backend_name, int(row[3] * SIZE_UNIT),
                         int(row[0]), int(row[1]), int(row[2]),
-                        job_id=1_000_000 + next(profile_seq),
+                        job_id=PROFILE_JOB_ID + next(profile_seq),
                         **extra,
                     )
                 return run
@@ -293,6 +309,7 @@ class PredictivePolicy(SchedulingPolicy):
             self._plan_cache[key] = self._argmin_plan(
                 job, [w for w in self.worker_grid if w <= bucket]
             )
+        self._plan_drift_epoch[job.job_id] = self._drift_epoch
         return self._plan_cache[key]
 
     def _candidate_rows(self, job: JobSpec, w_options) -> np.ndarray:
@@ -344,6 +361,25 @@ class PredictivePolicy(SchedulingPolicy):
         refitted = self.refiner.observe(
             spec.app, cat, row, record.true_time
         )
+        if (
+            self.ledger is not None
+            and plan.predicted_time is not None
+            and self._plan_drift_epoch.get(
+                spec.job_id, self._drift_epoch
+            ) == self._drift_epoch
+        ):
+            alarm = self.ledger.record(
+                spec.app, cat, plan.predicted_time, record.true_time,
+                t=record.finish,
+            )
+            if alarm is not None:
+                self.n_drift_alarms += 1
+                self._drift_epoch += 1
+                refitted = self.refiner.refit_category(
+                    spec.app, cat,
+                    keep_last=self.ledger.keep_last,
+                    scale_hint=alarm.scale_hint,
+                ) or refitted
         if refitted:
             self._model_version += 1
             self._plan_cache.clear()

@@ -160,12 +160,18 @@ class _Running:
         R = self.rec.plan.reducers
         while self.segments:
             kind, dur = self.segments[0]
-            end = self.seg_start + dur
+            start = self.seg_start
+            end = start + dur
             if end > t:
                 break
             self.segments.pop(0)
             self.seg_start = end
             self.phase_wall[kind] = self.phase_wall.get(kind, 0.0) + dur
+            # Wave log for the span exporter: each consumed segment is one
+            # executed wave; boundaries reuse the exact event-time floats,
+            # so waves tile their execution segment with no slack.
+            if self.rec.waves is not None:
+                self.rec.waves.append([start, end, kind, self.workers])
             if kind == "map":
                 self.m_done = min(M, self.m_done + self.workers)
             elif kind == "shuffle":
@@ -195,8 +201,9 @@ class ElasticCluster(Cluster):
         *,
         snapshot_overhead_s: float = 0.02,
         restore_overhead_s: float = 0.02,
+        metrics=None,
     ):
-        super().__init__(total_workers, oracle)
+        super().__init__(total_workers, oracle, metrics=metrics)
         if not hasattr(oracle, "remaining_segments"):
             raise TypeError(
                 f"{type(oracle).__name__} cannot price partial execution; "
@@ -301,6 +308,8 @@ class ElasticCluster(Cluster):
         i = 0
         now = jobs[0].arrival if jobs else 0.0
         stalled = False  # nothing scheduled, but suspended/pending remain
+        if self.metrics is not None:
+            self.metrics.on_run_start(now)
 
         while i < len(jobs) or pending or self._running or self._suspended:
             next_arrival = jobs[i].arrival if i < len(jobs) else math.inf
@@ -335,6 +344,8 @@ class ElasticCluster(Cluster):
 
             while i < len(jobs) and jobs[i].arrival <= now:
                 pending.append(jobs[i])
+                if self.metrics is not None:
+                    self.metrics.on_arrival(jobs[i].arrival, jobs[i])
                 i += 1
             while self._events and self._events[0][0] <= now:
                 t, _, kind, job_id, epoch = heapq.heappop(self._events)
@@ -354,7 +365,10 @@ class ElasticCluster(Cluster):
                     rec = records[decision.job.job_id]
                     rec.admitted = False
                     rec.reject_reason = decision.reason
+                    rec.reject_time = now
                     pending.remove(decision.job)
+                    if self.metrics is not None:
+                        self.metrics.on_reject(now, rec)
                     continue
                 if isinstance(decision, Regrant):
                     self._request_regrant(decision, now)
@@ -394,6 +408,11 @@ class ElasticCluster(Cluster):
                             "or None"
                         )
                     self._request_regrant(action, now)
+            if self.metrics is not None:
+                self.metrics.sample(
+                    now, len(pending), self.total_workers - self._free,
+                    len(self._suspended),
+                )
 
         if self._free != self.total_workers:
             raise AssertionError("worker accounting leaked")
@@ -414,6 +433,8 @@ class ElasticCluster(Cluster):
         rec.plan = plan
         rec.start = now
         rec.segments = [[now, None, plan.workers]]
+        rec.waves = []
+        rec.gaps = []
         segments = [
             list(seg) for seg in self.oracle.remaining_segments(
                 job.app, plan.backend, job.size,
@@ -428,6 +449,8 @@ class ElasticCluster(Cluster):
         self._running[job.job_id] = rj
         self._free -= plan.workers
         self._push(rj.finish_time(), "finish", job.job_id, rj.epoch)
+        if self.metrics is not None:
+            self.metrics.on_dispatch(now, rec)
         self._check_conservation()
 
     def _request_regrant(self, action: Regrant, now: float) -> None:
@@ -494,11 +517,19 @@ class ElasticCluster(Cluster):
         rec = rj.rec
         rec.segments[-1][1] = t
         rec.segments.append([resume_t, None, new_w])
+        if rec.gaps is not None and resume_t > t:
+            # The snapshot/restore hole between segments: workers held
+            # (the post-regrant grant) but no waves execute.
+            rec.gaps.append([t, resume_t, "regrant", new_w])
         rec.n_regrants += 1
         rec.overhead_s += overhead
         rj.phase_wall["regrant"] = (
             rj.phase_wall.get("regrant", 0.0) + overhead
         )
+        if self.metrics is not None:
+            self.metrics.on_regrant(
+                t, "shrink" if new_w < old_w else "grow", overhead
+            )
         rj.segments = [
             list(seg) for seg in self.oracle.remaining_segments(
                 rj.spec.app, rec.plan.backend, rj.spec.size,
@@ -543,6 +574,9 @@ class ElasticCluster(Cluster):
         rj.pending_restore_s = restore_s
         rj.segments = []
         self._suspended[rj.spec.job_id] = rj
+        if self.metrics is not None:
+            self.metrics.on_regrant(t, "suspend", save_s)
+            self.metrics.on_suspend(t, save_s)
         self._check_conservation()
 
     def _resume(self, rj: _Running, action: Regrant, now: float) -> None:
@@ -567,6 +601,19 @@ class ElasticCluster(Cluster):
         rec.n_regrants += 1
         rec.overhead_s += restore_s
         rec.segments.append([resume_t, None, W])
+        if rec.gaps is not None:
+            # Tile the suspend hole: snapshot (no workers), disk wait
+            # (no workers), restore (the resume grant) — contiguous with
+            # the surrounding execution segments.
+            save_end = min(now, rj.suspended_at + rj.save_charged)
+            if save_end > rj.suspended_at:
+                rec.gaps.append(
+                    [rj.suspended_at, save_end, "regrant", 0]
+                )
+            if now > save_end:
+                rec.gaps.append([save_end, now, "suspended", 0])
+            if resume_t > now:
+                rec.gaps.append([now, resume_t, "regrant", W])
         rj.phase_wall["regrant"] = (
             rj.phase_wall.get("regrant", 0.0) + restore_s
         )
@@ -601,6 +648,9 @@ class ElasticCluster(Cluster):
         rj.seg_start = resume_t
         self._running[rj.spec.job_id] = rj
         self._push(rj.finish_time(), "finish", rj.spec.job_id, rj.epoch)
+        if self.metrics is not None:
+            self.metrics.on_regrant(now, "resume", restore_s)
+            self.metrics.on_resume(now, restore_s)
         self._check_conservation()
 
     def _complete(self, rj: _Running, t: float, policy) -> None:
@@ -616,6 +666,8 @@ class ElasticCluster(Cluster):
         rec.true_time = t - rec.start
         rec.segments[-1][1] = t
         rec.trace = self._synthesize_trace(rj)
+        if self.metrics is not None:
+            self.metrics.on_finish(t, rec)
         policy.observe(rec)
         self._check_conservation()
 

@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 
 from repro.cluster import (
     AnalyticOracle,
@@ -36,6 +37,13 @@ from repro.cluster import (
     get_policy,
 )
 from repro.core.predictor import ModelDatabase
+from repro.obs import (
+    ClusterMetrics,
+    PredictionLedger,
+    SpanRecorder,
+    get_logger,
+    render_slots,
+)
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -99,6 +107,26 @@ def build_parser() -> argparse.ArgumentParser:
                          "best-effort jobs to disk (grant 0) when "
                          "shrinking cannot free enough workers for a "
                          "starved deadline job")
+    ap.add_argument("--trace-out", metavar="PATH",
+                    help="export each policy's run as Chrome trace-event "
+                         "JSON (open in Perfetto / chrome://tracing); with "
+                         "several policies the policy name is suffixed "
+                         "onto the stem.  Also prints the per-worker-slot "
+                         "ASCII timeline for small clusters")
+    ap.add_argument("--metrics-out", metavar="PATH",
+                    help="write per-policy service metrics (streaming "
+                         "p50/p99 turnaround + wait, goodput, regrant "
+                         "overhead) as one JSON object keyed by policy")
+    ap.add_argument("--drift-ledger", action="store_true",
+                    help="attach a PredictionLedger to every predictive "
+                         "policy: records predicted-vs-realized per "
+                         "category, raises drift alarms, and triggers "
+                         "category-targeted refits")
+    ap.add_argument("--log-level", default="info",
+                    choices=("debug", "info", "warning", "error"))
+    ap.add_argument("--log-json", action="store_true",
+                    help="emit status lines as JSON objects (one per "
+                         "line) on stderr instead of human-readable text")
     ap.add_argument("--save-models", metavar="PATH",
                     help="persist the fitted ModelDatabase as JSON")
     ap.add_argument("--load-models", metavar="PATH",
@@ -109,8 +137,18 @@ def build_parser() -> argparse.ArgumentParser:
     return ap
 
 
+def _trace_path(base: str, policy: str, many: bool) -> str:
+    if not many:
+        return base
+    root, ext = os.path.splitext(base)
+    return f"{root}.{policy}{ext or '.json'}"
+
+
 def main(argv=None) -> None:
     args = build_parser().parse_args(argv)
+    log = get_logger(
+        "cluster", level=args.log_level, json_lines=args.log_json
+    )
     depth_grid = None
     if args.overlap_depth is not None:
         depth_grid = tuple(
@@ -128,10 +166,13 @@ def main(argv=None) -> None:
             sharded=args.oracle == "engine-sharded",
             pipelined=deep,
         )
-        print("[cluster] note: the engine oracle compiles every distinct "
-              "(app, size, backend, M, R, W) once — predictive policies' "
-              "bootstrap profiling alone is ~100+ compiles at the default "
-              "grids; keep traces tiny and grids small")
+        log.info(
+            "engine_oracle",
+            msg="note: the engine oracle compiles every distinct "
+                "(app, size, backend, M, R, W) once — predictive policies' "
+                "bootstrap profiling alone is ~100+ compiles at the default "
+                "grids; keep traces tiny and grids small",
+        )
     else:
         oracle = AnalyticOracle(noise=args.noise, seed=args.seed)
 
@@ -164,14 +205,21 @@ def main(argv=None) -> None:
         f"{'util':>5} {'SLO':>5} {'rej':>4} {'rgr':>4} {'MAE%':>6} "
         f"{'MAE% 1st→2nd half':>18} {'depths':>12}"
     )
-    print(f"[cluster] {args.jobs} jobs, {args.workers} workers, "
-          f"arrival={args.arrival}, oracle={oracle.platform}")
+    log.info(
+        "run",
+        msg=f"{args.jobs} jobs, {args.workers} workers, "
+            f"arrival={args.arrival}, oracle={oracle.platform}",
+        jobs=args.jobs, workers=args.workers, arrival=args.arrival,
+        oracle=oracle.platform,
+    )
     print(header)
     print("-" * len(header))
     all_metrics: dict[str, dict] = {}
+    service: dict[str, dict] = {}
     save_db = None
     for name in names:
         kwargs: dict = {}
+        ledger = None
         if issubclass(POLICIES[name], PredictivePolicy):
             kwargs["seed"] = args.seed
             if depth_grid is not None:
@@ -180,15 +228,42 @@ def main(argv=None) -> None:
                 kwargs["net_capacity"] = args.net_capacity
             if name == "predict-elastic" and args.suspend:
                 kwargs["suspend"] = True
+            if args.drift_ledger:
+                ledger = PredictionLedger()
+                kwargs["ledger"] = ledger
             if args.load_models:
                 # Fresh copy per policy: online refits mutate the db, and
                 # a shared instance would make the comparison depend on
                 # policy iteration order.
                 kwargs["db"] = ModelDatabase.load(args.load_models)
         policy = get_policy(name, **kwargs)
+        metrics = ClusterMetrics()
+        cluster.metrics = metrics
         result = cluster.run(jobs, policy)
         m = result.metrics()
         all_metrics[name] = m
+        service[name] = metrics.summary()
+        service[name]["drift_alarms"] = getattr(policy, "n_drift_alarms", 0)
+        if args.metrics_out:
+            all_metrics[name]["service"] = metrics.to_dict()
+            if ledger is not None:
+                all_metrics[name]["drift"] = ledger.to_dict()
+        if args.trace_out:
+            rec = SpanRecorder()
+            rec.record(result)
+            violations = rec.check()
+            if violations:
+                log.warning(
+                    "span_tiling", policy=name, n=len(violations),
+                    msg=f"{name}: {len(violations)} span-tiling "
+                        f"violations (trace still exported)",
+                )
+            path = _trace_path(args.trace_out, name, len(names) > 1)
+            rec.save_chrome(path)
+            log.info(
+                "trace_out", policy=name, path=path,
+                msg=f"{name}: wrote Chrome trace -> {path}",
+            )
 
         def f(x, nd=2):
             return "  n/a" if x is None else f"{x:.{nd}f}"
@@ -212,18 +287,57 @@ def main(argv=None) -> None:
         )
         if hasattr(policy, "db"):
             save_db = policy.db
+
+    def g(x, nd=3):
+        return "  n/a" if x is None else f"{x:.{nd}f}"
+
+    shdr = (
+        f"{'policy':<18} {'p50 trn':>8} {'p99 trn':>8} {'p50 wait':>8} "
+        f"{'p99 wait':>8} {'goodput':>9} {'rgr ovh':>8} {'alarms':>6}"
+    )
+    print("\nservice metrics (streaming quantiles):")
+    print(shdr)
+    print("-" * len(shdr))
+    for name, s in service.items():
+        print(
+            f"{name:<18} {g(s['p50_turnaround_s']):>8} "
+            f"{g(s['p99_turnaround_s']):>8} {g(s['p50_wait_s']):>8} "
+            f"{g(s['p99_wait_s']):>8} {g(s['goodput_tokens_per_s'], 0):>9} "
+            f"{g(s['regrant_overhead_total_s']):>8} "
+            f"{s['drift_alarms']:>6}"
+        )
+    if args.trace_out and args.workers <= 32:
+        print("\nper-slot timeline (last policy):")
+        print(render_slots(result))
     if args.save_models:
         if save_db is None or len(save_db) == 0:
-            print("[cluster] no fitted models to save (only baseline "
-                  "policies ran)")
+            log.warning(
+                "save_models",
+                msg="no fitted models to save (only baseline policies ran)",
+            )
         else:
             save_db.save(args.save_models)
-            print(f"[cluster] saved {len(save_db)} models -> "
-                  f"{args.save_models}")
+            log.info(
+                "save_models", n=len(save_db), path=args.save_models,
+                msg=f"saved {len(save_db)} models -> {args.save_models}",
+            )
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as fp:
+            json.dump(
+                {n: all_metrics[n] for n in names}, fp,
+                indent=1, sort_keys=True,
+            )
+        log.info(
+            "metrics_out", path=args.metrics_out,
+            msg=f"wrote service metrics -> {args.metrics_out}",
+        )
     if args.json:
         with open(args.json, "w") as fp:
             json.dump(all_metrics, fp, indent=1, sort_keys=True)
-        print(f"[cluster] wrote metrics -> {args.json}")
+        log.info(
+            "json_out", path=args.json,
+            msg=f"wrote metrics -> {args.json}",
+        )
 
 
 if __name__ == "__main__":

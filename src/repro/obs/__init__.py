@@ -1,0 +1,67 @@
+"""Cluster-wide observability: spans, service metrics, drift alarms.
+
+The paper's method *is* observation — profiling runs feed the regression
+that predicts total time — but PR 3's :class:`~repro.telemetry.JobTrace`
+only ever sees one job.  This package is the cluster-wide layer on top:
+
+    log.py     — leveled structured logging (text or JSON-lines), the
+                 replacement for bare ``print`` in long sim runs
+    metrics.py — counters / gauges / deterministic P² streaming-quantile
+                 histograms + the ``ClusterMetrics`` hook object the
+                 simulators call at event granularity (p50/p99 turnaround,
+                 wait, goodput, regrant overhead)
+    spans.py   — ``SpanRecorder``: the causal tree cluster-run → job →
+                 segment → wave/phase assembled from data the sims already
+                 produce, exported as Chrome trace-event JSON (Perfetto)
+                 with per-worker-slot tracks and counter tracks
+    drift.py   — ``PredictionLedger``: every oracle estimate recorded
+                 against the realized wall per (app, backend, depth)
+                 category; EWMA absolute-relative-error raises a
+                 ``DriftAlarm`` that :class:`~repro.cluster.online.
+                 OnlineRefiner.refit_category` consumes
+
+Everything here is strictly opt-in: ``Cluster(..., metrics=None)`` is the
+default and costs one ``if`` per event; the engine's fused mode is never
+touched (span assembly is post-hoc, from completed :class:`JobRecord`\\ s).
+"""
+
+from repro.obs.log import LEVELS, Logger, get_logger
+from repro.obs.metrics import (
+    ClusterMetrics,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    P2Quantile,
+)
+from repro.obs.spans import (
+    Span,
+    SpanRecorder,
+    build_span_tree,
+    check_span_tiling,
+    render_slots,
+    to_chrome_trace,
+    validate_chrome_trace,
+)
+from repro.obs.drift import DriftAlarm, PredictionLedger
+
+__all__ = [
+    "LEVELS",
+    "Logger",
+    "get_logger",
+    "ClusterMetrics",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "P2Quantile",
+    "Span",
+    "SpanRecorder",
+    "build_span_tree",
+    "check_span_tiling",
+    "render_slots",
+    "to_chrome_trace",
+    "validate_chrome_trace",
+    "DriftAlarm",
+    "PredictionLedger",
+]

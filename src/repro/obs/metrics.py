@@ -1,0 +1,341 @@
+"""Streaming service metrics: counters, gauges, P² quantile histograms.
+
+The ROADMAP's continuous-service item needs p50/p99 turnaround and goodput
+under overload — order statistics over an *unbounded* completion stream.
+:class:`Histogram` tracks them with the P² algorithm (Jain & Chlamtac,
+CACM 1985): five markers per target quantile, updated per observation with
+a parabolic interpolation, O(1) memory and — crucially for the bench
+regression gate — fully deterministic: the same observation sequence
+always yields the same estimate, so committed p50/p99 values are
+comparable across PRs.  Below five observations the exact interpolated
+order statistic is returned, so small sims report textbook quantiles.
+
+:class:`ClusterMetrics` is the hook object the simulators call: construct
+one, pass it as ``Cluster(..., metrics=...)``, and every scheduling event
+(arrival / dispatch / finish / reject / regrant / suspend / resume) lands
+in the registry, plus an event-granularity sample of queue depth, busy
+workers and suspended jobs.  With ``metrics=None`` (the default) the sims
+pay one ``if`` per event and nothing else.
+"""
+
+from __future__ import annotations
+
+import json
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "P2Quantile",
+    "ClusterMetrics",
+]
+
+
+class Counter:
+    """Monotonic event count."""
+
+    __slots__ = ("name", "value")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0.0
+
+    def inc(self, amount: float = 1.0) -> None:
+        if amount < 0:
+            raise ValueError(f"counter {self.name}: negative increment")
+        self.value += amount
+
+    def to_dict(self) -> float:
+        return self.value
+
+
+class Gauge:
+    """Last-value gauge with an optional (t, value) series.
+
+    ``set(v, t=...)`` appends a series point; consecutive points with the
+    same value collapse (event loops sample densely, series stay small).
+    """
+
+    __slots__ = ("name", "value", "series")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = None
+        self.series: list[tuple[float, float]] = []
+
+    def set(self, value: float, t: float | None = None) -> None:
+        self.value = float(value)
+        if t is not None:
+            if self.series and self.series[-1][1] == self.value:
+                return
+            self.series.append((float(t), self.value))
+
+    def to_dict(self) -> dict:
+        return {
+            "value": self.value,
+            "series": [[t, v] for t, v in self.series],
+        }
+
+
+class P2Quantile:
+    """One streaming quantile estimate via the P² marker algorithm."""
+
+    def __init__(self, p: float):
+        if not 0.0 < p < 1.0:
+            raise ValueError(f"quantile p must be in (0, 1), got {p}")
+        self.p = float(p)
+        self.count = 0
+        self._initial: list[float] = []   # first five observations, sorted
+        self._q: list[float] = []         # marker heights
+        self._n: list[float] = []         # marker positions (1-based)
+        self._np: list[float] = []        # desired positions
+        self._dn = [0.0, p / 2.0, p, (1.0 + p) / 2.0, 1.0]
+
+    def add(self, x: float) -> None:
+        x = float(x)
+        self.count += 1
+        if self.count <= 5:
+            self._initial.append(x)
+            self._initial.sort()
+            if self.count == 5:
+                p = self.p
+                self._q = list(self._initial)
+                self._n = [1.0, 2.0, 3.0, 4.0, 5.0]
+                self._np = [1.0, 1.0 + 2.0 * p, 1.0 + 4.0 * p,
+                            3.0 + 2.0 * p, 5.0]
+            return
+        q, n = self._q, self._n
+        if x < q[0]:
+            q[0] = x
+            k = 0
+        elif x >= q[4]:
+            q[4] = x
+            k = 3
+        else:
+            k = 0
+            for i in range(1, 5):
+                if x < q[i]:
+                    k = i - 1
+                    break
+        for i in range(k + 1, 5):
+            n[i] += 1.0
+        for i in range(5):
+            self._np[i] += self._dn[i]
+        for i in (1, 2, 3):
+            d = self._np[i] - n[i]
+            if (d >= 1.0 and n[i + 1] - n[i] > 1.0) or (
+                d <= -1.0 and n[i - 1] - n[i] < -1.0
+            ):
+                s = 1.0 if d > 0 else -1.0
+                cand = self._parabolic(i, s)
+                if not (q[i - 1] < cand < q[i + 1]):
+                    cand = self._linear(i, s)
+                q[i] = cand
+                n[i] += s
+
+    def _parabolic(self, i: int, d: float) -> float:
+        q, n = self._q, self._n
+        return q[i] + d / (n[i + 1] - n[i - 1]) * (
+            (n[i] - n[i - 1] + d) * (q[i + 1] - q[i]) / (n[i + 1] - n[i])
+            + (n[i + 1] - n[i] - d) * (q[i] - q[i - 1]) / (n[i] - n[i - 1])
+        )
+
+    def _linear(self, i: int, d: float) -> float:
+        j = i + int(d)
+        q, n = self._q, self._n
+        return q[i] + d * (q[j] - q[i]) / (n[j] - n[i])
+
+    @property
+    def value(self) -> float | None:
+        """Current estimate: exact (interpolated) below five observations,
+        the P² center marker afterwards.  None before any observation."""
+        if self.count == 0:
+            return None
+        if self.count <= 5:
+            xs = self._initial
+            h = (len(xs) - 1) * self.p
+            lo = int(h)
+            hi = min(lo + 1, len(xs) - 1)
+            return xs[lo] + (h - lo) * (xs[hi] - xs[lo])
+        return self._q[2]
+
+
+class Histogram:
+    """Count / sum / min / max plus P² estimates at target quantiles."""
+
+    def __init__(self, name: str, quantiles: tuple[float, ...] = (0.5, 0.99)):
+        self.name = name
+        self.count = 0
+        self.sum = 0.0
+        self.min: float | None = None
+        self.max: float | None = None
+        self._quantiles = {float(p): P2Quantile(p) for p in quantiles}
+
+    def observe(self, x: float) -> None:
+        x = float(x)
+        self.count += 1
+        self.sum += x
+        self.min = x if self.min is None else min(self.min, x)
+        self.max = x if self.max is None else max(self.max, x)
+        for est in self._quantiles.values():
+            est.add(x)
+
+    def quantile(self, p: float) -> float | None:
+        return self._quantiles[float(p)].value
+
+    @property
+    def mean(self) -> float | None:
+        return self.sum / self.count if self.count else None
+
+    def to_dict(self) -> dict:
+        return {
+            "count": self.count,
+            "sum": self.sum,
+            "mean": self.mean,
+            "min": self.min,
+            "max": self.max,
+            "quantiles": {
+                f"{p:g}": est.value for p, est in self._quantiles.items()
+            },
+        }
+
+
+class MetricsRegistry:
+    """Named counters / gauges / histograms, create-on-first-use."""
+
+    def __init__(self):
+        self.counters: dict[str, Counter] = {}
+        self.gauges: dict[str, Gauge] = {}
+        self.histograms: dict[str, Histogram] = {}
+
+    def counter(self, name: str) -> Counter:
+        if name not in self.counters:
+            self.counters[name] = Counter(name)
+        return self.counters[name]
+
+    def gauge(self, name: str) -> Gauge:
+        if name not in self.gauges:
+            self.gauges[name] = Gauge(name)
+        return self.gauges[name]
+
+    def histogram(
+        self, name: str, quantiles: tuple[float, ...] = (0.5, 0.99)
+    ) -> Histogram:
+        if name not in self.histograms:
+            self.histograms[name] = Histogram(name, quantiles)
+        return self.histograms[name]
+
+    def to_dict(self) -> dict:
+        return {
+            "counters": {k: c.to_dict() for k, c in self.counters.items()},
+            "gauges": {k: g.to_dict() for k, g in self.gauges.items()},
+            "histograms": {
+                k: h.to_dict() for k, h in self.histograms.items()
+            },
+        }
+
+
+#: the quantiles every ClusterMetrics histogram tracks.
+DEFAULT_QUANTILES = (0.5, 0.9, 0.99)
+
+
+class ClusterMetrics:
+    """The hook object ``Cluster``/``ElasticCluster`` drive at event
+    granularity.  All hooks are cheap pure-Python accounting; the sims
+    guard every call behind ``if self.metrics is not None``."""
+
+    def __init__(self, quantiles: tuple[float, ...] = DEFAULT_QUANTILES):
+        self.registry = MetricsRegistry()
+        r = self.registry
+        self.turnaround = r.histogram("turnaround_s", quantiles)
+        self.wait = r.histogram("wait_s", quantiles)
+        self.regrant_overhead = r.histogram("regrant_overhead_s", quantiles)
+        self._t0: float | None = None
+        self._t_last: float | None = None
+        self._tokens_done = 0.0
+
+    # ---- run lifecycle ---------------------------------------------------
+
+    def on_run_start(self, t: float) -> None:
+        self._t0 = float(t)
+
+    def sample(
+        self, now: float, queue_depth: int, busy_workers: int,
+        suspended_jobs: int,
+    ) -> None:
+        """Event-granularity gauge sample (queue / busy / suspended)."""
+        r = self.registry
+        r.gauge("queue_depth").set(queue_depth, t=now)
+        r.gauge("busy_workers").set(busy_workers, t=now)
+        r.gauge("suspended_jobs").set(suspended_jobs, t=now)
+        self._t_last = float(now)
+
+    # ---- per-event hooks -------------------------------------------------
+
+    def on_arrival(self, now: float, job) -> None:
+        self.registry.counter("jobs_arrived").inc()
+
+    def on_dispatch(self, now: float, rec) -> None:
+        self.registry.counter("jobs_dispatched").inc()
+        if rec.wait is not None:
+            self.wait.observe(rec.wait)
+
+    def on_finish(self, now: float, rec) -> None:
+        r = self.registry
+        r.counter("jobs_completed").inc()
+        if rec.turnaround is not None:
+            self.turnaround.observe(rec.turnaround)
+        self._tokens_done += float(rec.spec.size)
+        r.counter("tokens_completed").inc(float(rec.spec.size))
+        if self._t0 is not None and now > self._t0:
+            r.gauge("goodput_tokens_per_s").set(
+                self._tokens_done / (now - self._t0), t=now
+            )
+
+    def on_reject(self, now: float, rec) -> None:
+        self.registry.counter("jobs_rejected").inc()
+
+    def on_regrant(self, now: float, kind: str, overhead_s: float) -> None:
+        r = self.registry
+        r.counter("n_regrants").inc()
+        r.counter(f"n_regrants_{kind}").inc()
+        self.regrant_overhead.observe(overhead_s)
+
+    def on_suspend(self, now: float, save_s: float) -> None:
+        self.registry.counter("n_suspends").inc()
+
+    def on_resume(self, now: float, restore_s: float) -> None:
+        self.registry.counter("n_resumes").inc()
+
+    # ---- export ----------------------------------------------------------
+
+    def summary(self) -> dict:
+        """The service-metric scalars the launch CLI tabulates."""
+        r = self.registry
+        elapsed = (
+            (self._t_last - self._t0)
+            if self._t0 is not None and self._t_last is not None
+            and self._t_last > self._t0 else None
+        )
+        return {
+            "jobs_completed": r.counter("jobs_completed").value,
+            "jobs_rejected": r.counter("jobs_rejected").value,
+            "p50_turnaround_s": self.turnaround.quantile(0.5),
+            "p99_turnaround_s": self.turnaround.quantile(0.99),
+            "p50_wait_s": self.wait.quantile(0.5),
+            "p99_wait_s": self.wait.quantile(0.99),
+            "goodput_tokens_per_s": (
+                self._tokens_done / elapsed if elapsed else None
+            ),
+            "n_regrants": r.counter("n_regrants").value,
+            "n_suspends": r.counter("n_suspends").value,
+            "regrant_overhead_total_s": self.regrant_overhead.sum,
+        }
+
+    def to_dict(self) -> dict:
+        return {"summary": self.summary(), **self.registry.to_dict()}
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as fp:
+            json.dump(self.to_dict(), fp, indent=1, sort_keys=True)

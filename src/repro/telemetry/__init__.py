@@ -21,6 +21,7 @@ cluster policy (shuffle-bytes-aware dispatch).
 
 from repro.telemetry.trace import (
     PAIR_BYTES,
+    TRACE_SCHEMA_VERSION,
     JobTrace,
     PhaseRecorder,
     PhaseStats,
@@ -44,6 +45,7 @@ from repro.telemetry.models import (
 
 __all__ = [
     "PAIR_BYTES",
+    "TRACE_SCHEMA_VERSION",
     "JobTrace",
     "PhaseRecorder",
     "PhaseStats",

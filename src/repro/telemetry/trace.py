@@ -31,6 +31,7 @@ of violations (empty = healthy); the per-backend property tests in
 from __future__ import annotations
 
 import dataclasses
+import json
 import time
 from typing import Iterable
 
@@ -41,11 +42,18 @@ from repro.mapreduce.phases import PAIR_BYTES
 
 __all__ = [
     "PAIR_BYTES",
+    "TRACE_SCHEMA_VERSION",
     "PhaseStats",
     "JobTrace",
     "PhaseRecorder",
     "collect_traced",
 ]
+
+#: serialized-trace schema version.  Bump on breaking shape changes;
+#: ``JobTrace.from_json`` refuses versions it does not understand instead
+#: of silently misparsing them (traces now outlive the process — the span
+#: exporter and bench artifacts persist them).
+TRACE_SCHEMA_VERSION = 1
 
 
 @dataclasses.dataclass
@@ -190,6 +198,7 @@ class JobTrace:
 
     def to_dict(self) -> dict:
         return {
+            "schema": TRACE_SCHEMA_VERSION,
             "app": self.app,
             "config": dict(self.config),
             "total_s": self.total_s,
@@ -198,6 +207,14 @@ class JobTrace:
 
     @staticmethod
     def from_dict(d: dict) -> "JobTrace":
+        # Pre-schema dicts (PR 3 era) carry no version marker; they are
+        # shape-identical to version 1, so they load as version 1.
+        version = int(d.get("schema", 1))
+        if not 1 <= version <= TRACE_SCHEMA_VERSION:
+            raise ValueError(
+                f"unsupported trace schema version {version}; this build "
+                f"reads versions 1..{TRACE_SCHEMA_VERSION}"
+            )
         return JobTrace(
             app=d["app"],
             config=dict(d["config"]),
@@ -211,6 +228,21 @@ class JobTrace:
                 for p in d.get("phases", ())
             ],
         )
+
+    def to_json(self, **dumps_kwargs) -> str:
+        """Serialize (with the ``schema`` version field) to a JSON string."""
+        dumps_kwargs.setdefault("sort_keys", True)
+        return json.dumps(self.to_dict(), **dumps_kwargs)
+
+    @staticmethod
+    def from_json(s: str) -> "JobTrace":
+        d = json.loads(s)
+        if not isinstance(d, dict):
+            raise ValueError(
+                f"serialized trace must be a JSON object, got "
+                f"{type(d).__name__}"
+            )
+        return JobTrace.from_dict(d)
 
 
 class PhaseRecorder:

@@ -1,0 +1,540 @@
+"""Observability layer: spans, streaming metrics, drift, logging.
+
+Four pillars under test:
+
+* the P² streaming quantiles are accurate and deterministic (the bench
+  gate compares committed p50/p99 values bit-for-bit);
+* the span tree tiles every job's turnaround *exactly* — base-cluster,
+  pipelined (negative-wall overlap phase), and elastic suspend-to-disk
+  runs alike — and the Chrome export is well-formed with no two jobs
+  sharing a worker slot at the same instant;
+* the prediction ledger alarms on sustained category drift, stays silent
+  on pathological single-sample ratios, and its scale hint drives
+  ``OnlineRefiner.refit_category`` to an actually corrected model;
+* trace serialization round-trips with a schema version and refuses
+  versions it does not understand.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import io
+import json
+
+import numpy as np
+import pytest
+
+from repro.cluster import (
+    AnalyticOracle,
+    Cluster,
+    assign_deadlines,
+    generate_workload,
+    get_policy,
+)
+from repro.cluster.cluster import JobRecord, Plan, TraceResult
+from repro.cluster.workload import JobSpec
+from repro.elastic import ElasticCluster
+from repro.obs import (
+    ClusterMetrics,
+    Logger,
+    P2Quantile,
+    PredictionLedger,
+    SpanRecorder,
+    build_span_tree,
+    check_span_tiling,
+    render_slots,
+    to_chrome_trace,
+    validate_chrome_trace,
+)
+from repro.telemetry import TRACE_SCHEMA_VERSION, JobTrace
+
+
+# --------------------------------------------------------------- quantiles
+
+
+class TestP2Quantile:
+    def test_exact_below_five(self):
+        q = P2Quantile(0.5)
+        for x in (5.0, 1.0, 3.0):
+            q.add(x)
+        assert q.value == 3.0
+
+    @pytest.mark.parametrize("p", [0.5, 0.9, 0.99])
+    def test_accuracy_vs_numpy(self, p):
+        rng = np.random.default_rng(42)
+        xs = rng.lognormal(0.0, 0.7, size=5000)
+        q = P2Quantile(p)
+        for x in xs:
+            q.add(x)
+        exact = float(np.quantile(xs, p))
+        assert abs(q.value - exact) / exact < 0.08
+
+    def test_deterministic(self):
+        rng = np.random.default_rng(3)
+        xs = rng.normal(10.0, 2.0, size=500)
+        a, b = P2Quantile(0.99), P2Quantile(0.99)
+        for x in xs:
+            a.add(x)
+            b.add(x)
+        assert a.value == b.value
+
+    def test_rejects_degenerate_p(self):
+        with pytest.raises(ValueError):
+            P2Quantile(0.0)
+        with pytest.raises(ValueError):
+            P2Quantile(1.0)
+
+
+class TestClusterMetrics:
+    def test_base_cluster_summary(self):
+        oracle = AnalyticOracle(noise=0.02, seed=3)
+        jobs = generate_workload(
+            12, seed=3, mean_interarrival=0.1, size_range=(1 << 14, 1 << 16)
+        )
+        metrics = ClusterMetrics()
+        cluster = Cluster(8, oracle, metrics=metrics)
+        result = cluster.run(jobs, get_policy("fifo-static"))
+        s = metrics.summary()
+        assert s["jobs_completed"] == len(result.completed()) == 12
+        assert s["p50_turnaround_s"] > 0
+        assert s["p99_turnaround_s"] >= s["p50_turnaround_s"]
+        assert s["goodput_tokens_per_s"] > 0
+        # Gauges sampled at event granularity, series non-empty.
+        g = metrics.registry.gauge("queue_depth")
+        assert g.series and g.value == 0  # drained at run end
+
+    def test_metrics_optional_and_equal_schedule(self):
+        """metrics=None (default) must not change the schedule."""
+        def run(metrics):
+            oracle = AnalyticOracle(noise=0.02, seed=4)
+            jobs = generate_workload(
+                10, seed=4, mean_interarrival=0.1,
+                size_range=(1 << 14, 1 << 16),
+            )
+            cluster = Cluster(6, oracle, metrics=metrics)
+            r = cluster.run(jobs, get_policy("fifo-static"))
+            return [(rec.spec.job_id, rec.start, rec.finish)
+                    for rec in r.records]
+
+        assert run(None) == run(ClusterMetrics())
+
+    def test_elastic_regrant_counters(self):
+        oracle = AnalyticOracle(noise=0.02, seed=7)
+        jobs = generate_workload(
+            30, seed=7, arrival="bursty", mean_interarrival=0.08,
+            size_range=(1 << 14, 1 << 18),
+        )
+        jobs = assign_deadlines(
+            jobs, lambda j: oracle.nominal_time(j.app, j.size),
+            slack_range=(1.1, 2.2), fraction=0.5, seed=8,
+        )
+        metrics = ClusterMetrics()
+        cluster = ElasticCluster(
+            8, oracle, snapshot_overhead_s=0.02, restore_overhead_s=0.02,
+            metrics=metrics,
+        )
+        result = cluster.run(
+            jobs, get_policy("predict-elastic", seed=7, suspend=True)
+        )
+        s = metrics.summary()
+        assert s["n_regrants"] == result.metrics()["n_regrants"] > 0
+        assert s["n_suspends"] > 0
+        assert s["regrant_overhead_total_s"] > 0
+
+
+# ------------------------------------------------------------------- spans
+
+
+def _base_result(n_jobs=15, workers=8, seed=5):
+    oracle = AnalyticOracle(noise=0.02, seed=seed)
+    jobs = generate_workload(
+        n_jobs, seed=seed, mean_interarrival=0.1,
+        size_range=(1 << 14, 1 << 17),
+    )
+    return Cluster(workers, oracle).run(jobs, get_policy("fifo-static"))
+
+
+def _elastic_suspend_result(seed=7):
+    oracle = AnalyticOracle(noise=0.02, seed=seed)
+    jobs = generate_workload(
+        30, seed=seed, arrival="bursty", mean_interarrival=0.08,
+        size_range=(1 << 14, 1 << 18),
+    )
+    jobs = assign_deadlines(
+        jobs, lambda j: oracle.nominal_time(j.app, j.size),
+        slack_range=(1.1, 2.2), fraction=0.5, seed=seed + 1,
+    )
+    cluster = ElasticCluster(
+        8, oracle, snapshot_overhead_s=0.02, restore_overhead_s=0.02
+    )
+    return cluster.run(
+        jobs, get_policy("predict-elastic", seed=seed, suspend=True)
+    )
+
+
+class TestSpanTiling:
+    def test_base_run_tiles_exactly(self):
+        result = _base_result()
+        root = build_span_tree(result)
+        assert check_span_tiling(root) == []
+        # Every job span's children really do sum to its turnaround.
+        for job in root.children:
+            total = sum(c.wall_s for c in job.children)
+            assert total == pytest.approx(job.wall_s, rel=1e-9, abs=1e-12)
+
+    def test_elastic_suspend_run_tiles_exactly(self):
+        result = _elastic_suspend_result()
+        root = build_span_tree(result)
+        assert check_span_tiling(root) == []
+        kinds = {
+            s.name for s in root.walk() if s.cat == "gap"
+        }
+        assert "suspended" in kinds, "suspend-to-disk gap must be spanned"
+        # A suspended job's wait + segments + gaps tile its turnaround.
+        suspended = [
+            j for j in root.children if j.args.get("n_suspends", 0) > 0
+        ]
+        assert suspended
+        for job in suspended:
+            total = sum(c.wall_s for c in job.children)
+            assert total == pytest.approx(job.wall_s, rel=1e-6)
+
+    def test_negative_wall_pipeline_phase(self):
+        """The pipelined mode's overlap phase has negative wall; it must
+        participate in the tiling sum signed and export as an instant."""
+        trace = JobTrace(app="wordcount", config={})
+        trace.record_phase("map", 0.6)
+        trace.record_phase("shuffle_reduce", 0.5)
+        trace.record_phase("pipeline", -0.1, overlap_depth=2)
+        spec = JobSpec(job_id=0, app="wordcount", size=1 << 14, arrival=0.0)
+        rec = JobRecord(
+            spec=spec,
+            plan=Plan(backend="jnp", mappers=4, reducers=4, workers=2,
+                      predicted_time=1.0, depth=2),
+            start=0.5, finish=1.5, true_time=1.0, trace=trace,
+        )
+        result = TraceResult(policy="synthetic", total_workers=2,
+                             records=[rec])
+        root = build_span_tree(result)
+        assert check_span_tiling(root) == []
+        job = root.children[0]
+        # wait 0.5 + phases (0.6 + 0.5 - 0.1) = 1.5 = turnaround.
+        assert sum(c.wall_s for c in job.children) == pytest.approx(1.5)
+        doc = to_chrome_trace(result)
+        assert validate_chrome_trace(doc) == []
+        instants = [e for e in doc["traceEvents"] if e["ph"] == "i"]
+        assert any(e["name"] == "pipeline" for e in instants)
+
+    def test_incomplete_jobs_excluded(self):
+        spec = JobSpec(job_id=1, app="wordcount", size=1 << 14, arrival=0.0)
+        rec = JobRecord(spec=spec, admitted=False, reject_reason="full")
+        done = _base_result(n_jobs=5).records
+        result = TraceResult(policy="mixed", total_workers=8,
+                             records=done + [rec])
+        root = build_span_tree(result)
+        assert len(root.children) == len(done)
+
+
+class TestChromeExport:
+    def test_valid_and_slot_exclusive(self):
+        result = _elastic_suspend_result()
+        doc = to_chrome_trace(result)
+        assert validate_chrome_trace(doc) == []
+        # No two execution events may overlap on one worker slot.
+        by_slot: dict = {}
+        for e in doc["traceEvents"]:
+            if e["ph"] == "X" and e["pid"] == 1 and e.get("cat") == "slot":
+                by_slot.setdefault(e["tid"], []).append(
+                    (e["ts"], e["ts"] + e["dur"])
+                )
+        assert by_slot, "expected pid-1 slot events"
+        for tid, spans in by_slot.items():
+            spans.sort()
+            for (a0, a1), (b0, b1) in zip(spans, spans[1:]):
+                assert a1 <= b0 + 1, f"slot {tid} overlap: {a1} > {b0}"
+
+    def test_counter_tracks_present(self):
+        doc = to_chrome_trace(_elastic_suspend_result())
+        counters = {
+            e["name"] for e in doc["traceEvents"] if e["ph"] == "C"
+        }
+        assert {"queue_depth", "busy_workers", "suspended_jobs"} <= counters
+
+    def test_recorder_roundtrip(self, tmp_path):
+        rec = SpanRecorder()
+        rec.record(_base_result(n_jobs=6))
+        assert rec.check() == []
+        assert rec.validate() == []
+        path = tmp_path / "run.trace.json"
+        rec.save_chrome(str(path))
+        doc = json.loads(path.read_text())
+        assert validate_chrome_trace(doc) == []
+
+    def test_render_slots_ascii(self):
+        out = render_slots(_base_result(n_jobs=6, workers=4), width=40)
+        lines = out.splitlines()
+        assert any(line.startswith("slot ") for line in lines)
+        assert all(len(line) <= 100 for line in lines)
+
+
+# ------------------------------------------------------------------- drift
+
+
+class TestPredictionLedger:
+    def test_alarm_fires_and_rearms(self):
+        led = PredictionLedger(alpha=0.5, threshold=0.25, min_samples=3)
+        alarms = [
+            led.record("app", "jnp", predicted=1.0, realized=1.6, t=float(i))
+            for i in range(6)
+        ]
+        fired = [a for a in alarms if a is not None]
+        assert fired, "sustained 1.6x drift must alarm"
+        first = fired[0]
+        assert first.n >= 3
+        assert 1.3 < first.scale_hint < 1.9
+        # Re-armed: the state restarts counting after each alarm.
+        assert led.ewma_error("app", "jnp") is None or first is not None
+        assert len(fired) >= 2  # persistent drift keeps alarming
+
+    def test_accurate_predictions_never_alarm(self):
+        led = PredictionLedger()
+        for i in range(50):
+            assert led.record(
+                "app", "jnp", predicted=1.0, realized=1.02, t=float(i)
+            ) is None
+        assert not led.alarms
+
+    def test_pathological_ratio_is_outlier_not_alarm(self):
+        """A floored/clamped prediction (realized/predicted ~ 400x) must
+        not poison the EWMAs — it carries no scale information."""
+        led = PredictionLedger(min_samples=1)
+        for i in range(10):
+            a = led.record(
+                "app", "jnp", predicted=0.001, realized=0.4, t=float(i)
+            )
+            assert a is None
+        assert led.n_outliers == 10
+        assert led.ewma_error("app", "jnp") is None
+        # ...but the pairs are still retained for reporting.
+        assert led.category_mae_pct("app", "jnp") is not None
+
+    def test_ratio_clip_validation(self):
+        with pytest.raises(ValueError):
+            PredictionLedger(ratio_clip=(1.5, 4.0))
+        with pytest.raises(ValueError):
+            PredictionLedger(ratio_clip=(0.5, 0.9))
+
+    def test_to_dict(self):
+        led = PredictionLedger()
+        led.record("app", "jnp", 1.0, 1.6)
+        d = led.to_dict()
+        assert d["n_records"] == 1
+        assert "app/jnp" in d["categories"]
+
+
+class TestRefitCategory:
+    def _policy_with_models(self):
+        """Bootstrap a predictive policy so its db holds real models."""
+        oracle = AnalyticOracle(noise=0.02, seed=11)
+        jobs = generate_workload(
+            4, seed=11, mean_interarrival=0.5,
+            size_range=(1 << 14, 1 << 16), apps=("wordcount",),
+        )
+        policy = get_policy("predict-sjf", seed=11)
+        Cluster(8, oracle).run(jobs, policy)
+        return policy
+
+    def test_scale_hint_rescales_predictions(self):
+        policy = self._policy_with_models()
+        refiner = policy.refiner
+        app, cat = "wordcount", policy.categories[0]
+        before = refiner.db.get(app, policy.platform, backend=cat)
+        row = np.asarray([[8.0, 8.0, 4.0, 1.0]])
+        from repro.cluster.policies import _np_predict
+
+        p_before = float(_np_predict(before, row)[0])
+        assert refiner.refit_category(
+            app, cat, keep_last=4, scale_hint=2.0
+        )
+        after = refiner.db.get(app, policy.platform, backend=cat)
+        p_after = float(_np_predict(after, row)[0])
+        assert p_after == pytest.approx(2.0 * p_before, rel=1e-9)
+        assert refiner.n_drift_refits == 1
+
+    def test_no_hint_no_rows_returns_false(self):
+        policy = self._policy_with_models()
+        assert not policy.refiner.refit_category(
+            "wordcount", policy.categories[0], scale_hint=None
+        )
+
+    def test_drift_alarms_trigger_refits_end_to_end(self):
+        oracle = AnalyticOracle(
+            noise=0.02, seed=7, shift_after_job=20, shift_factor=2.0
+        )
+        jobs = generate_workload(
+            60, seed=7, mean_interarrival=0.3,
+            size_range=(1 << 14, 1 << 16),
+        )
+        ledger = PredictionLedger()
+        policy = get_policy("predict-sjf", seed=7, ledger=ledger)
+        Cluster(12, oracle).run(jobs, policy)
+        assert policy.n_drift_alarms > 0
+        assert policy.refiner.n_drift_refits > 0
+        assert len(ledger.alarms) == policy.n_drift_alarms
+
+
+class TestOracleShift:
+    def test_shift_applies_mid_trace_only(self):
+        plain = AnalyticOracle(noise=0.0, seed=1)
+        shifted = AnalyticOracle(
+            noise=0.0, seed=1, shift_after_job=30, shift_factor=1.6
+        )
+        kw = dict(mappers=8, reducers=8, workers=4)
+        t_pre = plain.time("wordcount", "jnp", 1 << 15, job_id=5, **kw)
+        assert shifted.time(
+            "wordcount", "jnp", 1 << 15, job_id=5, **kw
+        ) == pytest.approx(t_pre)
+        assert shifted.time(
+            "wordcount", "jnp", 1 << 15, job_id=30, **kw
+        ) == pytest.approx(1.6 * t_pre)
+
+    def test_profiling_jobs_exempt(self):
+        from repro.cluster.oracle import PROFILE_JOB_ID
+
+        shifted = AnalyticOracle(
+            noise=0.0, seed=1, shift_after_job=0, shift_factor=3.0
+        )
+        plain = AnalyticOracle(noise=0.0, seed=1)
+        kw = dict(mappers=8, reducers=8, workers=4)
+        assert shifted.time(
+            "wordcount", "jnp", 1 << 15, job_id=PROFILE_JOB_ID + 1, **kw
+        ) == pytest.approx(
+            plain.time(
+                "wordcount", "jnp", 1 << 15, job_id=PROFILE_JOB_ID + 1, **kw
+            )
+        )
+
+
+# ----------------------------------------------------------- serialization
+
+
+class TestTraceSchema:
+    def _trace(self):
+        t = JobTrace(app="wordcount", config={"mappers": 4, "input_len": 9})
+        t.record_phase("map", 0.25, pairs_emitted=12)
+        t.record_phase("shuffle", 0.1, bytes_in=96, bytes_out=96,
+                       bytes_dropped=0, pairs_in=12, pairs_out=12,
+                       pairs_dropped=0)
+        t.finish(0.35)
+        return t
+
+    def test_round_trip(self):
+        t = self._trace()
+        s = t.to_json()
+        back = JobTrace.from_json(s)
+        assert back.to_dict() == t.to_dict()
+        assert json.loads(s)["schema"] == TRACE_SCHEMA_VERSION
+
+    def test_legacy_dict_without_schema_loads(self):
+        d = self._trace().to_dict()
+        del d["schema"]
+        assert JobTrace.from_dict(d).app == "wordcount"
+
+    def test_unsupported_version_rejected(self):
+        d = self._trace().to_dict()
+        d["schema"] = TRACE_SCHEMA_VERSION + 1
+        with pytest.raises(ValueError, match="schema version"):
+            JobTrace.from_dict(d)
+
+    def test_non_object_json_rejected(self):
+        with pytest.raises(ValueError, match="JSON object"):
+            JobTrace.from_json("[1, 2, 3]")
+
+
+class TestMalformedBaseline:
+    def test_load_committed_reports_malformed(self, tmp_path):
+        from benchmarks.run import load_committed
+
+        good = {"status": "ok", "summary": {"makespan_s": 1.0}}
+        (tmp_path / "BENCH_cluster.json").write_text(json.dumps(good))
+        (tmp_path / "BENCH_elastic.json").write_text('{"status": "ok", ')
+        (tmp_path / "BENCH_obs.json").write_text('["not", "a", "dict"]')
+        committed, malformed = load_committed(
+            str(tmp_path), ["cluster", "elastic", "obs", "pipeline"]
+        )
+        assert set(committed) == {"cluster"}
+        assert sorted(malformed) == ["elastic", "obs"]
+
+    def test_gate_survives_malformed_baseline(self, tmp_path):
+        """End-to-end: --check over a truncated baseline must warn, not
+        crash with a raw traceback."""
+        from benchmarks.run import check_regressions, load_committed
+
+        (tmp_path / "BENCH_obs.json").write_text('{"truncated...')
+        committed, malformed = load_committed(str(tmp_path), ["obs"])
+        assert malformed == ["obs"]
+        # Malformed baselines are excluded from comparison entirely.
+        assert check_regressions(committed, {"obs": {"status": "ok"}}) == []
+
+
+# ----------------------------------------------------------------- logging
+
+
+class TestLogger:
+    def test_text_mode(self):
+        buf = io.StringIO()
+        log = Logger("sim", stream=buf)
+        log.info("dispatch", msg="job 3 started", workers=4)
+        assert buf.getvalue() == "[sim] job 3 started workers=4\n"
+
+    def test_json_mode(self):
+        buf = io.StringIO()
+        log = Logger("sim", json_lines=True, stream=buf)
+        log.warning("regrant", job_id=3, overhead_s=0.02)
+        rec = json.loads(buf.getvalue())
+        assert rec == {
+            "logger": "sim", "level": "warning", "event": "regrant",
+            "job_id": 3, "overhead_s": 0.02,
+        }
+
+    def test_level_filtering(self):
+        buf = io.StringIO()
+        log = Logger("sim", level="warning", stream=buf)
+        log.debug("noise")
+        log.info("noise")
+        assert buf.getvalue() == ""
+        log.error("boom")
+        assert "boom" in buf.getvalue()
+
+    def test_rejects_unknown_level(self):
+        with pytest.raises(ValueError):
+            Logger("sim", level="verbose")
+        with pytest.raises(ValueError):
+            Logger("sim").log("chatty", "event")
+
+
+# ------------------------------------------------------------- determinism
+
+
+class TestDeterminism:
+    def test_metrics_deterministic_across_runs(self):
+        def once():
+            oracle = AnalyticOracle(noise=0.02, seed=9)
+            jobs = generate_workload(
+                15, seed=9, mean_interarrival=0.1,
+                size_range=(1 << 14, 1 << 16),
+            )
+            m = ClusterMetrics()
+            Cluster(8, oracle, metrics=m).run(jobs, get_policy("fifo-static"))
+            return m.summary()
+
+        a, b = once(), once()
+        assert a == b
+
+    def test_chrome_export_deterministic(self):
+        docs = [
+            json.dumps(to_chrome_trace(_base_result(n_jobs=8)),
+                       sort_keys=True)
+            for _ in range(2)
+        ]
+        assert docs[0] == docs[1]
