@@ -5,7 +5,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast test-elastic test-plan bench-quick bench-backends \
 	bench-cluster bench-phases bench-elastic bench-pipeline bench-obs \
-	bench-check trace-demo lint
+	bench-service bench-check trace-demo lint
 
 # Tier-1 verify (ROADMAP.md).
 test:
@@ -69,6 +69,12 @@ bench-pipeline:
 # recovery experiment (lands run.trace.json / metrics.json artifacts).
 bench-obs:
 	$(PYTHON) -m benchmarks.run --quick --sections obs
+
+# Just the service section: SLO burn-rate overload control vs a static
+# admission cap on a flash-crowd stream (lands service.trace.json /
+# service.prom artifacts; gated on p99 turnaround + SLO-good goodput).
+bench-service:
+	$(PYTHON) -m benchmarks.run --quick --sections service
 
 # Small committed example trace: a contended elastic run with
 # suspend-to-disk, exported as Chrome trace-event JSON + service metrics.

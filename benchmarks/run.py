@@ -15,6 +15,10 @@ Sections (CSV rows on stdout):
   obs     — beyond-paper: span-tiling validation + drift-alarm-triggered
             refits recovering prediction MAE after a mid-trace platform
             shift (also lands run.trace.json / metrics.json artifacts)
+  service — beyond-paper: flash-crowd service stream; burn-rate overload
+            control must strictly beat a static admission cap on both
+            p99 turnaround and SLO-good goodput (also lands
+            service.trace.json / service.prom artifacts)
   roofline— §Roofline table from the dry-run artifacts
   kernels — per-kernel microbench (us/call, interpret mode)
 
@@ -44,7 +48,7 @@ import time
 
 ALL_SECTIONS = (
     "table1", "fig3", "fig4", "tuner", "backends", "phases", "cluster",
-    "elastic", "pipeline", "obs", "roofline", "kernels",
+    "elastic", "pipeline", "obs", "service", "roofline", "kernels",
 )
 
 
@@ -150,6 +154,9 @@ def run_section(sec: str, tokens: int, repeats: int, outdir: str = ""):
     if sec == "obs":
         from benchmarks import obs_bench
         return obs_bench.main(tokens, repeats, outdir=outdir or None)
+    if sec == "service":
+        from benchmarks import service_bench
+        return service_bench.main(tokens, repeats, outdir=outdir or None)
     if sec == "roofline":
         from benchmarks import roofline
         return roofline.main(), None
@@ -168,7 +175,8 @@ def _walk_metrics(summary, path=""):
         for k, v in summary.items():
             p = f"{path}.{k}" if path else str(k)
             if k in (
-                "makespan_s", "slo_attainment", "speedup", "recovery"
+                "makespan_s", "slo_attainment", "speedup", "recovery",
+                "p99_turnaround_s", "goodput",
             ) and isinstance(v, (int, float)):
                 yield p, k, float(v)
             else:
@@ -208,10 +216,11 @@ def check_regressions(committed: dict, fresh: dict) -> list[str]:
     """Compare guarded metrics (makespan_s / slo_attainment / speedup) of
     each fresh section summary against the committed baseline.
 
-    A regression is a makespan more than ``CHECK_TOLERANCE`` above the
-    committed value, or an SLO attainment (or pipelined-mode speedup, or
-    the obs section's drift-recovery ratio) more than ``CHECK_TOLERANCE``
-    below it.  Only metric paths present in
+    A regression is a makespan (or the service section's p99 turnaround)
+    more than ``CHECK_TOLERANCE`` above the committed value, or an SLO
+    attainment (or pipelined-mode speedup, the obs section's
+    drift-recovery ratio, or the service section's SLO-good goodput)
+    more than ``CHECK_TOLERANCE`` below it.  Only metric paths present in
     both summaries compare; the guarded sections (cluster, elastic) are
     deterministic analytic simulations, so drift means a real behavior
     change, not noise — the pipeline section's speedup is measured
@@ -234,14 +243,16 @@ def check_regressions(committed: dict, fresh: dict) -> list[str]:
             if p not in new_metrics:
                 continue
             new_v = new_metrics[p][1]
-            if kind == "makespan_s" and new_v > old_v * (1 + CHECK_TOLERANCE):
+            if kind in ("makespan_s", "p99_turnaround_s") and (
+                new_v > old_v * (1 + CHECK_TOLERANCE)
+            ):
                 problems.append(
                     f"{sec}: {p} regressed {old_v:.3f} -> {new_v:.3f} "
                     f"(+{(new_v / max(old_v, 1e-12) - 1) * 100:.0f}%)"
                 )
-            elif kind in ("slo_attainment", "speedup", "recovery") and (
-                new_v < old_v * (1 - CHECK_TOLERANCE)
-            ):
+            elif kind in (
+                "slo_attainment", "speedup", "recovery", "goodput"
+            ) and new_v < old_v * (1 - CHECK_TOLERANCE):
                 problems.append(
                     f"{sec}: {p} regressed {old_v:.3f} -> {new_v:.3f} "
                     f"(-{(1 - new_v / max(old_v, 1e-12)) * 100:.0f}%)"

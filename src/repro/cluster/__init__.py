@@ -5,6 +5,9 @@ make smarter decisions; this package is that scheduler.  Layering:
 
     workload.py — deterministic heterogeneous job traces (arrival
                   processes, log-uniform sizes, optional deadlines)
+    streams.py  — open-ended arrival streams for service mode (diurnal /
+                  bursty / flash-crowd rates, Poisson thinning,
+                  ``JobStream``) consumed by ``Cluster.run_service``
     oracle.py   — "true" runtime sources: AnalyticOracle (closed-form,
                   Hadoop-shaped, per-job deterministic noise) and
                   EngineOracle (wall-clocks the live MapReduce engine)
@@ -29,6 +32,16 @@ from repro.cluster.cluster import (
     TraceResult,
 )
 from repro.cluster.online import OnlineRefiner
+from repro.cluster.streams import (
+    JobStream,
+    PoissonProcess,
+    RenewalProcess,
+    constant_rate,
+    diurnal_rate,
+    flash_crowd_rate,
+    merge_processes,
+    take,
+)
 from repro.cluster.oracle import AnalyticOracle, EngineOracle
 from repro.cluster.policies import (
     POLICIES,
@@ -60,19 +73,27 @@ __all__ = [
     "EngineOracle",
     "JobRecord",
     "JobSpec",
+    "JobStream",
     "OnlineRefiner",
     "POLICIES",
     "Plan",
+    "PoissonProcess",
     "PredictedSJF",
     "PredictiveFIFO",
     "PredictivePolicy",
     "Reject",
+    "RenewalProcess",
     "ResourceAware",
     "SchedulingPolicy",
     "StaticFIFO",
     "TraceResult",
     "assign_deadlines",
+    "constant_rate",
+    "diurnal_rate",
+    "flash_crowd_rate",
     "generate_workload",
     "get_policy",
+    "merge_processes",
     "register_policy",
+    "take",
 ]

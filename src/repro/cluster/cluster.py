@@ -201,6 +201,59 @@ class TraceResult:
         }
 
 
+class _JobSource:
+    """Peekable, order-validated view over a (possibly unbounded) JobSpec
+    iterator — the arrival side of the event loops.  Finite traces wrap a
+    sorted list; service mode wraps an open-ended stream bounded by a
+    horizon, and the loop materializes one arrival of lookahead at a
+    time instead of the whole trace."""
+
+    __slots__ = ("_it", "_next", "_seen", "_last_arrival")
+
+    def __init__(self, jobs):
+        self._it = iter(jobs)
+        self._seen: set[int] = set()
+        self._last_arrival = -math.inf
+        self._next: JobSpec | None = None
+        self._advance()
+
+    def _advance(self) -> None:
+        nxt = next(self._it, None)
+        if nxt is not None:
+            if nxt.job_id in self._seen:
+                raise ValueError("duplicate job_id in trace")
+            if nxt.arrival < self._last_arrival:
+                raise ValueError(
+                    f"job {nxt.job_id} arrives at {nxt.arrival:.6f}, "
+                    "before its predecessor — streams must be time-ordered"
+                )
+            self._seen.add(nxt.job_id)
+            self._last_arrival = nxt.arrival
+        self._next = nxt
+
+    def peek(self) -> JobSpec | None:
+        return self._next
+
+    def pop(self) -> JobSpec:
+        job = self._next
+        self._advance()
+        return job
+
+
+def _bounded(stream, until_time, until_jobs):
+    """Cut an open-ended stream at the service horizon: stop *admitting*
+    after ``until_jobs`` arrivals or the first arrival past
+    ``until_time`` (whichever comes first); the sim then drains."""
+    n = 0
+    for job in stream:
+        if until_jobs is not None and n >= until_jobs:
+            return
+        if until_time is not None and job.arrival > until_time:
+            return
+        n += 1
+        yield job
+
+
 class Cluster:
     """W worker slots + a runtime oracle; runs (trace, policy) -> result."""
 
@@ -218,21 +271,92 @@ class Cluster:
         jobs = sorted(jobs, key=lambda j: (j.arrival, j.job_id))
         if len({j.job_id for j in jobs}) != len(jobs):
             raise ValueError("duplicate job_id in trace")
-        records = {j.job_id: JobRecord(spec=j) for j in jobs}
-        policy.prepare(self, sorted({j.app for j in jobs}))
+        return self._run(jobs, policy, sorted({j.app for j in jobs}))
+
+    def run_service(
+        self,
+        stream,
+        policy,
+        *,
+        until_time: float | None = None,
+        until_jobs: int | None = None,
+        apps: list[str] | None = None,
+        health_every: float | None = None,
+        on_health=None,
+    ) -> TraceResult:
+        """Serve an open-ended arrival stream up to a horizon, then drain.
+
+        ``stream`` is any time-ordered iterable of :class:`JobSpec`
+        (see :mod:`repro.cluster.streams`); arrivals stop at
+        ``until_time`` sim seconds and/or after ``until_jobs`` arrivals —
+        at least one bound is required — and jobs already admitted run to
+        completion.  Jobs are materialized incrementally (one of
+        lookahead), so memory tracks the *live* set, not the horizon.
+        ``apps`` defaults to the stream's ``apps`` attribute (needed for
+        ``policy.prepare`` before any job exists).  Every
+        ``health_every`` sim seconds ``on_health(now, snapshot)`` fires
+        with queue/worker/suspension gauges — the CLI's periodic health
+        table and the natural place to read windowed SLO metrics.
+        """
+        if until_time is None and until_jobs is None:
+            raise ValueError(
+                "run_service needs until_time and/or until_jobs — an "
+                "unbounded service never returns"
+            )
+        if apps is None:
+            apps = list(getattr(stream, "apps", ()) or ())
+        if not apps:
+            raise ValueError(
+                "run_service needs the app universe up front: pass "
+                "apps=[...] or use a stream with an .apps attribute"
+            )
+        if health_every is not None and health_every <= 0:
+            raise ValueError("health_every must be > 0")
+        return self._run(
+            _bounded(stream, until_time, until_jobs), policy, sorted(apps),
+            health_every=health_every, on_health=on_health,
+        )
+
+    def _health_snapshot(
+        self, now: float, pending, free: int, suspended: int = 0
+    ) -> dict:
+        snap = {
+            "t": now,
+            "queue_depth": len(pending),
+            "busy_workers": self.total_workers - free,
+            "free_workers": free,
+            "suspended_jobs": suspended,
+        }
+        if self.metrics is not None:
+            windowed = self.metrics.windowed_summary(now)
+            if windowed is not None:
+                snap["windowed"] = windowed
+        return snap
+
+    def _run(
+        self, jobs, policy, apps, *, health_every=None, on_health=None
+    ) -> TraceResult:
+        source = _JobSource(jobs)
+        records: dict[int, JobRecord] = {}
+        order: list[int] = []         # job_ids in arrival order
+        policy.prepare(self, apps)
 
         pending: list[JobSpec] = []   # arrived, not yet dispatched (FIFO order)
         running: list[tuple[float, int, int]] = []  # (finish, seq, job_id)
         free = self.total_workers
-        i = 0       # next arrival index
         seq = 0     # heap tiebreak
-        now = jobs[0].arrival if jobs else 0.0
+        first = source.peek()
+        now = first.arrival if first is not None else 0.0
+        next_health = (
+            now + health_every if health_every is not None else None
+        )
         metrics = self.metrics
         if metrics is not None:
             metrics.on_run_start(now)
 
-        while i < len(jobs) or pending or running:
-            next_arrival = jobs[i].arrival if i < len(jobs) else math.inf
+        while source.peek() is not None or pending or running:
+            nxt = source.peek()
+            next_arrival = nxt.arrival if nxt is not None else math.inf
             next_finish = running[0][0] if running else math.inf
             if pending and not running and next_arrival == math.inf:
                 # Nothing can ever free workers or arrive: the policy has
@@ -244,11 +368,13 @@ class Cluster:
                 )
             now = min(next_arrival, next_finish)
 
-            while i < len(jobs) and jobs[i].arrival <= now:
-                pending.append(jobs[i])
+            while (nxt := source.peek()) is not None and nxt.arrival <= now:
+                job = source.pop()
+                records[job.job_id] = JobRecord(spec=job)
+                order.append(job.job_id)
+                pending.append(job)
                 if metrics is not None:
-                    metrics.on_arrival(jobs[i].arrival, jobs[i])
-                i += 1
+                    metrics.on_arrival(job.arrival, job)
             while running and running[0][0] <= now:
                 _, _, done_id = heapq.heappop(running)
                 rec = records[done_id]
@@ -310,10 +436,17 @@ class Cluster:
                 metrics.sample(
                     now, len(pending), self.total_workers - free, 0
                 )
+            if next_health is not None and now >= next_health:
+                if on_health is not None:
+                    on_health(
+                        now, self._health_snapshot(now, pending, free)
+                    )
+                while next_health <= now:
+                    next_health += health_every
 
         assert free == self.total_workers, "worker accounting leaked"
         return TraceResult(
             policy=policy.name,
             total_workers=self.total_workers,
-            records=[records[j.job_id] for j in jobs],
+            records=[records[job_id] for job_id in order],
         )

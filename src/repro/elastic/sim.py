@@ -64,6 +64,7 @@ from repro.cluster.cluster import (
     JobRecord,
     Reject,
     TraceResult,
+    _JobSource,
 )
 from repro.cluster.workload import JobSpec
 from repro.elastic.regrant import WorkProgress
@@ -296,7 +297,14 @@ class ElasticCluster(Cluster):
         jobs = sorted(jobs, key=lambda j: (j.arrival, j.job_id))
         if len({j.job_id for j in jobs}) != len(jobs):
             raise ValueError("duplicate job_id in trace")
-        records = {j.job_id: JobRecord(spec=j) for j in jobs}
+        return self._run(jobs, policy, sorted({j.app for j in jobs}))
+
+    def _run(
+        self, jobs, policy, apps, *, health_every=None, on_health=None
+    ) -> TraceResult:
+        source = _JobSource(jobs)
+        records: dict[int, JobRecord] = {}
+        order: list[int] = []
         pending: list[JobSpec] = []
         self._running: dict[int, _Running] = {}
         self._suspended: dict[int, _Running] = {}
@@ -304,15 +312,22 @@ class ElasticCluster(Cluster):
         #: event heap: (time, seq, kind, job_id, epoch)
         self._events: list[tuple[float, int, str, int, int]] = []
         self._seq = 0
-        policy.prepare(self, sorted({j.app for j in jobs}))
-        i = 0
-        now = jobs[0].arrival if jobs else 0.0
+        policy.prepare(self, apps)
+        first = source.peek()
+        now = first.arrival if first is not None else 0.0
+        next_health = (
+            now + health_every if health_every is not None else None
+        )
         stalled = False  # nothing scheduled, but suspended/pending remain
         if self.metrics is not None:
             self.metrics.on_run_start(now)
 
-        while i < len(jobs) or pending or self._running or self._suspended:
-            next_arrival = jobs[i].arrival if i < len(jobs) else math.inf
+        while (
+            source.peek() is not None or pending
+            or self._running or self._suspended
+        ):
+            nxt = source.peek()
+            next_arrival = nxt.arrival if nxt is not None else math.inf
             next_event = self._events[0][0] if self._events else math.inf
             if (
                 (pending or self._suspended) and not self._running
@@ -342,11 +357,13 @@ class ElasticCluster(Cluster):
                 stalled = False
                 now = min(next_arrival, next_event)
 
-            while i < len(jobs) and jobs[i].arrival <= now:
-                pending.append(jobs[i])
+            while (nxt := source.peek()) is not None and nxt.arrival <= now:
+                job = source.pop()
+                records[job.job_id] = JobRecord(spec=job)
+                order.append(job.job_id)
+                pending.append(job)
                 if self.metrics is not None:
-                    self.metrics.on_arrival(jobs[i].arrival, jobs[i])
-                i += 1
+                    self.metrics.on_arrival(job.arrival, job)
             while self._events and self._events[0][0] <= now:
                 t, _, kind, job_id, epoch = heapq.heappop(self._events)
                 rj = self._running.get(job_id)
@@ -413,13 +430,23 @@ class ElasticCluster(Cluster):
                     now, len(pending), self.total_workers - self._free,
                     len(self._suspended),
                 )
+            if next_health is not None and now >= next_health:
+                if on_health is not None:
+                    on_health(
+                        now,
+                        self._health_snapshot(
+                            now, pending, self._free, len(self._suspended)
+                        ),
+                    )
+                while next_health <= now:
+                    next_health += health_every
 
         if self._free != self.total_workers:
             raise AssertionError("worker accounting leaked")
         return TraceResult(
             policy=policy.name,
             total_workers=self.total_workers,
-            records=[records[j.job_id] for j in jobs],
+            records=[records[job_id] for job_id in order],
         )
 
     # ------------------------------------------------------------- actions

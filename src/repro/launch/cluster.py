@@ -18,29 +18,57 @@ where the ``predict-elastic`` policy may preempt running jobs at wave
 boundaries and shrink/grow their worker grants (``--ckpt-overhead`` /
 ``--restore-overhead`` price each move); other policies run unchanged on
 the elastic simulator, so the comparison stays apples-to-apples.
+
+``--service`` switches from draining a fixed trace to *serving* an
+open-ended arrival stream (``--stream flash|diurnal|bursty|constant``)
+until ``--duration`` sim seconds and/or ``--until-jobs`` arrivals::
+
+    PYTHONPATH=src python -m repro.launch.cluster \
+        --service --elastic --duration 900 --stream flash \
+        --slo-p99 6 --admission burn,static --health-every 60
+
+Each ``--admission`` arm (``burn`` = SLO burn-rate overload control,
+``static`` = fixed queue cap, ``none`` = admit everything) serves the
+identical stream; a health line prints every ``--health-every`` sim
+seconds with queue/worker gauges and the windowed p99, and the final
+table compares exact p99 turnaround and SLO-good goodput per arm.
+``--metrics-out x.prom`` writes Prometheus text exposition instead of
+JSON (both modes).
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import math
 import os
 
 from repro.cluster import (
     AnalyticOracle,
     Cluster,
     EngineOracle,
+    JobStream,
     POLICIES,
+    PoissonProcess,
     PredictivePolicy,
+    RenewalProcess,
     assign_deadlines,
+    constant_rate,
+    diurnal_rate,
+    flash_crowd_rate,
     generate_workload,
     get_policy,
 )
 from repro.core.predictor import ModelDatabase
 from repro.obs import (
     ClusterMetrics,
+    ControlledPolicy,
+    OverloadController,
     PredictionLedger,
+    SLOMonitor,
+    SLOPolicy,
     SpanRecorder,
+    StaticAdmission,
     get_logger,
     render_slots,
 )
@@ -122,6 +150,56 @@ def build_parser() -> argparse.ArgumentParser:
                          "policy: records predicted-vs-realized per "
                          "category, raises drift alarms, and triggers "
                          "category-targeted refits")
+    svc = ap.add_argument_group(
+        "service mode", "serve an open-ended arrival stream instead of "
+        "draining a fixed trace; see module docstring for an example"
+    )
+    svc.add_argument("--service", action="store_true",
+                     help="run in service mode: jobs come from --stream "
+                          "until --duration / --until-jobs, admission is "
+                          "per --admission, and a health line prints "
+                          "every --health-every sim seconds")
+    svc.add_argument("--duration", type=float, default=None,
+                     help="service horizon in sim seconds (arrivals stop "
+                          "here; admitted jobs drain to completion)")
+    svc.add_argument("--until-jobs", type=int, default=None,
+                     help="stop the stream after this many arrivals "
+                          "(composes with --duration: first bound wins)")
+    svc.add_argument("--stream", default="flash",
+                     choices=("constant", "diurnal", "bursty", "flash"),
+                     help="arrival process: constant/diurnal/flash are "
+                          "Poisson (flash = diurnal base hit by --crowd "
+                          "windows), bursty is the renewal process")
+    svc.add_argument("--rate", type=float, default=0.85,
+                     help="base arrival rate, jobs/s")
+    svc.add_argument("--crowd", type=float, nargs=3, action="append",
+                     metavar=("T0", "T1", "FACTOR"), default=None,
+                     help="flash-crowd window: rate multiplies by FACTOR "
+                          "for t in [T0, T1); repeatable (default: one "
+                          "4.5x crowd at 120..200 s)")
+    svc.add_argument("--admission", default="burn,static",
+                     help="comma list of admission arms to serve the "
+                          "same stream: burn (SLO burn-rate overload "
+                          "control), static (fixed queue cap), none")
+    svc.add_argument("--slo-p99", type=float, default=6.0,
+                     help="SLO: good = turnaround within this, seconds")
+    svc.add_argument("--slo-objective", type=float, default=0.95,
+                     help="fraction of completions that must be good")
+    svc.add_argument("--queue-floor", type=int, default=4,
+                     help="burn arm sheds queued jobs down to this depth "
+                          "while the alarm is tripped")
+    svc.add_argument("--static-cap", type=int, default=12,
+                     help="static arm rejects arrivals beyond this "
+                          "queue depth, alarm or no alarm")
+    svc.add_argument("--health-every", type=float, default=60.0,
+                     help="health-line period, sim seconds (0 disables)")
+    svc.add_argument("--window", type=float, default=60.0,
+                     help="sliding-window width for the windowed "
+                          "p50/p99/rate gauges in health lines")
+    svc.add_argument("--retain-jobs", type=int, default=None,
+                     help="with --trace-out: SpanRecorder ring retention "
+                          "— keep spans for only the last N completed "
+                          "jobs (default: keep everything)")
     ap.add_argument("--log-level", default="info",
                     choices=("debug", "info", "warning", "error"))
     ap.add_argument("--log-json", action="store_true",
@@ -142,6 +220,230 @@ def _trace_path(base: str, policy: str, many: bool) -> str:
         return base
     root, ext = os.path.splitext(base)
     return f"{root}.{policy}{ext or '.json'}"
+
+
+# --------------------------------------------------------------- service mode
+
+
+def _build_stream(args) -> JobStream:
+    """One seeded open-ended stream per --stream choice; every arm
+    re-iterates it from scratch, so all arms see the identical jobs."""
+    if args.stream == "bursty":
+        process = RenewalProcess(
+            "bursty", mean_interarrival=1.0 / args.rate, seed=args.seed
+        )
+    else:
+        if args.stream == "constant":
+            rate_fn, peak = constant_rate(args.rate), args.rate
+        else:
+            rate_fn = diurnal_rate(args.rate, amplitude=0.3, period_s=600.0)
+            peak = args.rate * 1.3
+            if args.stream == "flash":
+                crowds = [
+                    tuple(c) for c in (args.crowd or [[120.0, 200.0, 4.5]])
+                ]
+                rate_fn = flash_crowd_rate(rate_fn, crowds)
+                peak *= max(f for _, _, f in crowds)
+        process = PoissonProcess(rate_fn, peak_rate=peak, seed=args.seed)
+    return JobStream(
+        process, seed=args.seed,
+        size_range=(args.size_min, args.size_max),
+    )
+
+
+def _service_arm(kind: str, args, inner):
+    """(policy, controller, monitor) for one --admission arm."""
+    if kind == "none":
+        return inner, None, None
+    if kind == "static":
+        ctrl = StaticAdmission(args.static_cap)
+        return ControlledPolicy(inner, ctrl), ctrl, None
+    if kind == "burn":
+        monitor = SLOMonitor(
+            SLOPolicy(args.slo_p99, objective=args.slo_objective)
+        )
+        ctrl = OverloadController(monitor, queue_floor=args.queue_floor)
+        return ControlledPolicy(inner, ctrl), ctrl, monitor
+    raise SystemExit(
+        f"unknown --admission arm {kind!r}; expected burn|static|none"
+    )
+
+
+def _exact_quantile(xs, q: float):
+    """ceil-index order statistic (the convention the P² windows target)."""
+    if not xs:
+        return None
+    xs = sorted(xs)
+    return xs[min(len(xs) - 1, max(0, math.ceil(q * len(xs)) - 1))]
+
+
+def _run_service(args, oracle, log) -> None:
+    if args.duration is None and args.until_jobs is None:
+        raise SystemExit("--service needs --duration and/or --until-jobs")
+    if args.rate <= 0:
+        raise SystemExit("--rate must be > 0")
+    arms = [a.strip() for a in args.admission.split(",") if a.strip()]
+    if not arms:
+        raise SystemExit("--admission must name at least one arm")
+    inner_name = ("fifo-static" if args.policies == "all"
+                  else args.policies.split(",")[0])
+    log.info(
+        "service",
+        msg=f"serving --stream {args.stream} at base {args.rate:g} jobs/s "
+            f"on {args.workers} workers, policy {inner_name}, "
+            f"arms: {', '.join(arms)}",
+        stream=args.stream, rate=args.rate, policy=inner_name, arms=arms,
+    )
+    out: dict[str, dict] = {}
+    registries: dict[str, object] = {}
+    for kind in arms:
+        kwargs: dict = {}
+        if issubclass(POLICIES[inner_name], PredictivePolicy):
+            kwargs["seed"] = args.seed
+        policy, ctrl, monitor = _service_arm(
+            kind, args, get_policy(inner_name, **kwargs)
+        )
+        metrics = ClusterMetrics(window_s=args.window or None)
+        if args.elastic:
+            from repro.elastic import ElasticCluster
+
+            cluster = ElasticCluster(
+                args.workers, oracle,
+                snapshot_overhead_s=args.ckpt_overhead,
+                restore_overhead_s=args.restore_overhead,
+            )
+        else:
+            cluster = Cluster(args.workers, oracle)
+        cluster.metrics = metrics
+
+        def on_health(now, snap, kind=kind):
+            w = snap.get("windowed") or {}
+            p99 = w.get("p99_turnaround_s")
+            log.info(
+                "health", arm=kind, t=round(now, 1),
+                queue=snap["queue_depth"], busy=snap["busy_workers"],
+                suspended=snap["suspended_jobs"], windowed_p99_s=p99,
+                msg=f"[{kind:>6}] t={now:8.1f}  "
+                    f"queue={snap['queue_depth']:>3}  "
+                    f"busy={snap['busy_workers']:>2}/{args.workers}  "
+                    f"susp={snap['suspended_jobs']}  win p99="
+                    f"{'n/a' if p99 is None else format(p99, '.2f') + 's'}",
+            )
+
+        result = cluster.run_service(
+            _build_stream(args), policy,
+            until_time=args.duration, until_jobs=args.until_jobs,
+            health_every=args.health_every or None,
+            on_health=on_health if args.health_every else None,
+        )
+
+        done = [r for r in result.records if r.completed]
+        turn = [r.turnaround for r in done]
+        good = [r for r in done if r.turnaround <= args.slo_p99]
+        t0 = min((r.spec.arrival for r in result.records), default=0.0)
+        t_end = max((r.finish for r in done), default=t0)
+        alarms = monitor.alarms if monitor is not None else []
+        for a in alarms:
+            log.info(
+                "alarm", arm=kind, transition=a.event, t=round(a.t, 2),
+                msg=f"[{kind:>6}] {a.event:<5} at t={a.t:8.1f}  "
+                    f"burn fast={a.burn_fast:.2f} slow={a.burn_slow:.2f}",
+            )
+        out[kind] = {
+            "arm": policy.name,
+            "n_arrived": len(result.records),
+            "n_completed": len(done),
+            "n_rejected": sum(
+                1 for r in result.records if not r.admitted
+            ),
+            "n_good": len(good),
+            "p50_turnaround_s": _exact_quantile(turn, 0.5),
+            "p99_turnaround_s": _exact_quantile(turn, 0.99),
+            # SLO-good tokens per second: completions that blew the
+            # target spent capacity without serving anyone in time.
+            "goodput_tokens_per_s": (
+                sum(r.spec.size for r in good) / (t_end - t0)
+                if t_end > t0 else None
+            ),
+            "n_sheds": (
+                sum(1 for a in ctrl.log if a.action == "shed")
+                if ctrl is not None else 0
+            ),
+            "n_suspends": (
+                sum(1 for a in ctrl.log if a.action == "suspend")
+                if ctrl is not None else 0
+            ),
+            "n_alarms": len(alarms),
+            "budget_remaining_frac": (
+                monitor.budget()["remaining_frac"]
+                if monitor is not None else None
+            ),
+            "service": metrics.summary(),
+        }
+        registries[kind] = metrics.registry
+        if args.trace_out:
+            rec = SpanRecorder(max_jobs=args.retain_jobs)
+            rec.record(
+                result,
+                control_log=ctrl.log if ctrl is not None else None,
+            )
+            violations = rec.check()
+            if violations:
+                log.warning(
+                    "span_tiling", arm=kind, n=len(violations),
+                    msg=f"{kind}: {len(violations)} span-tiling "
+                        f"violations (trace still exported)",
+                )
+            path = _trace_path(args.trace_out, kind, len(arms) > 1)
+            rec.save_chrome(path)
+            log.info(
+                "trace_out", arm=kind, path=path,
+                msg=f"{kind}: wrote Chrome trace -> {path}",
+            )
+
+    def f(x, nd=2):
+        return "n/a" if x is None else f"{x:.{nd}f}"
+
+    hdr = (
+        f"{'arm':<30} {'done':>5} {'rej':>5} {'good':>5} {'p50':>7} "
+        f"{'p99':>7} {'goodput':>9} {'shed':>5} {'susp':>5} "
+        f"{'alarms':>6} {'budget':>7}"
+    )
+    print(hdr)
+    print("-" * len(hdr))
+    for kind in arms:
+        m = out[kind]
+        print(
+            f"{m['arm']:<30} {m['n_completed']:>5} {m['n_rejected']:>5} "
+            f"{m['n_good']:>5} {f(m['p50_turnaround_s']):>7} "
+            f"{f(m['p99_turnaround_s']):>7} "
+            f"{f(m['goodput_tokens_per_s'], 0):>9} {m['n_sheds']:>5} "
+            f"{m['n_suspends']:>5} {m['n_alarms']:>6} "
+            f"{f(m['budget_remaining_frac'], 3):>7}"
+        )
+    if args.metrics_out:
+        if args.metrics_out.endswith(".prom"):
+            for kind in arms:
+                path = _trace_path(args.metrics_out, kind, len(arms) > 1)
+                registries[kind].save_prom(path)
+                log.info(
+                    "metrics_out", arm=kind, path=path,
+                    msg=f"{kind}: wrote Prometheus text -> {path}",
+                )
+        else:
+            with open(args.metrics_out, "w") as fp:
+                json.dump(out, fp, indent=1, sort_keys=True)
+            log.info(
+                "metrics_out", path=args.metrics_out,
+                msg=f"wrote service metrics -> {args.metrics_out}",
+            )
+    if args.json:
+        with open(args.json, "w") as fp:
+            json.dump(out, fp, indent=1, sort_keys=True)
+        log.info(
+            "json_out", path=args.json,
+            msg=f"wrote metrics -> {args.json}",
+        )
 
 
 def main(argv=None) -> None:
@@ -175,6 +477,10 @@ def main(argv=None) -> None:
         )
     else:
         oracle = AnalyticOracle(noise=args.noise, seed=args.seed)
+
+    if args.service:
+        _run_service(args, oracle, log)
+        return
 
     jobs = generate_workload(
         args.jobs, seed=args.seed, arrival=args.arrival,
@@ -216,6 +522,7 @@ def main(argv=None) -> None:
     print("-" * len(header))
     all_metrics: dict[str, dict] = {}
     service: dict[str, dict] = {}
+    prom_registries: dict[str, object] = {}
     save_db = None
     for name in names:
         kwargs: dict = {}
@@ -245,6 +552,7 @@ def main(argv=None) -> None:
         service[name] = metrics.summary()
         service[name]["drift_alarms"] = getattr(policy, "n_drift_alarms", 0)
         if args.metrics_out:
+            prom_registries[name] = metrics.registry
             all_metrics[name]["service"] = metrics.to_dict()
             if ledger is not None:
                 all_metrics[name]["drift"] = ledger.to_dict()
@@ -322,15 +630,24 @@ def main(argv=None) -> None:
                 msg=f"saved {len(save_db)} models -> {args.save_models}",
             )
     if args.metrics_out:
-        with open(args.metrics_out, "w") as fp:
-            json.dump(
-                {n: all_metrics[n] for n in names}, fp,
-                indent=1, sort_keys=True,
+        if args.metrics_out.endswith(".prom"):
+            for name in names:
+                path = _trace_path(args.metrics_out, name, len(names) > 1)
+                prom_registries[name].save_prom(path)
+                log.info(
+                    "metrics_out", policy=name, path=path,
+                    msg=f"{name}: wrote Prometheus text -> {path}",
+                )
+        else:
+            with open(args.metrics_out, "w") as fp:
+                json.dump(
+                    {n: all_metrics[n] for n in names}, fp,
+                    indent=1, sort_keys=True,
+                )
+            log.info(
+                "metrics_out", path=args.metrics_out,
+                msg=f"wrote service metrics -> {args.metrics_out}",
             )
-        log.info(
-            "metrics_out", path=args.metrics_out,
-            msg=f"wrote service metrics -> {args.metrics_out}",
-        )
     if args.json:
         with open(args.json, "w") as fp:
             json.dump(all_metrics, fp, indent=1, sort_keys=True)

@@ -19,6 +19,15 @@ only ever sees one job.  This package is the cluster-wide layer on top:
                  category; EWMA absolute-relative-error raises a
                  ``DriftAlarm`` that :class:`~repro.cluster.online.
                  OnlineRefiner.refit_category` consumes
+    windows.py — sim-time sliding windows: bucketed P² quantiles with
+                 deterministic merge, EWMA rates, rolling sums — the
+                 "last W seconds" view service mode runs on
+    slo.py     — ``SLOMonitor``: multi-window burn-rate alarms and
+                 error-budget accounting against an ``SLOPolicy``
+    controller.py — ``OverloadController`` + ``ControlledPolicy``: the
+                 alarm→action loop (shed / suspend-to-disk / resume)
+                 with an auditable decision log, and the
+                 ``StaticAdmission`` baseline it is benchmarked against
 
 Everything here is strictly opt-in: ``Cluster(..., metrics=None)`` is the
 default and costs one ``if`` per event; the engine's fused mode is never
@@ -43,7 +52,24 @@ from repro.obs.spans import (
     to_chrome_trace,
     validate_chrome_trace,
 )
-from repro.obs.drift import DriftAlarm, PredictionLedger
+from repro.obs.drift import (
+    LEDGER_SCHEMA_VERSION,
+    DriftAlarm,
+    PredictionLedger,
+)
+from repro.obs.windows import (
+    EwmaRate,
+    RollingSum,
+    WindowedQuantile,
+    weighted_quantile,
+)
+from repro.obs.slo import BurnAlarm, SLOMonitor, SLOPolicy
+from repro.obs.controller import (
+    ControlAction,
+    ControlledPolicy,
+    OverloadController,
+    StaticAdmission,
+)
 
 __all__ = [
     "LEVELS",
@@ -63,5 +89,17 @@ __all__ = [
     "to_chrome_trace",
     "validate_chrome_trace",
     "DriftAlarm",
+    "LEDGER_SCHEMA_VERSION",
     "PredictionLedger",
+    "EwmaRate",
+    "RollingSum",
+    "WindowedQuantile",
+    "weighted_quantile",
+    "BurnAlarm",
+    "SLOMonitor",
+    "SLOPolicy",
+    "ControlAction",
+    "ControlledPolicy",
+    "OverloadController",
+    "StaticAdmission",
 ]

@@ -34,8 +34,14 @@ oscillate instead of converging.
 from __future__ import annotations
 
 import dataclasses
+import json
 
-__all__ = ["DriftAlarm", "PredictionLedger"]
+__all__ = ["DriftAlarm", "LEDGER_SCHEMA_VERSION", "PredictionLedger"]
+
+#: Serialization schema for :meth:`PredictionLedger.to_json` (same
+#: convention as ``telemetry.TRACE_SCHEMA_VERSION``): bump on breaking
+#: layout changes so old readers fail loudly instead of misparsing.
+LEDGER_SCHEMA_VERSION = 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -160,6 +166,80 @@ class PredictionLedger:
             abs(p - r) / max(abs(r), 1e-12) * 100.0 for _, p, r in entries
         ]
         return sum(errs) / len(errs)
+
+    # ---- serialization ---------------------------------------------------
+
+    def state_dict(self) -> dict:
+        """Full resumable state (unlike :meth:`to_dict`, which is a report
+        summary).  Keys are ``"app/category"`` strings; the layout is
+        versioned by the embedded ``schema`` field."""
+        return {
+            "schema": LEDGER_SCHEMA_VERSION,
+            "config": {
+                "alpha": self.alpha,
+                "threshold": self.threshold,
+                "min_samples": self.min_samples,
+                "keep_last": self.keep_last,
+                "ratio_clip": list(self.ratio_clip),
+            },
+            "n_records": self.n_records,
+            "n_outliers": self.n_outliers,
+            "state": {
+                f"{app}/{cat}": dataclasses.asdict(st)
+                for (app, cat), st in sorted(self._state.items())
+            },
+            "entries": {
+                f"{app}/{cat}": [list(e) for e in entries]
+                for (app, cat), entries in sorted(self._entries.items())
+            },
+            "alarms": [dataclasses.asdict(a) for a in self.alarms],
+        }
+
+    def to_json(self, **dumps_kwargs) -> str:
+        dumps_kwargs.setdefault("sort_keys", True)
+        return json.dumps(self.state_dict(), **dumps_kwargs)
+
+    @staticmethod
+    def from_state_dict(d: dict) -> "PredictionLedger":
+        if not isinstance(d, dict):
+            raise ValueError(
+                f"ledger state must be a dict, got {type(d).__name__}"
+            )
+        # Pre-versioning dumps carried no schema field: read them as v1.
+        version = int(d.get("schema", 1))
+        if not 1 <= version <= LEDGER_SCHEMA_VERSION:
+            raise ValueError(
+                f"unsupported ledger schema version {version}; this build "
+                f"reads versions 1..{LEDGER_SCHEMA_VERSION}"
+            )
+        cfg = d.get("config", {})
+        led = PredictionLedger(
+            alpha=cfg.get("alpha", 0.4),
+            threshold=cfg.get("threshold", 0.25),
+            min_samples=cfg.get("min_samples", 3),
+            keep_last=cfg.get("keep_last", 64),
+            ratio_clip=tuple(cfg.get("ratio_clip", (0.25, 4.0))),
+        )
+        led.n_records = int(d.get("n_records", 0))
+        led.n_outliers = int(d.get("n_outliers", 0))
+        for key, st in d.get("state", {}).items():
+            app, _, cat = key.partition("/")
+            led._state[(app, cat)] = _CatState(
+                ewma_err=st.get("ewma_err"),
+                ewma_ratio=st.get("ewma_ratio"),
+                n=int(st.get("n", 0)),
+            )
+        for key, entries in d.get("entries", {}).items():
+            app, _, cat = key.partition("/")
+            led._entries[(app, cat)] = [
+                (float(t), float(p), float(r)) for t, p, r in entries
+            ]
+        led.alarms = [DriftAlarm(**a) for a in d.get("alarms", [])]
+        return led
+
+    @staticmethod
+    def from_json(s: str) -> "PredictionLedger":
+        return PredictionLedger.from_state_dict(json.loads(s))
 
     def to_dict(self) -> dict:
         return {

@@ -21,6 +21,7 @@ pay one ``if`` per event and nothing else.
 from __future__ import annotations
 
 import json
+import re
 
 __all__ = [
     "Counter",
@@ -30,6 +31,22 @@ __all__ = [
     "P2Quantile",
     "ClusterMetrics",
 ]
+
+_PROM_NAME = re.compile(r"[^a-zA-Z0-9_:]")
+
+
+def _prom_name(name: str) -> str:
+    """Prometheus metric-name sanitization: [a-zA-Z_:][a-zA-Z0-9_:]*."""
+    name = _PROM_NAME.sub("_", name)
+    if not name or name[0].isdigit():
+        name = "_" + name
+    return name
+
+
+def _prom_value(v: float | None) -> str:
+    if v is None:
+        return "NaN"
+    return repr(float(v))
 
 
 class Counter:
@@ -235,6 +252,44 @@ class MetricsRegistry:
             },
         }
 
+    def to_prom_text(self) -> str:
+        """Prometheus text exposition (version 0.0.4) of the registry.
+
+        Counters export as ``counter``, gauges as ``gauge`` (last value;
+        the time series stays a JSON concern), histograms as ``summary``
+        — per-quantile sample lines plus ``_sum`` / ``_count``.  Output
+        is sorted by metric name so the dump is byte-stable for golden
+        tests and diffable across runs.
+        """
+        lines: list[str] = []
+        for name in sorted(self.counters):
+            n = _prom_name(name)
+            lines.append(f"# TYPE {n} counter")
+            lines.append(f"{n} {_prom_value(self.counters[name].value)}")
+        for name in sorted(self.gauges):
+            g = self.gauges[name]
+            if g.value is None:
+                continue
+            n = _prom_name(name)
+            lines.append(f"# TYPE {n} gauge")
+            lines.append(f"{n} {_prom_value(g.value)}")
+        for name in sorted(self.histograms):
+            h = self.histograms[name]
+            n = _prom_name(name)
+            lines.append(f"# TYPE {n} summary")
+            for p in sorted(h._quantiles):
+                lines.append(
+                    f'{n}{{quantile="{p:g}"}} '
+                    f"{_prom_value(h.quantile(p))}"
+                )
+            lines.append(f"{n}_sum {_prom_value(h.sum)}")
+            lines.append(f"{n}_count {h.count}")
+        return "\n".join(lines) + ("\n" if lines else "")
+
+    def save_prom(self, path: str) -> None:
+        with open(path, "w") as fp:
+            fp.write(self.to_prom_text())
+
 
 #: the quantiles every ClusterMetrics histogram tracks.
 DEFAULT_QUANTILES = (0.5, 0.9, 0.99)
@@ -245,7 +300,13 @@ class ClusterMetrics:
     granularity.  All hooks are cheap pure-Python accounting; the sims
     guard every call behind ``if self.metrics is not None``."""
 
-    def __init__(self, quantiles: tuple[float, ...] = DEFAULT_QUANTILES):
+    def __init__(
+        self,
+        quantiles: tuple[float, ...] = DEFAULT_QUANTILES,
+        *,
+        window_s: float | None = None,
+        window_buckets: int = 8,
+    ):
         self.registry = MetricsRegistry()
         r = self.registry
         self.turnaround = r.histogram("turnaround_s", quantiles)
@@ -254,6 +315,28 @@ class ClusterMetrics:
         self._t0: float | None = None
         self._t_last: float | None = None
         self._tokens_done = 0.0
+        #: service mode: sliding-window views over the last ``window_s``
+        #: sim seconds (see :mod:`repro.obs.windows`) next to the
+        #: run-lifetime aggregates above.
+        self.window_s = float(window_s) if window_s else None
+        if self.window_s:
+            from repro.obs.windows import (
+                EwmaRate,
+                RollingSum,
+                WindowedQuantile,
+            )
+
+            W, B = self.window_s, window_buckets
+            self.win_turnaround = {
+                p: WindowedQuantile(p, W, B) for p in (0.5, 0.99)
+            }
+            self.win_wait = {
+                p: WindowedQuantile(p, W, B) for p in (0.5, 0.99)
+            }
+            self.win_tokens = RollingSum(W, B)
+            self.win_queue = RollingSum(W, B)
+            self.arrival_rate = EwmaRate(W / 4.0)
+            self.completion_rate = EwmaRate(W / 4.0)
 
     # ---- run lifecycle ---------------------------------------------------
 
@@ -269,25 +352,38 @@ class ClusterMetrics:
         r.gauge("queue_depth").set(queue_depth, t=now)
         r.gauge("busy_workers").set(busy_workers, t=now)
         r.gauge("suspended_jobs").set(suspended_jobs, t=now)
+        if self.window_s:
+            self.win_queue.observe(now, queue_depth)
         self._t_last = float(now)
 
     # ---- per-event hooks -------------------------------------------------
 
     def on_arrival(self, now: float, job) -> None:
         self.registry.counter("jobs_arrived").inc()
+        if self.window_s:
+            self.arrival_rate.observe(now)
 
     def on_dispatch(self, now: float, rec) -> None:
         self.registry.counter("jobs_dispatched").inc()
         if rec.wait is not None:
             self.wait.observe(rec.wait)
+            if self.window_s:
+                for wq in self.win_wait.values():
+                    wq.observe(now, rec.wait)
 
     def on_finish(self, now: float, rec) -> None:
         r = self.registry
         r.counter("jobs_completed").inc()
         if rec.turnaround is not None:
             self.turnaround.observe(rec.turnaround)
+            if self.window_s:
+                for wq in self.win_turnaround.values():
+                    wq.observe(now, rec.turnaround)
         self._tokens_done += float(rec.spec.size)
         r.counter("tokens_completed").inc(float(rec.spec.size))
+        if self.window_s:
+            self.win_tokens.observe(now, float(rec.spec.size))
+            self.completion_rate.observe(now)
         if self._t0 is not None and now > self._t0:
             r.gauge("goodput_tokens_per_s").set(
                 self._tokens_done / (now - self._t0), t=now
@@ -310,6 +406,30 @@ class ClusterMetrics:
 
     # ---- export ----------------------------------------------------------
 
+    def windowed_summary(self, now: float | None = None) -> dict | None:
+        """Last-``window_s``-seconds view (p50/p99 turnaround + wait,
+        goodput, queue depth, arrival/completion rates); ``None`` when the
+        metrics object was built without a window.  ``now`` defaults to
+        the last sampled event time."""
+        if not self.window_s:
+            return None
+        now = self._t_last if now is None else float(now)
+        if now is None:
+            return None
+        return {
+            "window_s": self.window_s,
+            "t": now,
+            "p50_turnaround_s": self.win_turnaround[0.5].value(now),
+            "p99_turnaround_s": self.win_turnaround[0.99].value(now),
+            "p50_wait_s": self.win_wait[0.5].value(now),
+            "p99_wait_s": self.win_wait[0.99].value(now),
+            "jobs_completed": self.win_turnaround[0.99].window_count(now),
+            "goodput_tokens_per_s": self.win_tokens.rate(now),
+            "queue_depth_mean": self.win_queue.mean(now),
+            "arrival_rate_per_s": self.arrival_rate.rate(now),
+            "completion_rate_per_s": self.completion_rate.rate(now),
+        }
+
     def summary(self) -> dict:
         """The service-metric scalars the launch CLI tabulates."""
         r = self.registry
@@ -318,7 +438,7 @@ class ClusterMetrics:
             if self._t0 is not None and self._t_last is not None
             and self._t_last > self._t0 else None
         )
-        return {
+        out = {
             "jobs_completed": r.counter("jobs_completed").value,
             "jobs_rejected": r.counter("jobs_rejected").value,
             "p50_turnaround_s": self.turnaround.quantile(0.5),
@@ -332,6 +452,9 @@ class ClusterMetrics:
             "n_suspends": r.counter("n_suspends").value,
             "regrant_overhead_total_s": self.regrant_overhead.sum,
         }
+        if self.window_s:
+            out["windowed"] = self.windowed_summary()
+        return out
 
     def to_dict(self) -> dict:
         return {"summary": self.summary(), **self.registry.to_dict()}

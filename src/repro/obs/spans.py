@@ -316,8 +316,40 @@ def _counter_events(result, holds) -> list[dict]:
     return events
 
 
-def to_chrome_trace(result, *, counters: bool = True) -> dict:
-    """Export one run as Chrome trace-event JSON (Perfetto-loadable)."""
+def _control_events(control_log) -> list[dict]:
+    """pid 3 "slo control": one instant event per audited control action
+    (trip/clear/shed/suspend/resume) plus burn-rate counter tracks, so the
+    overload-control storyline reads directly under the worker timeline."""
+    events = [
+        _ev("process_name", "M", 0, 3, 0, args={"name": "slo control"}),
+        _ev("thread_name", "M", 0, 3, 0, args={"name": "decisions"}),
+    ]
+    for a in control_log:
+        name = (a.action if a.job_id is None
+                else f"{a.action} job {a.job_id}")
+        events.append(_ev(
+            name, "i", a.t, 3, 0, s="t",
+            args={
+                "action": a.action, "job_id": a.job_id,
+                "reason": a.reason,
+                "burn_fast": round(a.burn_fast, 6),
+                "burn_slow": round(a.burn_slow, 6),
+            },
+        ))
+        for track, value in (
+            ("slo_burn_fast", a.burn_fast), ("slo_burn_slow", a.burn_slow),
+        ):
+            events.append(_ev(
+                track, "C", a.t, 3, 0, args={"value": round(value, 6)}
+            ))
+    return events
+
+
+def to_chrome_trace(result, *, counters: bool = True, control_log=None) -> dict:
+    """Export one run as Chrome trace-event JSON (Perfetto-loadable).
+
+    ``control_log`` (a list of :class:`~repro.obs.controller.
+    ControlAction`) adds the pid 3 "slo control" tracks."""
     root = build_span_tree(result)
     events: list[dict] = [
         _ev("process_name", "M", 0, 1, 0,
@@ -385,6 +417,8 @@ def to_chrome_trace(result, *, counters: bool = True) -> dict:
 
     if counters:
         events += _counter_events(result, flat)
+    if control_log:
+        events += _control_events(control_log)
     return {
         "traceEvents": events,
         "displayTimeUnit": "ms",
@@ -484,34 +518,79 @@ class SpanRecorder:
     The recorder is pull-based: nothing registers callbacks into the sims
     (hot paths stay untouched); call :meth:`record` with a finished
     :class:`TraceResult` and the causal tree is built from the records.
+
+    ``max_jobs`` bounds retention for service-mode runs whose streams are
+    open-ended: only the *last* ``max_jobs`` completed jobs (by finish
+    time) enter the tree — a ring over the completion stream — and
+    everything older is dropped on arrival, tallied in
+    ``n_dropped_jobs`` / ``n_dropped_spans`` so truncation is visible, not
+    silent.  Tiling (:meth:`check`) then holds on the retained window.
+    ``record(..., control_log=…)`` attaches an overload-control audit log
+    that :meth:`chrome` renders as the "slo control" tracks.
     """
 
-    def __init__(self):
-        self._runs: list[tuple[object, Span]] = []
+    def __init__(self, max_jobs: int | None = None):
+        if max_jobs is not None and max_jobs < 1:
+            raise ValueError(f"max_jobs must be >= 1, got {max_jobs}")
+        self.max_jobs = max_jobs
+        self.n_dropped_jobs = 0
+        self.n_dropped_spans = 0
+        self._runs: list[tuple[object, Span, object]] = []
 
     def __len__(self) -> int:
         return len(self._runs)
 
-    def record(self, result) -> Span:
+    def _prune(self, result):
+        """Retain the last ``max_jobs`` completed jobs (plus any
+        not-completed records inside the retained arrival window)."""
+        done = sorted(
+            (r for r in result.records if r.completed),
+            key=lambda r: (r.finish, r.spec.job_id),
+        )
+        kept = {r.spec.job_id for r in done[-self.max_jobs:]}
+        if len(kept) == len(result.records):
+            return result
+        cutoff = min(
+            (r.spec.arrival for r in done[-self.max_jobs:]),
+            default=float("-inf"),
+        )
+        records = []
+        for r in result.records:
+            if (r.spec.job_id in kept
+                    or (not r.completed and r.spec.arrival >= cutoff)):
+                records.append(r)
+                continue
+            self.n_dropped_jobs += 1
+            if r.completed:
+                span = _job_span(r)
+                self.n_dropped_spans += sum(1 for _ in span.walk())
+        if len(records) == len(result.records):
+            return result
+        return dataclasses.replace(result, records=records)
+
+    def record(self, result, control_log=None) -> Span:
+        if self.max_jobs is not None:
+            result = self._prune(result)
         root = build_span_tree(result)
-        self._runs.append((result, root))
+        self._runs.append((result, root, control_log))
         return root
 
     @property
     def roots(self) -> list[Span]:
-        return [root for _, root in self._runs]
+        return [root for _, root, _ in self._runs]
 
     def check(self, **tol) -> list[str]:
         """Tiling violations across every recorded run ([] = healthy)."""
         bad: list[str] = []
-        for result, root in self._runs:
+        for result, root, _ in self._runs:
             bad += [
                 f"{result.policy}: {v}" for v in check_span_tiling(root, **tol)
             ]
         return bad
 
     def chrome(self, index: int = -1, **kw) -> dict:
-        result, _ = self._runs[index]
+        result, _, control_log = self._runs[index]
+        kw.setdefault("control_log", control_log)
         return to_chrome_trace(result, **kw)
 
     def validate(self, index: int = -1, **kw) -> list[str]:

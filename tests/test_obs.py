@@ -35,8 +35,11 @@ from repro.cluster.cluster import JobRecord, Plan, TraceResult
 from repro.cluster.workload import JobSpec
 from repro.elastic import ElasticCluster
 from repro.obs import (
+    LEDGER_SCHEMA_VERSION,
     ClusterMetrics,
+    ControlAction,
     Logger,
+    MetricsRegistry,
     P2Quantile,
     PredictionLedger,
     SpanRecorder,
@@ -511,6 +514,169 @@ class TestLogger:
             Logger("sim", level="verbose")
         with pytest.raises(ValueError):
             Logger("sim").log("chatty", "event")
+
+
+# ----------------------------------------------------- service-mode spans
+
+
+class TestSpanRetention:
+    def test_ring_keeps_last_max_jobs(self):
+        result = _base_result(n_jobs=20)
+        rec = SpanRecorder(max_jobs=5)
+        root = rec.record(result)
+        assert len(root.children) == 5
+        assert rec.n_dropped_jobs == 15
+        assert rec.n_dropped_spans > 0
+        done = sorted(
+            (r for r in result.records if r.completed),
+            key=lambda r: (r.finish, r.spec.job_id),
+        )
+        expect = {r.spec.job_id for r in done[-5:]}
+        assert {s.args["job_id"] for s in root.children} == expect
+
+    def test_tiling_holds_on_retained_window(self):
+        rec = SpanRecorder(max_jobs=5)
+        rec.record(_base_result(n_jobs=20))
+        assert rec.check() == []
+        assert rec.validate() == []
+
+    def test_no_drop_when_under_limit(self):
+        rec = SpanRecorder(max_jobs=100)
+        root = rec.record(_base_result(n_jobs=8))
+        assert len(root.children) == 8
+        assert rec.n_dropped_jobs == 0
+        assert rec.n_dropped_spans == 0
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="max_jobs"):
+            SpanRecorder(max_jobs=0)
+
+
+class TestControlTracks:
+    def _log(self):
+        return [
+            ControlAction(t=1.0, action="trip", job_id=None,
+                          reason="burning", burn_fast=3.2, burn_slow=2.1),
+            ControlAction(t=1.5, action="shed", job_id=4,
+                          reason="queue > floor", burn_fast=3.0,
+                          burn_slow=2.0),
+            ControlAction(t=9.0, action="clear", job_id=None,
+                          reason="recovered", burn_fast=0.1, burn_slow=0.4),
+        ]
+
+    def test_control_log_renders_pid3_tracks(self):
+        doc = to_chrome_trace(
+            _base_result(n_jobs=6), control_log=self._log()
+        )
+        assert validate_chrome_trace(doc) == []
+        ev3 = [e for e in doc["traceEvents"] if e["pid"] == 3]
+        inst = [e for e in ev3 if e["ph"] == "i"]
+        assert {e["args"]["action"] for e in inst} == {
+            "trip", "shed", "clear"
+        }
+        assert "shed job 4" in {e["name"] for e in inst}
+        counters = [e for e in ev3 if e["ph"] == "C"]
+        assert {e["name"] for e in counters} == {
+            "slo_burn_fast", "slo_burn_slow"
+        }
+        assert all(
+            isinstance(e["args"]["value"], float) for e in counters
+        )
+
+    def test_recorder_attaches_control_log(self):
+        rec = SpanRecorder()
+        rec.record(_base_result(n_jobs=6), control_log=self._log())
+        doc = rec.chrome()
+        assert any(e["pid"] == 3 for e in doc["traceEvents"])
+        assert rec.validate() == []
+
+    def test_no_log_no_control_tracks(self):
+        doc = to_chrome_trace(_base_result(n_jobs=6))
+        assert not any(e["pid"] == 3 for e in doc["traceEvents"])
+
+
+# ----------------------------------------------------- ledger persistence
+
+
+class TestLedgerSchema:
+    def _ledger(self):
+        led = PredictionLedger(min_samples=2, threshold=0.2)
+        led.record("wordcount", "jnp", 1.0, 1.5, t=0.5)
+        led.record("wordcount", "jnp", 1.0, 1.6, t=1.0)    # -> drift alarm
+        led.record("sort", "jnp/d2", 2.0, 2.1, t=2.0)      # "/" in category
+        led.record("sort", "jnp/d2", 2.0, 40.0, t=3.0)     # ratio outlier
+        return led
+
+    def test_round_trip_exact(self):
+        led = self._ledger()
+        assert led.alarms and led.n_outliers == 1
+        s = led.to_json()
+        assert json.loads(s)["schema"] == LEDGER_SCHEMA_VERSION
+        back = PredictionLedger.from_json(s)
+        assert back.state_dict() == led.state_dict()
+        assert back.categories() == led.categories()
+        assert len(back.alarms) == len(led.alarms)
+
+    def test_restored_ledger_continues_identically(self):
+        a = self._ledger()
+        b = PredictionLedger.from_json(a.to_json())
+        ra = a.record("wordcount", "jnp", 1.0, 1.4, t=4.0)
+        rb = b.record("wordcount", "jnp", 1.0, 1.4, t=4.0)
+        assert (ra is None) == (rb is None)
+        assert a.ewma_error("wordcount", "jnp") == b.ewma_error(
+            "wordcount", "jnp"
+        )
+        assert a.state_dict() == b.state_dict()
+
+    def test_legacy_dict_without_schema_loads(self):
+        d = self._ledger().state_dict()
+        del d["schema"]
+        assert PredictionLedger.from_state_dict(d).n_records == 4
+
+    def test_future_version_rejected(self):
+        d = self._ledger().state_dict()
+        d["schema"] = LEDGER_SCHEMA_VERSION + 1
+        with pytest.raises(ValueError, match="schema version"):
+            PredictionLedger.from_state_dict(d)
+
+    def test_non_dict_rejected(self):
+        with pytest.raises(ValueError):
+            PredictionLedger.from_state_dict([1, 2])
+
+
+# -------------------------------------------------------- prom exposition
+
+
+class TestPromGolden:
+    def _registry(self):
+        reg = MetricsRegistry()
+        reg.counter("jobs_completed").inc(7)
+        reg.counter("jobs_rejected").inc(2)
+        reg.gauge("queue_depth").set(3.0)
+        h = reg.histogram("turnaround_s", quantiles=(0.5, 0.99))
+        for i in range(1, 21):
+            h.observe(float(i) / 4.0)
+        return reg
+
+    def test_matches_golden_file(self):
+        import pathlib
+
+        golden = (
+            pathlib.Path(__file__).with_name("data") / "metrics_golden.prom"
+        )
+        assert self._registry().to_prom_text() == golden.read_text()
+
+    def test_save_prom_round_trip(self, tmp_path):
+        p = tmp_path / "m.prom"
+        reg = self._registry()
+        reg.save_prom(str(p))
+        assert p.read_text() == reg.to_prom_text()
+
+    def test_byte_stable(self):
+        assert (
+            self._registry().to_prom_text()
+            == self._registry().to_prom_text()
+        )
 
 
 # ------------------------------------------------------------- determinism
