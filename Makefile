@@ -5,7 +5,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast test-elastic test-plan bench-quick bench-backends \
 	bench-cluster bench-phases bench-elastic bench-pipeline bench-obs \
-	bench-service bench-check trace-demo lint
+	bench-service bench-resource bench-check trace-demo lint
 
 # Tier-1 verify (ROADMAP.md).
 test:
@@ -75,6 +75,13 @@ bench-obs:
 # service.prom artifacts; gated on p99 turnaround + SLO-good goodput).
 bench-service:
 	$(PYTHON) -m benchmarks.run --quick --sections service
+
+# Just the resource section: fabric-aware vs blind scheduling on a
+# contended fabric (makespan_win gated) + heldout per-(phase, resource)
+# CPU/net model error (lands resource.trace.json with the fabric/CPU
+# counter tracks).
+bench-resource:
+	$(PYTHON) -m benchmarks.run --quick --sections resource
 
 # Small committed example trace: a contended elastic run with
 # suspend-to-disk, exported as Chrome trace-event JSON + service metrics.

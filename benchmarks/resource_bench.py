@@ -1,0 +1,248 @@
+"""Benchmark section ``resource``: resource observability's two claims.
+
+* **scheduling** — on a *contended* fabric (``Cluster(...,
+  net_capacity=...)``: the contention-aware ground truth fair-share-
+  stretches overlapping shuffles), the fabric-window-aware policy
+  (``predict-resource``) must beat the resource-blind ``predict-sjf``
+  on makespan.  The guarded metric is ``makespan_win`` — blind makespan
+  over aware makespan, which must stay > 1 (scheduling against predicted
+  fabric demand must *help*) and is gated against the committed value by
+  ``run.py --check``.  The aware run is exported as
+  ``resource.trace.json`` with the pid 4 "cluster resources" counter
+  tracks (fabric bytes/s vs capacity, busy CPU) and the audited
+  per-job ``contention`` phases — span tiling must close over them.
+
+* **models** — per-(phase, resource) regressions on the paper's (M, R)
+  basis, fit from noisy analytic traces, evaluated on held-out configs
+  against the noise-free closed form.  Bands follow the companion
+  papers: per-phase CPU-seconds heldout MAE <= ~10% (arXiv:1203.4054
+  reports ~9% for total CPU) and the shuffle's on-wire bytes are an
+  exact form (``pairs * PAIR_BYTES``, linear in size — arXiv:1206.2016),
+  so the bytes model must reproduce it to numerical precision.
+
+Both experiments are closed-form analytic simulations: committed values
+and CI re-runs must agree exactly.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import heldout_configs, training_configs
+from repro.cluster import (
+    AnalyticOracle,
+    Cluster,
+    generate_workload,
+    get_policy,
+)
+from repro.obs import ClusterMetrics, ResourceTimeline, SpanRecorder
+
+SEED = 11
+
+# ---- scheduling experiment ------------------------------------------------
+
+SCHED_JOBS = 32
+SCHED_WORKERS = 8
+#: sustained fabric bytes/s.  A lone shuffle streams ~3.3 MB/s nominal
+#: (bytes and wall are both linear in pairs, so the rate is nearly
+#: size-free); under this budget a single transfer already stretches and
+#: every *overlap* stretches much harder — which is the only thing
+#: scheduling can avoid, since fair share conserves bytes.
+NET_CAPACITY = 1.5e6
+#: shuffle-heavy trace: big inputs arriving in bursts so several
+#: shuffles *want* to overlap.
+SCHED_SIZES = (1 << 16, 1 << 18)
+SCHED_INTERARRIVAL = 0.03
+
+# ---- model experiment -----------------------------------------------------
+
+MODEL_APP = "wordcount"
+MODEL_SIZES = (1 << 14, 1 << 15, 1 << 16)
+MODEL_WORKERS = 8
+MODEL_REPEATS = 3
+MODEL_NOISE = 0.03
+#: companion-paper band: heldout per-phase CPU-seconds MAE (percent).
+CPU_BAND_PCT = 10.0
+#: "exact form" tolerance for the bytes model (percent, numerical only).
+NET_EXACT_PCT = 0.01
+
+
+def _policy(name: str):
+    kwargs = dict(
+        seed=SEED,
+        # One grant size so several jobs co-schedule (8 workers / grant 2
+        # = 4 concurrent shuffles): the fabric, not the pool, is the
+        # bottleneck under test.
+        worker_grid=(2,),
+        mapper_grid=(4, 8, 16),
+        reducer_grid=(4, 8, 16),
+        online=False,
+    )
+    if name == "predict-resource":
+        kwargs["net_capacity"] = NET_CAPACITY
+    return get_policy(name, **kwargs)
+
+
+def sched_run(policy_name: str) -> tuple[dict, object, ClusterMetrics]:
+    oracle = AnalyticOracle(noise=0.02, seed=SEED)
+    jobs = generate_workload(
+        SCHED_JOBS, seed=SEED, arrival="bursty",
+        mean_interarrival=SCHED_INTERARRIVAL, size_range=SCHED_SIZES,
+    )
+    metrics = ClusterMetrics()
+    cluster = Cluster(
+        SCHED_WORKERS, oracle, metrics=metrics, net_capacity=NET_CAPACITY,
+    )
+    result = cluster.run(jobs, _policy(policy_name))
+    m = result.metrics()
+    stats = {
+        "makespan_s": m["makespan_s"],
+        "mean_turnaround_s": m["mean_turnaround_s"],
+        "contention_s_total": round(m["contention_s_total"], 4),
+        "n_contended_jobs": m["n_contended_jobs"],
+        "n_contention_episodes": m["n_contention_episodes"],
+    }
+    return stats, result, metrics
+
+
+def export_trace(result, metrics, outdir: str | None) -> dict:
+    """Span-check the contended run and export the Chrome trace with
+    fabric/CPU counter tracks; returns the export health stats."""
+    rec = SpanRecorder()
+    rec.record(result)
+    violations = rec.check()
+    doc = rec.chrome()
+    issues = rec.validate()
+    timeline = ResourceTimeline.from_result(result)
+    summary = timeline.publish(metrics.registry)
+    track_names = {
+        e["name"] for e in doc["traceEvents"] if e.get("ph") == "C"
+    }
+    if outdir:
+        os.makedirs(outdir, exist_ok=True)
+        with open(os.path.join(outdir, "resource.trace.json"), "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+    return {
+        "tiling_violations": len(violations),
+        "chrome_issues": len(issues),
+        "n_trace_events": len(doc["traceEvents"]),
+        "has_fabric_tracks": {"fabric_bytes_per_s", "fabric_capacity",
+                              "busy_cpu"} <= track_names,
+        "net_peak_utilization": round(
+            summary.get("net_peak_utilization", 0.0), 4
+        ),
+        "n_over_capacity_episodes": summary["n_over_capacity_episodes"],
+    }
+
+
+def _collect(oracle, configs, job_ids) -> tuple[np.ndarray, list]:
+    """(params, traces_per_config) over the (M, R) x size grid."""
+    params, traces = [], []
+    for m, r in configs:
+        for size in MODEL_SIZES:
+            reps = []
+            for j in job_ids:
+                oracle.time(
+                    MODEL_APP, "jnp", size, int(m), int(r),
+                    MODEL_WORKERS, job_id=j,
+                )
+                reps.append(oracle.take_trace())
+            params.append((float(m), float(r), float(size) / 1024.0))
+            traces.append(reps)
+    return np.asarray(params, dtype=np.float64), traces
+
+
+def run_models() -> dict:
+    from repro.telemetry.models import (
+        TIME_RESOURCE,
+        fit_phase_models,
+        targets_from_traces,
+    )
+
+    fit_kwargs = dict(degree=2, cross_terms=True, scale=True, lam=1e-8)
+    train_p, train_t = _collect(
+        AnalyticOracle(noise=MODEL_NOISE, seed=SEED),
+        training_configs(), job_ids=range(MODEL_REPEATS),
+    )
+    models = fit_phase_models(
+        train_p, targets_from_traces(train_t), **fit_kwargs
+    )
+    # Heldout ground truth: the noise-free closed form on unseen configs.
+    held_p, held_t = _collect(
+        AnalyticOracle(noise=0.0, seed=SEED), heldout_configs(),
+        job_ids=(0,),
+    )
+    truth = targets_from_traces(held_t)
+
+    def mae_pct(phase: str, resource: str) -> float:
+        pred = models.predict(phase, resource, held_p)
+        true = truth[(phase, resource)]
+        return float(np.mean(np.abs(pred - true) / np.abs(true)) * 100.0)
+
+    cpu = {p: round(mae_pct(p, "cpu_s"), 3)
+           for p in ("map", "shuffle", "reduce")}
+    cpu_mae = round(float(np.mean(list(cpu.values()))), 3)
+    net_mae = round(mae_pct("shuffle", "net_bytes"), 6)
+    time_mae = round(float(np.mean(
+        [mae_pct(p, TIME_RESOURCE) for p in ("map", "shuffle", "reduce")]
+    )), 3)
+    return {
+        "n_train": int(train_p.shape[0]),
+        "n_heldout": int(held_p.shape[0]),
+        "cpu_mae_pct_per_phase": cpu,
+        "cpu_mae_pct": cpu_mae,
+        "cpu_band_pct": CPU_BAND_PCT,
+        "cpu_within_band": cpu_mae <= CPU_BAND_PCT,
+        "net_mae_pct": net_mae,
+        "net_exact_form": net_mae <= NET_EXACT_PCT,
+        "time_mae_pct": time_mae,
+    }
+
+
+def main(
+    tokens: int, repeats: int, outdir: str | None = None
+) -> tuple[list[str], dict]:
+    """Section entry point.  ``tokens`` / ``repeats`` are unused: both
+    experiments are closed-form analytic simulations whose *values* are
+    the artifact — the committed baseline and every CI re-run must agree
+    exactly, so nothing here may scale with harness knobs."""
+    del tokens, repeats
+    blind, _, _ = sched_run("predict-sjf")
+    aware, aware_result, aware_metrics = sched_run("predict-resource")
+    makespan_win = blind["makespan_s"] / max(aware["makespan_s"], 1e-9)
+    trace = export_trace(aware_result, aware_metrics, outdir)
+    model = run_models()
+
+    rows = [
+        "resource,experiment,metric,value",
+        *(f"resource,sched_blind,{k},{v}" for k, v in sorted(blind.items())),
+        *(f"resource,sched_aware,{k},{v}" for k, v in sorted(aware.items())),
+        f"resource,sched,makespan_win,{makespan_win:.3f}",
+        *(f"resource,trace,{k},{v}" for k, v in sorted(trace.items())),
+        *(
+            f"resource,models,{k},{v}"
+            for k, v in sorted(model.items())
+            if not isinstance(v, dict)
+        ),
+    ]
+    summary = {
+        "scheduling": {
+            "net_capacity": NET_CAPACITY,
+            "n_jobs": SCHED_JOBS,
+            "workers": SCHED_WORKERS,
+            "blind": blind,
+            "aware": aware,
+            # Guarded (higher-better) by run.py --check: scheduling
+            # against predicted fabric windows must keep beating blind
+            # SJF on the contended trace.
+            "makespan_win": round(makespan_win, 3),
+            "aware_wins": makespan_win > 1.0,
+        },
+        "trace": trace,
+        # cpu_mae_pct / net_mae_pct are guarded (lower-better).
+        "models": model,
+    }
+    return rows, summary

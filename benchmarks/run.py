@@ -48,7 +48,8 @@ import time
 
 ALL_SECTIONS = (
     "table1", "fig3", "fig4", "tuner", "backends", "phases", "cluster",
-    "elastic", "pipeline", "obs", "service", "roofline", "kernels",
+    "elastic", "pipeline", "obs", "service", "resource", "roofline",
+    "kernels",
 )
 
 
@@ -157,6 +158,9 @@ def run_section(sec: str, tokens: int, repeats: int, outdir: str = ""):
     if sec == "service":
         from benchmarks import service_bench
         return service_bench.main(tokens, repeats, outdir=outdir or None)
+    if sec == "resource":
+        from benchmarks import resource_bench
+        return resource_bench.main(tokens, repeats, outdir=outdir or None)
     if sec == "roofline":
         from benchmarks import roofline
         return roofline.main(), None
@@ -176,7 +180,8 @@ def _walk_metrics(summary, path=""):
             p = f"{path}.{k}" if path else str(k)
             if k in (
                 "makespan_s", "slo_attainment", "speedup", "recovery",
-                "p99_turnaround_s", "goodput",
+                "p99_turnaround_s", "goodput", "makespan_win",
+                "cpu_mae_pct", "net_mae_pct",
             ) and isinstance(v, (int, float)):
                 yield p, k, float(v)
             else:
@@ -216,11 +221,13 @@ def check_regressions(committed: dict, fresh: dict) -> list[str]:
     """Compare guarded metrics (makespan_s / slo_attainment / speedup) of
     each fresh section summary against the committed baseline.
 
-    A regression is a makespan (or the service section's p99 turnaround)
-    more than ``CHECK_TOLERANCE`` above the committed value, or an SLO
+    A regression is a makespan (or the service section's p99 turnaround,
+    or the resource section's heldout CPU/net model error) more than
+    ``CHECK_TOLERANCE`` above the committed value, or an SLO
     attainment (or pipelined-mode speedup, the obs section's
-    drift-recovery ratio, or the service section's SLO-good goodput)
-    more than ``CHECK_TOLERANCE`` below it.  Only metric paths present in
+    drift-recovery ratio, the service section's SLO-good goodput, or the
+    resource section's blind-over-aware makespan win) more than
+    ``CHECK_TOLERANCE`` below it.  Only metric paths present in
     both summaries compare; the guarded sections (cluster, elastic) are
     deterministic analytic simulations, so drift means a real behavior
     change, not noise — the pipeline section's speedup is measured
@@ -243,7 +250,10 @@ def check_regressions(committed: dict, fresh: dict) -> list[str]:
             if p not in new_metrics:
                 continue
             new_v = new_metrics[p][1]
-            if kind in ("makespan_s", "p99_turnaround_s") and (
+            if kind in (
+                "makespan_s", "p99_turnaround_s", "cpu_mae_pct",
+                "net_mae_pct",
+            ) and (
                 new_v > old_v * (1 + CHECK_TOLERANCE)
             ):
                 problems.append(
@@ -251,7 +261,8 @@ def check_regressions(committed: dict, fresh: dict) -> list[str]:
                     f"(+{(new_v / max(old_v, 1e-12) - 1) * 100:.0f}%)"
                 )
             elif kind in (
-                "slo_attainment", "speedup", "recovery", "goodput"
+                "slo_attainment", "speedup", "recovery", "goodput",
+                "makespan_win",
             ) and new_v < old_v * (1 - CHECK_TOLERANCE):
                 problems.append(
                     f"{sec}: {p} regressed {old_v:.3f} -> {new_v:.3f} "

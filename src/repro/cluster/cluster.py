@@ -88,6 +88,10 @@ class JobRecord:
     n_regrants: int = 0
     n_suspends: int = 0
     overhead_s: float = 0.0
+    #: seconds this job's shuffle was stretched by shared-fabric
+    #: contention (0.0 on uncontended runs / capacity-unlimited clusters);
+    #: audited in the trace as its own ``contention`` phase.
+    contention_s: float = 0.0
 
     @property
     def completed(self) -> bool:
@@ -130,6 +134,11 @@ class TraceResult:
     policy: str
     total_workers: int
     records: list[JobRecord]          # arrival order
+    #: fabric capacity the run was priced against (None = unlimited) and
+    #: the over-capacity episodes the shared fabric logged — carried on
+    #: the result so the span/resource exporters need no extra plumbing.
+    net_capacity: float | None = None
+    contention_episodes: list = dataclasses.field(default_factory=list)
 
     def completed(self) -> list[JobRecord]:
         return [r for r in self.records if r.completed]
@@ -198,6 +207,15 @@ class TraceResult:
             ),
             "n_suspends": sum(r.n_suspends for r in self.records),
             "regrant_overhead_s": sum(r.overhead_s for r in self.records),
+            # Shared-fabric contention accounting (zeros when the run had
+            # no finite net_capacity).
+            "contention_s_total": sum(
+                r.contention_s for r in self.records
+            ),
+            "n_contended_jobs": sum(
+                1 for r in self.records if r.contention_s > 0
+            ),
+            "n_contention_episodes": len(self.contention_episodes),
         }
 
 
@@ -255,9 +273,22 @@ def _bounded(stream, until_time, until_jobs):
 
 
 class Cluster:
-    """W worker slots + a runtime oracle; runs (trace, policy) -> result."""
+    """W worker slots + a runtime oracle; runs (trace, policy) -> result.
 
-    def __init__(self, total_workers: int, oracle, *, metrics=None):
+    With a finite ``net_capacity`` (bytes/s) concurrent jobs share one
+    shuffle fabric: each dispatched job's shuffle transfer is priced on a
+    :class:`repro.cluster.oracle.SharedFabric`, and when aggregate demand
+    exceeds capacity the job's shuffle stretches by the fair-share
+    slowdown.  The stretch is added to the job's true time and audited in
+    its trace as a ``contention`` phase, so phase walls still sum to the
+    turnaround and span tiling closes.  This requires an oracle whose
+    completed jobs carry per-phase traces with net counters
+    (``prices_contention``); the constructor refuses the combination
+    otherwise instead of silently skipping the charge.
+    """
+
+    def __init__(self, total_workers: int, oracle, *, metrics=None,
+                 net_capacity: float | None = None):
         if total_workers < 1:
             raise ValueError("total_workers must be >= 1")
         self.total_workers = int(total_workers)
@@ -266,6 +297,25 @@ class Cluster:
         #: None (the default) keeps every event unobserved at the cost of
         #: one ``if`` per event.
         self.metrics = metrics
+        self.net_capacity = (
+            None if net_capacity is None or math.isinf(net_capacity)
+            else float(net_capacity)
+        )
+        if self.net_capacity is not None:
+            if not self.net_capacity > 0:
+                raise ValueError(
+                    f"net_capacity must be > 0, got {net_capacity!r}"
+                )
+            if not getattr(oracle, "prices_contention", False):
+                platform = getattr(
+                    oracle, "platform", type(oracle).__name__
+                )
+                raise ValueError(
+                    f"net_capacity set, but oracle {platform!r} cannot "
+                    "price contention: completed jobs carry no per-phase "
+                    "net counters (use the analytic oracle or a traced "
+                    "engine oracle)"
+                )
 
     def run(self, jobs: list[JobSpec], policy) -> TraceResult:
         jobs = sorted(jobs, key=lambda j: (j.arrival, j.job_id))
@@ -339,6 +389,12 @@ class Cluster:
         source = _JobSource(jobs)
         records: dict[int, JobRecord] = {}
         order: list[int] = []         # job_ids in arrival order
+        fabric = None
+        if self.net_capacity is not None:
+            from repro.cluster.oracle import SharedFabric
+
+            # Per-run state: one run's transfers must not price another's.
+            fabric = SharedFabric(self.net_capacity)
         policy.prepare(self, apps)
 
         pending: list[JobSpec] = []   # arrived, not yet dispatched (FIFO order)
@@ -427,14 +483,23 @@ class Cluster:
                 take_trace = getattr(self.oracle, "take_trace", None)
                 if take_trace is not None:
                     rec.trace = take_trace()
+                if fabric is not None:
+                    _charge_contention(fabric, rec, now)
                 free -= plan.workers
                 seq += 1
                 heapq.heappush(running, (now + rec.true_time, seq, job.job_id))
                 if metrics is not None:
                     metrics.on_dispatch(now, rec)
+            if fabric is not None:
+                fabric.prune(now)
             if metrics is not None:
                 metrics.sample(
-                    now, len(pending), self.total_workers - free, 0
+                    now, len(pending), self.total_workers - free, 0,
+                    net_bytes_per_s=(
+                        fabric.demand_at(now) if fabric is not None
+                        else None
+                    ),
+                    net_capacity=self.net_capacity,
                 )
             if next_health is not None and now >= next_health:
                 if on_health is not None:
@@ -449,4 +514,55 @@ class Cluster:
             policy=policy.name,
             total_workers=self.total_workers,
             records=[records[job_id] for job_id in order],
+            net_capacity=self.net_capacity,
+            contention_episodes=(
+                list(fabric.episodes) if fabric is not None else []
+            ),
         )
+
+
+def _charge_contention(fabric, rec: JobRecord, now: float) -> float:
+    """Price ``rec``'s shuffle transfer on the shared fabric at dispatch.
+
+    The transfer window opens after the phases recorded ahead of the
+    shuffle entry (the map phase) and nominally lasts the shuffle wall.
+    Any fair-share stretch is added to the job's true time and audited as
+    a ``contention`` phase right after the shuffle — walls still sum to
+    the turnaround, so conservation and span tiling keep closing.  Jobs
+    without a usable trace (no shuffle entry, zero net bytes) simply
+    don't occupy the fabric.
+    """
+    trace = rec.trace
+    if trace is None or "shuffle" not in trace.phase_names():
+        return 0.0
+    sh = trace.phase("shuffle")
+    nbytes = sh.counters.get(
+        "net_bytes", sh.counters.get("bytes_in", 0.0)
+    )
+    if nbytes <= 0 or sh.wall_s <= 0:
+        return 0.0
+    pre = 0.0
+    for p in trace.phases:
+        if p.phase == "shuffle":
+            break
+        pre += max(0.0, p.wall_s)
+    stretch = fabric.admit(
+        rec.spec.job_id, now + pre, sh.wall_s, nbytes
+    )
+    if stretch <= 0.0:
+        return 0.0
+    # Audited stall: no fabric bytes of its own, no CPU burned — the job
+    # is waiting on its fair share of the wire.
+    trace.record_phase(
+        "contention", stretch,
+        net_bytes=0.0, cpu_s=0.0, cpu_workers=1.0,
+        fabric_capacity=fabric.capacity,
+    )
+    trace.phases.insert(
+        trace.phases.index(sh) + 1, trace.phases.pop()
+    )
+    if trace.total_s is not None:
+        trace.finish(trace.total_s + stretch)
+    rec.contention_s = stretch
+    rec.true_time += stretch
+    return stretch

@@ -42,13 +42,17 @@ _PAIRS_PER_TOKEN = {"wordcount": 1.0, "eximparse": 1.0 / 3.0}
 
 
 def _analytic_trace(app, backend, size, M, R, W, phase_s, noise_factor,
-                    depth: int = 1, overlap_s: float = 0.0):
+                    depth: int = 1, overlap_s: float = 0.0,
+                    cpu_s: dict | None = None):
     """Build a JobTrace-shaped record from closed-form phase components.
 
     The analytic oracle has no real arrays to count, so the counters are
     the closed-form expectations (shuffle bytes = pairs x PAIR_BYTES, no
     overflow); the *shape* matches the engine's traces exactly, which is
     what lets the online per-phase refit path treat both oracles alike.
+    ``cpu_s`` carries the closed-form CPU task-seconds per phase (scaled
+    by the same noise factor as the walls, with ``cpu_workers = W`` as
+    the parallelism ceiling — the simulated cluster grants W workers).
 
     With ``depth > 1`` the trace gains a fourth ``"pipeline"`` phase
     whose wall is the (negative) overlap saving ``-overlap_s`` — the
@@ -60,6 +64,16 @@ def _analytic_trace(app, backend, size, M, R, W, phase_s, noise_factor,
 
     pairs = _PAIRS_PER_TOKEN[app] * float(size)
     nbytes = pairs * PAIR_BYTES
+    cpu_s = cpu_s or {}
+
+    def cpu(phase):
+        if phase not in cpu_s:
+            return {}
+        return {
+            "cpu_s": cpu_s[phase] * noise_factor,
+            "cpu_workers": float(W),
+        }
+
     trace = JobTrace(
         app=app,
         config={
@@ -71,25 +85,113 @@ def _analytic_trace(app, backend, size, M, R, W, phase_s, noise_factor,
     trace.record_phase(
         "map", phase_s["map"] * noise_factor,
         tasks=M, waves=math.ceil(M / W), records_in=size,
-        pairs_emitted=pairs,
+        pairs_emitted=pairs, **cpu("map"),
     )
     trace.record_phase(
         "shuffle", phase_s["shuffle"] * noise_factor,
         pairs_in=pairs, pairs_out=pairs, pairs_dropped=0,
         bytes_in=nbytes, bytes_out=nbytes, bytes_dropped=0,
         partitions=R,
+        net_bytes=nbytes, net_s=phase_s["shuffle"] * noise_factor,
+        **cpu("shuffle"),
     )
     trace.record_phase(
         "reduce", phase_s["reduce"] * noise_factor,
-        tasks=R, waves=math.ceil(R / W),
+        tasks=R, waves=math.ceil(R / W), **cpu("reduce"),
     )
     if depth > 1:
         trace.record_phase(
             "pipeline", -overlap_s,
             overlap_depth=depth, overlap_s=overlap_s,
+            net_bytes=0.0,
         )
     trace.finish(sum(p.wall_s for p in trace.phases))
     return trace
+
+
+class SharedFabric:
+    """Deterministic fair-share model of one shared shuffle fabric.
+
+    Each admission prices one transfer — ``nbytes`` over a nominal
+    window ``[start, start + nominal_s)`` at its own uncontended rate
+    ``nbytes / nominal_s`` — by integrating it piecewise against the
+    transfers already committed: wherever aggregate demand D exceeds
+    ``capacity`` C, every byte drains at the fair share ``C / D`` of its
+    nominal rate, so the newcomer's window stretches.  Earlier
+    admissions are never retro-stretched: pricing is causal in dispatch
+    order, single-pass, and deterministic.  Transfers whose uncontended
+    windows don't overlap therefore never interact — contention can
+    delay a job, but it cannot reorder jobs with disjoint lifetimes.
+
+    Over-capacity admissions are logged as contention *episodes* (job,
+    window, peak demand, stretch) for the cluster-wide report.
+    """
+
+    def __init__(self, capacity: float):
+        cap = float(capacity)
+        if not cap > 0:
+            raise ValueError(f"net capacity must be > 0, got {capacity!r}")
+        self.capacity = cap
+        #: committed transfers as (t0, t1, bytes_per_s) — byte-conserving
+        #: average rates over each transfer's *actual* window.
+        self._transfers: list[tuple[float, float, float]] = []
+        self.episodes: list[dict] = []
+        self.contention_s_total = 0.0
+        self.n_contended = 0
+
+    def demand_at(self, t: float) -> float:
+        """Aggregate committed fabric demand (bytes/s) at time ``t``."""
+        return sum(r for (t0, t1, r) in self._transfers if t0 <= t < t1)
+
+    def admit(self, job_id: int, start: float, nominal_s: float,
+              nbytes: float) -> float:
+        """Price one transfer; return its stretch (contention seconds)."""
+        if nbytes <= 0 or nominal_s <= 0:
+            return 0.0
+        rate = float(nbytes) / float(nominal_s)
+        # Piecewise-constant integration: within each segment between
+        # committed-transfer breakpoints the fair share is constant.
+        edges = sorted(
+            {p for (t0, t1, _) in self._transfers for p in (t0, t1)
+             if p > start}
+        )
+        remaining = float(nbytes)
+        t = float(start)
+        peak = rate
+        for edge in edges + [math.inf]:
+            demand = self.demand_at(t) + rate
+            peak = max(peak, demand)
+            thru = rate * min(1.0, self.capacity / demand)
+            if edge == math.inf or remaining <= thru * (edge - t):
+                t += remaining / thru
+                break
+            remaining -= thru * (edge - t)
+            t = edge
+        end = t
+        stretch = (end - start) - float(nominal_s)
+        if stretch < 1e-9:  # integration round-off is not contention
+            stretch = 0.0
+            end = start + float(nominal_s)
+        self._transfers.append(
+            (float(start), end, float(nbytes) / (end - start))
+        )
+        if stretch > 0.0:
+            self.n_contended += 1
+            self.contention_s_total += stretch
+            self.episodes.append({
+                "job_id": int(job_id),
+                "t0": float(start),
+                "t1": float(end),
+                "peak_bytes_per_s": float(peak),
+                "capacity": self.capacity,
+                "contention_s": float(stretch),
+            })
+        return stretch
+
+    def prune(self, now: float) -> None:
+        """Drop transfers that ended at/before ``now`` (they can no
+        longer overlap any future admission)."""
+        self._transfers = [x for x in self._transfers if x[1] > now]
 
 
 class AnalyticOracle:
@@ -108,6 +210,10 @@ class AnalyticOracle:
     """
 
     platform = "sim-analytic-v1"
+    #: analytic traces always carry per-phase walls + net counters, so a
+    #: cluster with a finite ``net_capacity`` can price shared-fabric
+    #: contention against this oracle's jobs.
+    prices_contention = True
 
     #: per-token map cost by application (eximparse parses records: pricier).
     MAP_COST = {"wordcount": 8.0e-6, "eximparse": 1.2e-5}
@@ -181,6 +287,27 @@ class AnalyticOracle:
         )
         t_reduce = red_waves * (setup + self.C_RED * thr * n / R)
         return {"map": t_map, "shuffle": t_shuffle, "reduce": t_reduce}
+
+    def _cpu_components(
+        self, phase_s: dict[str, float], size: int,
+        mappers: int, reducers: int, workers: int,
+    ) -> dict[str, float]:
+        """Closed-form CPU task-seconds per phase (noise-free).
+
+        Map and reduce burn one core per task: CPU = wall x tasks/waves
+        (the busy-core count of the wave schedule, <= W by construction).
+        The shuffle's ``c_shuf * n`` term is pure wire time; the
+        imbalance and partition/merge terms are host CPU work, so
+        shuffle CPU is the wall minus the wire term (single-threaded
+        merge: always <= wall).
+        """
+        M, R, W = int(mappers), int(reducers), int(workers)
+        wire = self.C_SHUF * float(size)
+        return {
+            "map": phase_s["map"] * M / math.ceil(M / W),
+            "shuffle": max(0.0, phase_s["shuffle"] - wire),
+            "reduce": phase_s["reduce"] * R / math.ceil(R / W),
+        }
 
     def _overlapped_total(self, phase_s: dict[str, float], depth: int
                           ) -> float:
@@ -265,6 +392,7 @@ class AnalyticOracle:
         return _analytic_trace(
             app, backend, size, M, R, W, phase_s, factor,
             depth=depth, overlap_s=overlap,
+            cpu_s=self._cpu_components(phase_s, size, M, R, W),
         )
 
     # ---- partial execution (elastic layer) ------------------------------
@@ -330,16 +458,22 @@ class AnalyticOracle:
         reducers: int,
         workers: int,
     ) -> dict:
-        """Noise-free per-phase times + shuffle bytes for one config — the
-        profiling source for decomposed (per-phase, per-resource) models."""
+        """Noise-free per-phase times, CPU seconds, and shuffle/fabric
+        bytes for one config — the profiling source for decomposed
+        (per-phase, per-resource) models."""
         phase_s = self._phase_components(
             app, backend, size, mappers, reducers, workers
         )
         from repro.telemetry.trace import PAIR_BYTES
 
+        nbytes = _PAIRS_PER_TOKEN[app] * float(size) * PAIR_BYTES
         return {
             "time_s": dict(phase_s),
-            "shuffle_bytes": _PAIRS_PER_TOKEN[app] * float(size) * PAIR_BYTES,
+            "shuffle_bytes": nbytes,
+            "cpu_s": self._cpu_components(
+                phase_s, size, mappers, reducers, workers
+            ),
+            "net_bytes": nbytes,
         }
 
     def nominal_time(self, app: str, size: int) -> float:
@@ -399,6 +533,12 @@ class EngineOracle:
         #: loop).  Timing then includes per-phase fencing overhead —
         #: consistent across configs, so models stay comparable.
         self.traced = bool(traced)
+        #: contention pricing needs per-phase walls + net counters on
+        #: every completed job — only the traced path records them.  An
+        #: untraced engine oracle cannot price a shared fabric, and the
+        #: cluster refuses ``net_capacity`` against it rather than
+        #: silently skipping the charge.
+        self.prices_contention = self.traced
         self.recorder = None
         if traced:
             from repro.telemetry import PhaseRecorder
@@ -577,9 +717,17 @@ class EngineOracle:
 
     @staticmethod
     def _profile_from(trace) -> dict:
+        times = trace.phase_times()
         return {
-            "time_s": trace.phase_times(),
+            "time_s": times,
             "shuffle_bytes": trace.counter("shuffle", "bytes_out"),
+            "cpu_s": {
+                ph: trace.counter(ph, "cpu_s", 0.0) for ph in times
+            },
+            "net_bytes": trace.counter(
+                "shuffle", "net_bytes",
+                trace.counter("shuffle", "bytes_in", 0.0),
+            ),
         }
 
     def nominal_time(self, app: str, size: int) -> float:

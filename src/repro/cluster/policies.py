@@ -597,20 +597,35 @@ class DeadlineAware(PredictivePolicy):
         return None
 
 
+def _pre_shuffle_wall(times: dict) -> float:
+    """Wall seconds before the shuffle opens (trace phase order)."""
+    pre = 0.0
+    for phase, t in times.items():
+        if phase == "shuffle":
+            break
+        if t > 0:
+            pre += t
+    return pre
+
+
 @register_policy
 class ResourceAware(PredictedSJF):
-    """SJF with network-bottleneck-aware dispatch (telemetry-driven).
+    """SJF scheduling against predicted fabric demand (telemetry-driven).
 
-    Beyond the total-time model, this policy fits one *shuffle-bytes*
-    model per (application, backend) from the oracle's per-phase profiles
+    Beyond the total-time model, this policy fits three fabric models per
+    (application, backend) from the oracle's per-phase profiles
     (``phase_profile``, backed by the telemetry layer's decomposed
-    counters) and tracks the aggregate predicted shuffle bandwidth of the
-    jobs currently running.  A candidate whose predicted shuffle traffic
-    would push that aggregate past ``net_capacity`` bytes/s has its score
-    inflated by ``contention_alpha`` x the fractional overload, steering
-    dispatch toward shuffle-light jobs while the fabric is saturated —
-    co-scheduling two shuffle-heavy jobs is what a network-provisioning
-    model (arXiv:1206.2016) says to avoid.
+    counters): shuffle *bytes*, the wall time *before* the shuffle opens,
+    and the shuffle *wall* itself.  Together they predict each dispatch's
+    fabric transfer as a time window ``[t0, t1) @ bytes/s`` — the same
+    shape the contention-aware ground truth (:class:`repro.cluster.oracle.
+    SharedFabric`) prices.  A candidate is scored by its predicted time
+    plus ``contention_alpha`` x the fair-share stretch its window would
+    suffer against the windows of already-running jobs (intervals where
+    aggregate demand D exceeds ``net_capacity`` C inflate by D/C),
+    steering dispatch away from co-scheduling overlapping shuffle-heavy
+    transfers — what a network-provisioning model (arXiv:1206.2016) says
+    to avoid.
 
     ``net_capacity=None`` (default) means an unconstrained fabric: scoring
     reduces exactly to predicted time and the policy is decision-for-
@@ -632,23 +647,30 @@ class ResourceAware(PredictedSJF):
             raise ValueError("net_capacity must be positive")
         self.contention_alpha = float(contention_alpha)
         self._bytes_models: dict[tuple[str, str], RegressionModel] = {}
-        self._running_bw: dict[int, float] = {}
+        self._window_models: dict[tuple[str, str], tuple] = {}
+        #: job_id -> (t0, t1, bytes/s): predicted fabric windows of
+        #: currently running jobs.
+        self._windows: dict[int, tuple[float, float, float]] = {}
         self.n_contention_deferrals = 0
 
-    # ---- bootstrap: fit shuffle-bytes models from phase profiles --------
+    # ---- bootstrap: fit fabric models from phase profiles ---------------
 
     def prepare(self, cluster, apps):
         super().prepare(cluster, apps)
-        self._running_bw.clear()
+        self._windows.clear()
         profile = getattr(cluster.oracle, "phase_profile", None)
         if profile is None:
             return  # no per-phase source: behave as plain predict-sjf
         from repro.telemetry.models import phase_resource_key
 
-        res_key = phase_resource_key("shuffle", "bytes")
+        res_keys = {
+            "bytes": phase_resource_key("shuffle", "bytes"),
+            "pre": phase_resource_key("shuffle", "window_pre_s"),
+            "wall": phase_resource_key("shuffle", "window_wall_s"),
+        }
         # A compact profiling set suffices: shuffle bytes are ~linear in
         # size and barely config-dependent, but we keep the full feature
-        # row so the stored model composes with everything else.
+        # row so the stored models compose with everything else.
         rows = np.asarray(
             [
                 (m, r, self.worker_grid[-1], s / SIZE_UNIT)
@@ -662,78 +684,129 @@ class ResourceAware(PredictedSJF):
         )
         for app in apps:
             for backend in self.backends:
-                if (app, self.platform, backend, res_key) in self.db:
-                    self._bytes_models[(app, backend)] = self.db.get(
-                        app, self.platform, backend, resource=res_key
-                    )
-                    continue
-                targets = np.asarray(
-                    [
+                fitted = {
+                    name: self.db.get(app, self.platform, backend,
+                                      resource=rk)
+                    for name, rk in res_keys.items()
+                    if (app, self.platform, backend, rk) in self.db
+                }
+                if len(fitted) < len(res_keys):
+                    profs = [
                         profile(
                             app, backend, int(row[3] * SIZE_UNIT),
                             int(row[0]), int(row[1]), int(row[2]),
-                        )["shuffle_bytes"]
+                        )
                         for row in rows
-                    ],
-                    dtype=np.float64,
+                    ]
+                    targets = {
+                        "bytes": [p["shuffle_bytes"] for p in profs],
+                        "pre": [_pre_shuffle_wall(p["time_s"])
+                                for p in profs],
+                        "wall": [max(p["time_s"].get("shuffle", 0.0), 0.0)
+                                 for p in profs],
+                    }
+                    for name, rk in res_keys.items():
+                        if name in fitted:
+                            continue
+                        # Degree-1 bases fit the 12-point profile set
+                        # without ever going underdetermined: bytes are
+                        # ~linear in size, and the window-shape targets
+                        # only steer dispatch, they gate nothing.
+                        model = regression_fit(
+                            rows,
+                            np.asarray(targets[name], dtype=np.float64),
+                            degree=1, cross_terms=False, scale=True,
+                            lam=1e-9,
+                        )
+                        self.db.put(
+                            app, self.platform, model, backend=backend,
+                            resource=rk,
+                        )
+                        fitted[name] = model
+                self._bytes_models[(app, backend)] = fitted["bytes"]
+                self._window_models[(app, backend)] = (
+                    fitted["pre"], fitted["wall"]
                 )
-                # Shuffle traffic is ~linear in input size and barely
-                # config-dependent: a degree-1 basis fits the 12-point
-                # profile set exactly and never goes underdetermined.
-                model = regression_fit(
-                    rows, targets, degree=1, cross_terms=False,
-                    scale=True, lam=1e-9,
-                )
-                self.db.put(
-                    app, self.platform, model, backend=backend,
-                    resource=res_key,
-                )
-                self._bytes_models[(app, backend)] = model
 
     # ---- dispatch scoring ------------------------------------------------
 
-    def _shuffle_bandwidth(self, job: JobSpec, plan: Plan) -> float:
-        """Predicted shuffle bytes/s this job sustains while running."""
-        model = self._bytes_models.get((job.app, plan.backend))
-        if model is None or plan.predicted_time is None:
-            return 0.0
-        row = (plan.mappers, plan.reducers, plan.workers,
-               job.size / SIZE_UNIT)
-        nbytes = max(float(_np_predict(model, np.asarray(row))[0]), 0.0)
-        return nbytes / max(plan.predicted_time, 1e-9)
-
-    def _score(self, plan: Plan, bandwidth: float, load: float) -> float:
-        if not math.isfinite(self.net_capacity):
-            return plan.predicted_time
-        overload = max(0.0, load + bandwidth - self.net_capacity)
-        return plan.predicted_time * (
-            1.0 + self.contention_alpha * overload / self.net_capacity
+    def _shuffle_window(
+        self, job: JobSpec, plan: Plan, now: float
+    ) -> tuple[float, float, float] | None:
+        """Predicted fabric transfer (t0, t1, bytes/s) for this dispatch."""
+        wmodels = self._window_models.get((job.app, plan.backend))
+        bmodel = self._bytes_models.get((job.app, plan.backend))
+        if wmodels is None or bmodel is None or plan.predicted_time is None:
+            return None
+        row = np.asarray(
+            (plan.mappers, plan.reducers, plan.workers,
+             job.size / SIZE_UNIT),
+            dtype=np.float64,
         )
+        nbytes = max(float(_np_predict(bmodel, row)[0]), 0.0)
+        if nbytes <= 0.0:
+            return None
+        # Clamp the window inside the predicted runtime: the degree-1
+        # window models may overshoot between profile points.
+        pre = min(max(float(_np_predict(wmodels[0], row)[0]), 0.0),
+                  plan.predicted_time)
+        wall = min(max(float(_np_predict(wmodels[1], row)[0]), 1e-9),
+                   max(plan.predicted_time - pre, 1e-9))
+        return (now + pre, now + pre + wall, nbytes / wall)
+
+    def _predicted_stretch(self, win: tuple[float, float, float]) -> float:
+        """Fair-share seconds the fabric would add to this transfer given
+        the predicted windows of running jobs: over every sub-interval of
+        the window where aggregate demand D > capacity C, wire time
+        inflates by D/C (the :class:`SharedFabric` law)."""
+        t0, t1, rate = win
+        edges = sorted(
+            {t0, t1}
+            | {p for (w0, w1, _) in self._windows.values()
+               for p in (w0, w1) if t0 < p < t1}
+        )
+        extra = 0.0
+        for a, b in zip(edges, edges[1:]):
+            demand = rate + sum(
+                r for (w0, w1, r) in self._windows.values()
+                if w0 < b and w1 > a
+            )
+            if demand > self.net_capacity:
+                extra += (b - a) * (demand / self.net_capacity - 1.0)
+        return extra
 
     def select(self, queue, free_workers, now):
-        load = sum(self._running_bw.values())
+        # Windows whose transfer has closed no longer load the fabric.
+        self._windows = {
+            j: w for j, w in self._windows.items() if w[1] > now
+        }
         best = None
         best_sjf = None  # what plain SJF would pick (deferral accounting)
         for job in queue:
             plan = self.best_plan(job, free_workers)
             if plan is None:
                 continue
-            bw = self._shuffle_bandwidth(job, plan)
-            score = self._score(plan, bw, load)
+            win = (
+                self._shuffle_window(job, plan, now)
+                if math.isfinite(self.net_capacity) else None
+            )
+            stretch = self._predicted_stretch(win) if win else 0.0
+            score = plan.predicted_time + self.contention_alpha * stretch
             if best is None or score < best[0]:
-                best = (score, job, plan, bw)
+                best = (score, job, plan, win)
             if best_sjf is None or plan.predicted_time < best_sjf:
                 best_sjf = plan.predicted_time
         if best is None:
             return None
-        _, job, plan, bw = best
+        _, job, plan, win = best
         if best_sjf is not None and plan.predicted_time > best_sjf:
             self.n_contention_deferrals += 1
-        self._running_bw[job.job_id] = bw
+        if win is not None:
+            self._windows[job.job_id] = win
         return Dispatch(job, plan)
 
     def observe(self, record):
-        self._running_bw.pop(record.spec.job_id, None)
+        self._windows.pop(record.spec.job_id, None)
         super().observe(record)
 
 

@@ -51,7 +51,7 @@ import numpy as np
 from repro.mapreduce import phases
 from repro.mapreduce.engine import JobConfig, MapReduceApp  # noqa: F401
 from repro.mapreduce.phases import PAD_KEY
-from repro.mapreduce.plan import ExecutionPlan
+from repro.mapreduce.plan import _NCPU, ExecutionPlan
 
 from repro.elastic.snapshot import ElasticState, JobCursor
 
@@ -207,13 +207,15 @@ class ResumableJob:
             ):
                 before = state.cursor
                 t0 = _time.perf_counter()
+                c0 = _time.process_time()
                 state = self.step(state, tokens)
                 for leaf in state.arrays.values():
                     jax.block_until_ready(leaf)
+                cpu = _time.process_time() - c0
                 dt = _time.perf_counter() - t0
                 executed += 1
                 if trace is not None:
-                    self._record_step(trace, before, state, dt)
+                    self._record_step(trace, before, state, dt, cpu)
         except Exception:
             if trace is not None and trace in self.recorder.traces:
                 self.recorder.traces.remove(trace)
@@ -240,7 +242,7 @@ class ResumableJob:
     # ----------------------------------------------------------- telemetry
 
     def _record_step(self, trace, before: JobCursor, after: ElasticState,
-                     wall_s: float) -> None:
+                     wall_s: float, cpu_s: float = 0.0) -> None:
         """One trace phase entry per executed step, counters measured from
         the actual buffers (same discipline as the engine's traced path)."""
         c_after = after.cursor
@@ -253,6 +255,7 @@ class ResumableJob:
                 pairs_emitted=int(pv.sum()),
                 records_in=min(self.input_len, hi * self.S)
                 - min(self.input_len, lo * self.S),
+                cpu_s=cpu_s, cpu_workers=_NCPU,
             )
         elif before.shuffled != c_after.shuffled:
             pairs_out = int(
@@ -270,6 +273,9 @@ class ResumableJob:
                 bytes_dropped=n_dropped * pair_bytes,
                 partitions=self.R, workers=before.workers,
                 partition_capacity=c_after.partition_cap,
+                cpu_s=cpu_s, cpu_workers=_NCPU,
+                net_bytes=pairs_in * pair_bytes,
+                net_s=wall_s,
             )
         else:
             lo, hi = before.reduce_tasks_done, c_after.reduce_tasks_done
@@ -278,6 +284,7 @@ class ResumableJob:
                 "reduce", wall_s,
                 tasks=hi - lo, waves=1, workers=before.workers,
                 segments_out=int((seg != int(PAD_KEY)).sum()),
+                cpu_s=cpu_s, cpu_workers=_NCPU,
             )
 
 

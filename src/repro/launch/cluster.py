@@ -115,8 +115,13 @@ def build_parser() -> argparse.ArgumentParser:
                          "depth per job (default: policy-specific — "
                          "predict-pipeline tunes 1,2,4; others stay at 1)")
     ap.add_argument("--net-capacity", type=float, default=None,
-                    help="fabric bytes/s budget for the predict-resource "
-                         "policy (default: unconstrained = pure SJF)")
+                    help="shared shuffle-fabric bytes/s budget: the "
+                         "simulated ground truth fair-share-stretches "
+                         "overlapping shuffles past it (contention shows "
+                         "up in every policy's makespan and in the "
+                         "exported trace), and the predict-resource "
+                         "policy schedules against it (default: "
+                         "unconstrained fabric)")
     ap.add_argument("--elastic", action="store_true",
                     help="run on the ElasticCluster: running jobs may be "
                          "preempted at wave boundaries and regranted "
@@ -277,6 +282,41 @@ def _exact_quantile(xs, q: float):
     return xs[min(len(xs) - 1, max(0, math.ceil(q * len(xs)) - 1))]
 
 
+def _fabric_kwargs(args, oracle, log) -> dict:
+    """Validated ``net_capacity`` kwarg for cluster construction.
+
+    A fabric budget is only honest when the ground truth can price it:
+    the elastic simulator has no shared-fabric event loop, and an oracle
+    without ``prices_contention`` (an untraced engine oracle) yields no
+    per-phase shuffle windows to stretch.  Refusing loudly beats running
+    a silently uncontended "contended" experiment.
+    """
+    if args.net_capacity is None:
+        return {}
+    if args.elastic:
+        log.warning(
+            "net_capacity_rejected", capacity=args.net_capacity,
+            reason="elastic",
+            msg="--net-capacity needs the base cluster's shared-fabric "
+                "event loop; the elastic simulator does not price "
+                "contention",
+        )
+        raise SystemExit("--net-capacity is incompatible with --elastic")
+    if not getattr(oracle, "prices_contention", False):
+        log.warning(
+            "net_capacity_rejected", capacity=args.net_capacity,
+            reason="oracle", oracle=oracle.platform,
+            msg=f"oracle {oracle.platform!r} cannot price fabric "
+                "contention (no per-phase shuffle windows); use the "
+                "analytic oracle or a traced engine oracle",
+        )
+        raise SystemExit(
+            f"--net-capacity rejected: oracle {oracle.platform!r} cannot "
+            "price contention"
+        )
+    return {"net_capacity": args.net_capacity}
+
+
 def _run_service(args, oracle, log) -> None:
     if args.duration is None and args.until_jobs is None:
         raise SystemExit("--service needs --duration and/or --until-jobs")
@@ -294,6 +334,7 @@ def _run_service(args, oracle, log) -> None:
             f"arms: {', '.join(arms)}",
         stream=args.stream, rate=args.rate, policy=inner_name, arms=arms,
     )
+    fabric_kwargs = _fabric_kwargs(args, oracle, log)
     out: dict[str, dict] = {}
     registries: dict[str, object] = {}
     for kind in arms:
@@ -313,7 +354,7 @@ def _run_service(args, oracle, log) -> None:
                 restore_overhead_s=args.restore_overhead,
             )
         else:
-            cluster = Cluster(args.workers, oracle)
+            cluster = Cluster(args.workers, oracle, **fabric_kwargs)
         cluster.metrics = metrics
 
         def on_health(now, snap, kind=kind):
@@ -495,6 +536,7 @@ def main(argv=None) -> None:
         )
     names = (sorted(POLICIES) if args.policies == "all"
              else args.policies.split(","))
+    fabric_kwargs = _fabric_kwargs(args, oracle, log)
     if args.elastic:
         from repro.elastic import ElasticCluster
 
@@ -504,7 +546,7 @@ def main(argv=None) -> None:
             restore_overhead_s=args.restore_overhead,
         )
     else:
-        cluster = Cluster(args.workers, oracle)
+        cluster = Cluster(args.workers, oracle, **fabric_kwargs)
 
     header = (
         f"{'policy':<18} {'makespan':>9} {'wait':>7} {'turnaround':>10} "

@@ -51,6 +51,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import os as _os
 import time as _time
 
 import jax
@@ -64,6 +65,12 @@ from repro.mapreduce.phases import PAD_KEY, map_phase, reduce_local, \
     run_map_task
 
 __all__ = ["ExecutionPlan"]
+
+
+# Parallelism ceiling recorded with every process-CPU-clock sample: the
+# runtime (XLA) is free to use every host core inside one fenced phase,
+# so the trace's CPU conservation law is cpu_s <= wall_s * cpu_workers.
+_NCPU = float(_os.cpu_count() or 1)
 
 
 def _pad_rows(arr, n_extra: int, fill):
@@ -663,7 +670,9 @@ class ExecutionPlan:
             t_job = _time.perf_counter()
 
             t0 = _time.perf_counter()
+            c0 = _time.process_time()
             bk, bv, bp = jax.block_until_ready(jit_map(tokens))
+            cpu = _time.process_time() - c0
             dt = _time.perf_counter() - t0
             pairs_emitted = int(np.asarray(bp).sum())
             trace.record_phase(
@@ -671,12 +680,15 @@ class ExecutionPlan:
                 tasks=m["mappers"], waves=m["map_waves"],
                 records_in=m["input_len"],
                 pairs_emitted=pairs_emitted, pairs_capacity=m["n_pairs"],
+                cpu_s=cpu, cpu_workers=_NCPU,
             )
 
             t0 = _time.perf_counter()
+            c0 = _time.process_time()
             pk, pv, dropped = jax.block_until_ready(
                 jit_shuffle(bk, bv, bp)
             )
+            cpu = _time.process_time() - c0
             dt = _time.perf_counter() - t0
             n_dropped = int(dropped)
             pairs_out = int((np.asarray(pk) != int(PAD_KEY)).sum())
@@ -689,10 +701,18 @@ class ExecutionPlan:
                 bytes_dropped=n_dropped * pair_bytes,
                 partitions=m["reducers"],
                 partition_capacity=int(pk.shape[1]),
+                cpu_s=cpu, cpu_workers=_NCPU,
+                # Fabric accounting: every emitted pair crosses the wire
+                # (dropped ones included); the transfer occupies the
+                # fabric for the fenced shuffle wall.
+                net_bytes=pairs_emitted * pair_bytes,
+                net_s=dt,
             )
 
             t0 = _time.perf_counter()
+            c0 = _time.process_time()
             ok, ov = jax.block_until_ready(jit_reduce(pk, pv))
+            cpu = _time.process_time() - c0
             dt = _time.perf_counter() - t0
             segments = int((np.asarray(ok) != int(PAD_KEY)).sum())
             trace.record_phase(
@@ -700,6 +720,7 @@ class ExecutionPlan:
                 tasks=m["reducers"], waves=m["reduce_waves"],
                 segments_out=segments,
                 segment_slots=m["reducers"] * int(pk.shape[1]),
+                cpu_s=cpu, cpu_workers=_NCPU,
             )
 
             total = _time.perf_counter() - t_job
@@ -707,11 +728,14 @@ class ExecutionPlan:
                 # Overlap happens *inside* the fenced map/reduce phases
                 # (their walls already absorb it), so the explicit
                 # pipeline phase carries only the cross-phase residual —
-                # conservation still closes over the phase list.
+                # conservation still closes over the phase list.  Host
+                # bookkeeping moves no fabric bytes: net_bytes == 0 is a
+                # checked invariant, not an omission.
                 residual = max(0.0, total - trace.phase_time_sum())
                 trace.record_phase(
                     "pipeline", residual,
                     overlap_depth=D, overlap_s=0.0,
+                    net_bytes=0.0,
                 )
             trace.finish(total)
             return ok, ov, dropped
@@ -889,7 +913,9 @@ class ExecutionPlan:
             t_job = _time.perf_counter()
 
             t0 = _time.perf_counter()
+            c0 = _time.process_time()
             k, v, pv = jax.block_until_ready(jit_map(tokens))
+            cpu = _time.process_time() - c0
             dt = _time.perf_counter() - t0
             pairs_emitted = int(np.asarray(pv).sum())
             trace.record_phase(
@@ -897,12 +923,15 @@ class ExecutionPlan:
                 tasks=M, waves=waves_m, workers=W,
                 records_in=input_len,
                 pairs_emitted=pairs_emitted, pairs_capacity=W * n_local,
+                cpu_s=cpu, cpu_workers=_NCPU,
             )
 
             t0 = _time.perf_counter()
+            c0 = _time.process_time()
             bk, bv, dropped = jax.block_until_ready(
                 jit_shuffle(k, v, pv)
             )
+            cpu = _time.process_time() - c0
             dt = _time.perf_counter() - t0
             per_worker = np.asarray(dropped)
             n_dropped = int(per_worker.sum())
@@ -921,10 +950,15 @@ class ExecutionPlan:
                 partition_capacity=int(bk.shape[-1]),
                 dropped_send=int(per_worker[:, 0].sum()),
                 dropped_recv=int(per_worker[:, 1].sum()),
+                cpu_s=cpu, cpu_workers=_NCPU,
+                net_bytes=pairs_emitted * pair_bytes,
+                net_s=dt,
             )
 
             t0 = _time.perf_counter()
+            c0 = _time.process_time()
             ok, ov = jax.block_until_ready(jit_reduce(bk, bv))
+            cpu = _time.process_time() - c0
             dt = _time.perf_counter() - t0
             ok, ov = to_reducer_major(ok, ov)
             segments = int((np.asarray(ok) != int(PAD_KEY)).sum())
@@ -933,6 +967,7 @@ class ExecutionPlan:
                 tasks=R, waves=waves_r, workers=W,
                 segments_out=segments,
                 segment_slots=W * waves_r * int(bk.shape[-1]),
+                cpu_s=cpu, cpu_workers=_NCPU,
             )
 
             trace.finish(_time.perf_counter() - t_job)

@@ -14,6 +14,11 @@ only ever sees one job.  This package is the cluster-wide layer on top:
                  segment → wave/phase assembled from data the sims already
                  produce, exported as Chrome trace-event JSON (Perfetto)
                  with per-worker-slot tracks and counter tracks
+    resources.py — ``ResourceTimeline``: per-job cpu_s/net_bytes phase
+                 counters folded into cluster-wide utilization series
+                 (fabric bytes/s vs net_capacity, busy CPU vs W), with
+                 over-capacity episode detection, registry gauges, and
+                 pid 4 Chrome counter tracks
     drift.py   — ``PredictionLedger``: every oracle estimate recorded
                  against the realized wall per (app, backend, depth)
                  category; EWMA absolute-relative-error raises a
@@ -43,6 +48,7 @@ from repro.obs.metrics import (
     MetricsRegistry,
     P2Quantile,
 )
+from repro.obs.resources import RESOURCE_PID, ResourceTimeline
 from repro.obs.spans import (
     Span,
     SpanRecorder,
@@ -81,6 +87,8 @@ __all__ = [
     "Histogram",
     "MetricsRegistry",
     "P2Quantile",
+    "RESOURCE_PID",
+    "ResourceTimeline",
     "Span",
     "SpanRecorder",
     "build_span_tree",

@@ -345,13 +345,23 @@ class ClusterMetrics:
 
     def sample(
         self, now: float, queue_depth: int, busy_workers: int,
-        suspended_jobs: int,
+        suspended_jobs: int, *, net_bytes_per_s: float | None = None,
+        net_capacity: float | None = None,
     ) -> None:
-        """Event-granularity gauge sample (queue / busy / suspended)."""
+        """Event-granularity gauge sample (queue / busy / suspended, plus
+        — on fabric-priced runs — aggregate shuffle demand vs capacity).
+        The fabric kwargs are optional so capacity-unlimited callers
+        (the elastic sim) keep their positional 4-arg call unchanged."""
         r = self.registry
         r.gauge("queue_depth").set(queue_depth, t=now)
         r.gauge("busy_workers").set(busy_workers, t=now)
         r.gauge("suspended_jobs").set(suspended_jobs, t=now)
+        if net_bytes_per_s is not None:
+            r.gauge("fabric_bytes_per_s").set(net_bytes_per_s, t=now)
+            if net_capacity:
+                r.gauge("fabric_utilization").set(
+                    net_bytes_per_s / net_capacity, t=now
+                )
         if self.window_s:
             self.win_queue.observe(now, queue_depth)
         self._t_last = float(now)
@@ -374,6 +384,10 @@ class ClusterMetrics:
     def on_finish(self, now: float, rec) -> None:
         r = self.registry
         r.counter("jobs_completed").inc()
+        contention = getattr(rec, "contention_s", 0.0)
+        if contention:
+            r.counter("contended_jobs").inc()
+            r.counter("contention_s_total").inc(float(contention))
         if rec.turnaround is not None:
             self.turnaround.observe(rec.turnaround)
             if self.window_s:

@@ -345,11 +345,16 @@ def _control_events(control_log) -> list[dict]:
     return events
 
 
-def to_chrome_trace(result, *, counters: bool = True, control_log=None) -> dict:
+def to_chrome_trace(result, *, counters: bool = True, control_log=None,
+                    resources=None) -> dict:
     """Export one run as Chrome trace-event JSON (Perfetto-loadable).
 
     ``control_log`` (a list of :class:`~repro.obs.controller.
-    ControlAction`) adds the pid 3 "slo control" tracks."""
+    ControlAction`) adds the pid 3 "slo control" tracks.  ``resources``
+    (a :class:`~repro.obs.resources.ResourceTimeline`, built from the
+    result when omitted) adds the pid 4 "cluster resources" counter
+    tracks — fabric bytes/s vs capacity and busy CPU — whenever the
+    run's traces carry resource counters."""
     root = build_span_tree(result)
     events: list[dict] = [
         _ev("process_name", "M", 0, 1, 0,
@@ -417,6 +422,12 @@ def to_chrome_trace(result, *, counters: bool = True, control_log=None) -> dict:
 
     if counters:
         events += _counter_events(result, flat)
+        if resources is None:
+            from repro.obs.resources import ResourceTimeline
+
+            resources = ResourceTimeline.from_result(result)
+        if resources.has_data:
+            events += resources.counter_events()
     if control_log:
         events += _control_events(control_log)
     return {

@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.compat import compiled_cost_analysis
+from repro.mapreduce.phases import PAIR_BYTES
 from repro.mapreduce.plan import ExecutionPlan
 
 #: cost_analysis key for bytes moved (XLA's name, with fallbacks).
@@ -42,11 +43,19 @@ def _pick(cost: dict, *keys, default: float = 0.0) -> float:
 
 
 def stage_cost_estimates(app, cfg, input_len: int) -> dict[str, dict]:
-    """Per-phase {flops, bytes, flops_per_byte, available} via XLA.
+    """Per-phase {flops, bytes, flops_per_byte, available} via XLA, plus
+    static resource estimates (``cpu_flops``, ``net_bytes``).
 
     Phases are the plan's compute stages (map, shuffle, reduce); collect
     is host-side and has no XLA program.  ``available=False`` (with zeroed
     numbers) means the backend reported no cost model for that stage.
+
+    ``cpu_flops`` mirrors the XLA flop count (everything the lowered
+    program executes runs on host CPU cores here); ``net_bytes`` is the
+    shape-derived fabric upper bound — the shuffle's pair-slot capacity
+    times the wire pair size, zero for the compute phases.  It pairs with
+    the *measured* ``net_bytes`` trace counter (actual emitted pairs) the
+    way ``bytes`` pairs with measured wall times.
     """
     plan = ExecutionPlan(app, cfg, input_len)
     stages = plan.phase_fns()
@@ -73,6 +82,11 @@ def stage_cost_estimates(app, cfg, input_len: int) -> dict[str, dict]:
             "bytes": nbytes,
             "flops_per_byte": flops / nbytes if nbytes > 0 else 0.0,
             "available": bool(cost),
+            "cpu_flops": flops,
+            "net_bytes": (
+                float(meta["n_pairs"] * PAIR_BYTES)
+                if phase == "shuffle" else 0.0
+            ),
         }
     return out
 

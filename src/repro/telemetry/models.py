@@ -49,6 +49,16 @@ DEFAULT_COUNTER_TARGETS = (
     ("shuffle", "bytes_out"),
     ("shuffle", "bytes_dropped"),
     ("reduce", "segments_out"),
+    # Resource counters (PR 9): per-phase CPU seconds against the same
+    # (M, R) basis — the arXiv:1203.4054 companion target — and the
+    # shuffle's on-wire bytes (arXiv:1206.2016), which the fabric-aware
+    # scheduler prices against ``net_capacity``.  Traces that predate the
+    # resource counters simply contribute 0.0 (``JobTrace.counter``'s
+    # default), so fitting on mixed trace vintages stays well-defined.
+    ("map", "cpu_s"),
+    ("shuffle", "cpu_s"),
+    ("reduce", "cpu_s"),
+    ("shuffle", "net_bytes"),
 )
 
 

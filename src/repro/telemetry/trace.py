@@ -23,6 +23,18 @@ configuration, so conservation laws are real invariants:
 * ``map.pairs_emitted == shuffle.pairs_in``
 * per-phase wall times sum to ~the outer job wall time.
 
+Resource counters extend the same discipline to CPU and fabric:
+
+* ``cpu_s`` — process CPU-clock seconds sampled at the same fences as the
+  wall clock, bounded per phase by ``wall_s * cpu_workers`` (the
+  parallelism ceiling in effect when the sample was taken:
+  ``os.cpu_count()`` on real engine fences, W on analytic traces);
+* ``net_bytes`` / ``net_s`` — bytes entering the shuffle fabric and the
+  seconds the transfer occupied it.  ``net_bytes == pairs_in * PAIR_BYTES``
+  exactly (every emitted pair crosses the fabric, dropped ones included),
+  and only the shuffle phase may carry non-zero ``net_bytes`` — bookkeeping
+  phases (``pipeline``, ``contention``) must record it as zero.
+
 ``JobTrace.check_conservation`` verifies all of them and returns the list
 of violations (empty = healthy); the per-backend property tests in
 ``tests/test_telemetry.py`` assert it stays empty for every reduce backend.
@@ -32,6 +44,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import os
 import time
 from typing import Iterable
 
@@ -185,6 +198,49 @@ class JobTrace:
                         f"map pairs_emitted {emitted} != shuffle pairs_in "
                         f"{c('pairs_in')}"
                     )
+            if "net_bytes" in has and "pairs_in" in has:
+                if c("net_bytes") != c("pairs_in") * PAIR_BYTES:
+                    bad.append(
+                        f"shuffle net_bytes {c('net_bytes')} != pairs_in "
+                        f"{c('pairs_in')} * PAIR_BYTES {PAIR_BYTES}"
+                    )
+            if "net_s" in has and c("net_s") < 0:
+                bad.append(f"shuffle net_s {c('net_s')} negative")
+        # Only the shuffle phase moves bytes over the fabric; bookkeeping
+        # phases (pipelined overlap credit, contention stalls) and compute
+        # phases must record net_bytes as exactly zero if they record it.
+        for p in self.phases:
+            if p.phase != "shuffle" and p.counters.get("net_bytes", 0.0):
+                bad.append(
+                    f"{p.phase} net_bytes {p.counters['net_bytes']} != 0 "
+                    "(only shuffle occupies the fabric)"
+                )
+        # CPU law: process CPU-seconds inside one fenced phase cannot
+        # exceed wall x the parallelism ceiling recorded with the sample.
+        # Negative-wall bookkeeping phases (pipelined overlap credit) are
+        # exempt per phase and excluded from the aggregate.
+        cpu_entries = [
+            p for p in self.phases
+            if "cpu_s" in p.counters and p.wall_s >= 0
+        ]
+        for p in cpu_entries:
+            limit = p.counters.get("cpu_workers", 1.0)
+            if p.counters["cpu_s"] > p.wall_s * limit + time_abs_tol:
+                bad.append(
+                    f"{p.phase} cpu_s {p.counters['cpu_s']:.4f} > wall "
+                    f"{p.wall_s:.4f} * cpu_workers {limit:g}"
+                )
+        if cpu_entries:
+            ceiling = max(
+                p.counters.get("cpu_workers", 1.0) for p in cpu_entries
+            )
+            cpu_sum = sum(p.counters["cpu_s"] for p in cpu_entries)
+            wall_sum = sum(p.wall_s for p in cpu_entries)
+            if cpu_sum > wall_sum * ceiling + time_abs_tol:
+                bad.append(
+                    f"sum(cpu_s) {cpu_sum:.4f} > sum(wall) {wall_sum:.4f} "
+                    f"* cpu_workers {ceiling:g}"
+                )
         if self.total_s is not None and self.phases:
             gap = abs(self.total_s - self.phase_time_sum())
             if gap > max(time_rel_tol * self.total_s, time_abs_tol):
@@ -310,13 +366,17 @@ def collect_traced(trace: JobTrace, out_keys, out_vals) -> dict[int, int]:
     from repro.mapreduce.engine import collect_results
 
     t0 = time.perf_counter()
+    c0 = time.process_time()
     result = collect_results(out_keys, out_vals)
+    cpu = time.process_time() - c0
     wall = time.perf_counter() - t0
     trace.record_phase(
         "collect",
         wall,
         unique_keys=len(result),
         bytes_out=len(result) * PAIR_BYTES,
+        cpu_s=cpu,
+        cpu_workers=float(os.cpu_count() or 1),
     )
     if trace.total_s is not None:
         trace.finish(trace.total_s + wall)

@@ -656,6 +656,13 @@ class TestPromGolden:
         h = reg.histogram("turnaround_s", quantiles=(0.5, 0.99))
         for i in range(1, 21):
             h.observe(float(i) / 4.0)
+        # The fabric/CPU gauges the resource timeline publishes.
+        reg.gauge("fabric_bytes_per_s").set(1.5e6)
+        reg.gauge("fabric_utilization").set(0.75)
+        reg.gauge("fabric_net_peak_bytes_per_s").set(2.5e6)
+        reg.gauge("cluster_cpu_mean_busy").set(5.5)
+        reg.counter("contended_jobs").inc(3)
+        reg.counter("fabric_over_capacity_episodes").inc(2)
         return reg
 
     def test_matches_golden_file(self):

@@ -1,0 +1,359 @@
+"""Resource observability: CPU/net phase counters, the shared fabric,
+and the cluster resource timeline.
+
+Covers the PR's three layers end to end: the measurement protocol
+(``cpu_s`` / ``cpu_workers`` / ``net_bytes`` / ``net_s`` at the phase
+fences, with conservation laws) across every execution-plan mode; the
+contention-aware ground truth (:class:`SharedFabric` fair-share pricing
++ the audited per-job ``contention`` phase); and the cluster-wide fold
+(:class:`ResourceTimeline` series, episodes, gauges, Chrome tracks).
+"""
+
+from collections import Counter
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.cluster import (
+    AnalyticOracle,
+    Cluster,
+    generate_workload,
+    get_policy,
+)
+from repro.cluster.oracle import SharedFabric
+from repro.elastic import run_resumable
+from repro.mapreduce import (
+    ExecutionPlan,
+    JobConfig,
+    collect_results,
+    wordcount,
+    wordcount_corpus,
+)
+from repro.obs import (
+    MetricsRegistry,
+    ResourceTimeline,
+    SpanRecorder,
+    to_chrome_trace,
+    validate_chrome_trace,
+)
+from repro.telemetry import JobTrace, PhaseRecorder
+from repro.telemetry.trace import PAIR_BYTES
+
+CORPUS = wordcount_corpus(360, vocab_size=53, seed=9)
+APP = wordcount(53)
+WANT = dict(Counter(np.asarray(CORPUS).tolist()))
+#: every emitted pair crosses the fabric: wordcount emits one pair per
+#: token, so the on-wire bytes are an exact form of the input size.
+NET_BYTES = len(CORPUS) * PAIR_BYTES
+
+
+def _cfg(**kw):
+    kw.setdefault("num_mappers", 5)
+    kw.setdefault("num_reducers", 3)
+    kw.setdefault("num_workers", 2)
+    kw.setdefault("capacity_factor", 8.0)
+    return JobConfig(**kw)
+
+
+def _merged(traces):
+    merged = JobTrace(app=traces[0].app, config=dict(traces[0].config))
+    for t in traces:
+        merged.phases.extend(t.phases)
+    merged.finish(sum(t.total_s for t in traces))
+    return merged
+
+
+class TestModeCounters:
+    """The resource-counter protocol holds in every plan mode, and the
+    deterministic fabric total agrees across all of them (traced is the
+    fenced lowering of fused, so fused is covered by construction)."""
+
+    @pytest.fixture(scope="class")
+    def mesh1(self):
+        return jax.make_mesh((1,), ("workers",))
+
+    def _check(self, trace):
+        assert trace.check_conservation() == []
+        for phase in ("map", "shuffle", "reduce"):
+            p = trace.phase(phase)
+            assert p.counters["cpu_s"] >= 0.0, phase
+            assert p.counters["cpu_workers"] >= 1.0, phase
+        sh = trace.phase("shuffle")
+        assert sh.counters["net_bytes"] == NET_BYTES
+        assert sh.counters["net_s"] >= 0.0
+
+    def test_traced_counters(self):
+        recorder = PhaseRecorder()
+        plan = ExecutionPlan(APP, _cfg(), len(CORPUS))
+        out = plan.traced(recorder)(CORPUS)
+        assert collect_results(out[0], out[1]) == WANT
+        self._check(recorder.last)
+
+    def test_pipelined_traced_counters(self):
+        recorder = PhaseRecorder()
+        plan = ExecutionPlan(APP, _cfg(overlap_depth=2), len(CORPUS))
+        plan.traced(recorder)(CORPUS)
+        trace = recorder.last
+        self._check(trace)
+        # Host bookkeeping moves no fabric bytes: the pipeline phase's
+        # zero is recorded and law-checked, not merely absent.
+        pipe = trace.phase("pipeline")
+        assert pipe.counters["net_bytes"] == 0.0
+
+    def test_sharded_traced_counters(self, mesh1):
+        recorder = PhaseRecorder()
+        cfg = _cfg(num_workers=1, shuffle_backend="all_to_all")
+        plan = ExecutionPlan(APP, cfg, len(CORPUS))
+        plan.sharded(mesh1, recorder=recorder)(CORPUS)
+        self._check(recorder.last)
+
+    def test_resumable_counters(self):
+        recorder = PhaseRecorder()
+        plan = ExecutionPlan(APP, _cfg(), len(CORPUS))
+        job = plan.resumable(recorder=recorder)
+        run_resumable(job, CORPUS)
+        self._check(_merged(recorder.traces))
+
+    def test_law_violations_are_caught(self):
+        # Fabric bytes outside the shuffle.
+        t = JobTrace(app="x", config={})
+        t.record_phase("map", 1.0, net_bytes=64.0)
+        assert any("only shuffle" in v for v in t.check_conservation())
+        # On-wire bytes must be the exact pair form.
+        t = JobTrace(app="x", config={})
+        t.record_phase(
+            "shuffle", 1.0, pairs_in=10, pairs_out=10, pairs_dropped=0,
+            net_bytes=7.0,
+        )
+        assert any("PAIR_BYTES" in v for v in t.check_conservation())
+        # The wire cannot run for negative seconds.
+        t = JobTrace(app="x", config={})
+        t.record_phase("shuffle", 1.0, net_s=-0.5)
+        assert any("net_s" in v for v in t.check_conservation())
+        # CPU seconds cannot exceed wall x the parallelism ceiling.
+        t = JobTrace(app="x", config={})
+        t.record_phase("reduce", 1.0, cpu_s=9.0, cpu_workers=2.0)
+        assert any("cpu_s" in v for v in t.check_conservation())
+
+    def test_negative_wall_phase_exempt_from_cpu_law(self):
+        # The analytic pipelined trace books overlap as negative wall;
+        # it must not trip the per-phase CPU law.
+        oracle = AnalyticOracle(noise=0.0)
+        oracle.time("wordcount", "jnp", 1 << 14, 8, 8, 4, depth=2)
+        trace = oracle.take_trace()
+        pipe = trace.phase("pipeline")
+        assert pipe.wall_s < 0
+        assert pipe.counters["net_bytes"] == 0.0
+        assert trace.check_conservation() == []
+
+
+class TestAnalyticResourceCounters:
+    def test_cpu_within_wall_budget(self):
+        oracle = AnalyticOracle(noise=0.0)
+        oracle.time("wordcount", "jnp", 1 << 15, 8, 8, 4)
+        trace = oracle.take_trace()
+        assert trace.check_conservation() == []
+        for phase in ("map", "shuffle", "reduce"):
+            p = trace.phase(phase)
+            assert 0.0 <= p.counters["cpu_s"] <= p.wall_s * 4 + 1e-9
+        assert trace.counter("shuffle", "net_bytes") == (1 << 15) * 8
+
+    def test_profile_exposes_cpu_and_net(self):
+        oracle = AnalyticOracle(noise=0.0)
+        prof = oracle.phase_profile("wordcount", "jnp", 1 << 14, 8, 8, 4)
+        assert set(prof["cpu_s"]) == {"map", "shuffle", "reduce"}
+        assert prof["net_bytes"] == prof["shuffle_bytes"]
+        assert all(v >= 0 for v in prof["cpu_s"].values())
+
+
+class TestSharedFabric:
+    def test_uncontended_transfer_has_no_stretch(self):
+        fabric = SharedFabric(100.0)
+        assert fabric.admit(0, 0.0, 2.0, 150.0) == 0.0  # 75 B/s < 100
+        assert fabric.episodes == []
+
+    def test_fair_share_stretch_hand_checked(self):
+        # t=0: job 0 moves 100 B in 1 s (rate 100 = capacity, alone ok).
+        # t=0: job 1 wants 100 B in 1 s too -> demand 200 vs capacity
+        # 100: both halves run at fair share 50 B/s, so job 1 drains
+        # 50 B by t=1 and the rest at full rate 100: done at t=1.5.
+        fabric = SharedFabric(100.0)
+        assert fabric.admit(0, 0.0, 1.0, 100.0) == 0.0
+        stretch = fabric.admit(1, 0.0, 1.0, 100.0)
+        assert stretch == pytest.approx(0.5)
+        (ep,) = fabric.episodes
+        assert ep["job_id"] == 1
+        assert ep["peak_bytes_per_s"] == pytest.approx(200.0)
+        assert ep["contention_s"] == pytest.approx(0.5)
+
+    def test_disjoint_transfers_never_interact(self):
+        fabric = SharedFabric(10.0)
+        assert fabric.admit(0, 0.0, 1.0, 9.0) == 0.0
+        assert fabric.admit(1, 5.0, 1.0, 9.0) == 0.0
+        assert fabric.contention_s_total == 0.0
+
+    def test_prune_drops_finished_transfers(self):
+        fabric = SharedFabric(10.0)
+        fabric.admit(0, 0.0, 1.0, 9.0)
+        fabric.admit(1, 10.0, 1.0, 9.0)
+        fabric.prune(5.0)
+        assert len(fabric._transfers) == 1
+
+    @given(
+        starts=st.lists(
+            st.floats(min_value=0.0, max_value=50.0), min_size=2,
+            max_size=8,
+        ),
+        gap=st.floats(min_value=0.01, max_value=2.0),
+    )
+    @settings(max_examples=25)
+    def test_disjoint_lifetimes_never_reorder(self, starts, gap):
+        """Property: transfers with disjoint windows are causally
+        independent — zero stretch each, so completion order stays the
+        arrival order of the windows."""
+        fabric = SharedFabric(25.0)
+        t, windows = 0.0, []
+        for i, s in enumerate(sorted(starts)):
+            start = t + s  # strictly after the previous window closed
+            nominal = 0.5 + gap
+            stretch = fabric.admit(i, start, nominal, 20.0 * nominal)
+            assert stretch == 0.0
+            windows.append((i, start + nominal + stretch))
+            t = start + nominal + gap
+        finishes = [f for _, f in windows]
+        assert finishes == sorted(finishes)
+        assert fabric.episodes == []
+
+
+class TestClusterContention:
+    def _contended(self):
+        oracle = AnalyticOracle(noise=0.02, seed=3)
+        jobs = generate_workload(
+            12, seed=3, arrival="bursty", mean_interarrival=0.02,
+            size_range=(1 << 16, 1 << 18),
+        )
+        policy = get_policy(
+            "fifo-static", workers=2, mappers=8, reducers=8
+        )
+        return Cluster(8, oracle, net_capacity=2e5).run(jobs, policy)
+
+    def test_contention_stretches_and_audits(self):
+        result = self._contended()
+        m = result.metrics()
+        assert m["n_contended_jobs"] > 0
+        assert m["contention_s_total"] > 0
+        assert result.net_capacity == 2e5
+        assert result.contention_episodes
+        for rec in result.records:
+            if rec.contention_s:
+                names = rec.trace.phase_names()
+                # audited right after the shuffle it stretched
+                assert names.index("contention") == (
+                    names.index("shuffle") + 1
+                )
+                p = rec.trace.phase("contention")
+                assert p.wall_s == pytest.approx(rec.contention_s)
+                assert p.counters["net_bytes"] == 0.0
+                assert p.counters["cpu_s"] == 0.0
+            # walls still tile the audited turnaround exactly
+            assert rec.trace.check_conservation() == []
+            assert rec.trace.phase_time_sum() == pytest.approx(
+                rec.true_time
+            )
+
+    def test_span_tiling_closes_over_contention(self):
+        result = self._contended()
+        rec = SpanRecorder()
+        rec.record(result)
+        assert rec.check() == []
+
+    def test_slower_than_uncontended(self):
+        contended = self._contended()
+        oracle = AnalyticOracle(noise=0.02, seed=3)
+        jobs = generate_workload(
+            12, seed=3, arrival="bursty", mean_interarrival=0.02,
+            size_range=(1 << 16, 1 << 18),
+        )
+        policy = get_policy(
+            "fifo-static", workers=2, mappers=8, reducers=8
+        )
+        free = Cluster(8, oracle).run(jobs, policy)
+        assert (
+            contended.metrics()["makespan_s"]
+            > free.metrics()["makespan_s"]
+        )
+
+    def test_rejects_oracle_that_cannot_price_contention(self):
+        class Blind:
+            platform = "blind"
+
+            def time(self, *a, **k):
+                return 1.0
+
+        with pytest.raises(ValueError, match="cannot price contention"):
+            Cluster(8, Blind(), net_capacity=1e6)
+        Cluster(8, Blind())  # unconstrained fabric stays fine
+
+
+class TestResourceTimeline:
+    def _result(self):
+        return TestClusterContention()._contended()
+
+    def test_series_and_episodes(self):
+        tl = ResourceTimeline.from_result(self._result())
+        assert tl.has_data
+        s = tl.summary()
+        # nominal demand exceeds the budget that stretched the run
+        assert s["net_peak_bytes_per_s"] > 2e5
+        assert s["n_over_capacity_episodes"] > 0
+        assert s["over_capacity_s"] > 0
+        assert s["net_peak_utilization"] > 1.0
+        assert 0 < s["cpu_peak_busy"] <= 8.0
+        for e in tl.over_capacity_episodes():
+            assert e["t1"] > e["t0"]
+            assert e["peak_bytes_per_s"] > e["capacity"]
+
+    def test_series_levels_close_to_zero(self):
+        tl = ResourceTimeline.from_result(self._result())
+        for series in (tl.net_series(), tl.cpu_series()):
+            assert series[-1][1] == pytest.approx(0.0, abs=1e-9)
+            assert all(level > -1e-9 for _, level in series)
+
+    def test_publish_gauges(self):
+        registry = MetricsRegistry()
+        tl = ResourceTimeline.from_result(self._result())
+        summary = tl.publish(registry)
+        text = registry.to_prom_text()
+        assert "fabric_net_peak_bytes_per_s" in text
+        assert "cluster_cpu_mean_busy" in text
+        assert "fabric_over_capacity_episodes" in text
+        assert summary == tl.summary()
+
+    def test_chrome_counter_tracks(self):
+        result = self._result()
+        doc = to_chrome_trace(result)
+        assert validate_chrome_trace(doc) == []
+        names = {e["name"] for e in doc["traceEvents"]
+                 if e.get("ph") == "C"}
+        assert {"fabric_bytes_per_s", "fabric_capacity",
+                "busy_cpu"} <= names
+        procs = {
+            e["args"]["name"] for e in doc["traceEvents"]
+            if e.get("ph") == "M" and e.get("name") == "process_name"
+        }
+        assert "cluster resources" in procs
+
+    def test_empty_result_has_no_data(self):
+        oracle = AnalyticOracle(noise=0.0)
+        result = Cluster(4, oracle).run(
+            generate_workload(1, seed=0),
+            get_policy("fifo-static", workers=2),
+        )
+        for rec in result.records:
+            rec.trace = None
+        tl = ResourceTimeline.from_result(result)
+        assert not tl.has_data
+        assert tl.summary()["net_peak_bytes_per_s"] == 0.0

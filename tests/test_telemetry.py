@@ -140,6 +140,9 @@ class TestConservation:
     def test_counters_identical_across_reduce_backends(self):
         corpus = wordcount_corpus(1200, vocab_size=64, seed=5)
         app = wordcount(64)
+        # cpu_s / net_s are clock measurements (they vary run to run);
+        # every *deterministic* counter must match across backends.
+        timing = {"cpu_s", "net_s"}
         per_backend = {}
         for backend in ALL_REDUCE:
             trace, _ = traced_run(
@@ -147,7 +150,10 @@ class TestConservation:
                 capacity_factor=4.0, reduce_backend=backend,
             )
             per_backend[backend] = {
-                p.phase: dict(p.counters) for p in trace.phases
+                p.phase: {
+                    k: v for k, v in p.counters.items() if k not in timing
+                }
+                for p in trace.phases
             }
         ref = per_backend[ALL_REDUCE[0]]
         for backend, counters in per_backend.items():
@@ -175,7 +181,11 @@ class TestConservation:
                 trace.counter("shuffle", "pairs_out") + int(dropped) == n
             ), backend
             per_backend[backend] = {
-                p.phase: dict(p.counters) for p in trace.phases
+                p.phase: {
+                    k: v for k, v in p.counters.items()
+                    if k not in ("cpu_s", "net_s")  # clock-valued
+                }
+                for p in trace.phases
             }
         ref = per_backend[ALL_REDUCE[0]]
         assert all(c == ref for c in per_backend.values())
@@ -214,6 +224,17 @@ class TestEstimator:
             assert isinstance(e["available"], bool)
             if e["available"]:
                 assert e["bytes"] > 0, phase
+            # static per-phase resource estimates pair with the measured
+            # trace counters: cpu_flops everywhere, fabric bytes only on
+            # the shuffle (the exact pairs * PAIR_BYTES form).
+            assert e["cpu_flops"] == e["flops"], phase
+            if phase == "shuffle":
+                from repro.telemetry.trace import PAIR_BYTES
+
+                assert e["net_bytes"] > 0
+                assert e["net_bytes"] % PAIR_BYTES == 0
+            else:
+                assert e["net_bytes"] == 0.0, phase
 
     def test_more_setup_rounds_cost_more_map_flops(self):
         app = wordcount(64)
