@@ -5,7 +5,8 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast test-elastic test-plan bench-quick bench-backends \
 	bench-cluster bench-phases bench-elastic bench-pipeline bench-obs \
-	bench-service bench-resource bench-check trace-demo lint
+	bench-service bench-resource bench-combine bench-check trace-demo \
+	lint
 
 # Tier-1 verify (ROADMAP.md).
 test:
@@ -82,6 +83,14 @@ bench-service:
 # counter tracks).
 bench-resource:
 	$(PYTHON) -m benchmarks.run --quick --sections resource
+
+# Just the combine section: map-side combining — live-engine shuffle-byte
+# contraction on skewed WordCount (net_reduction gated, bit-exactness
+# asserted in-bench), contended-fabric makespan win from opening the
+# combiner axis (contended_win gated), and heldout combined-bytes model
+# error (lands combine.trace.json with the combine phase counters).
+bench-combine:
+	$(PYTHON) -m benchmarks.run --quick --sections combine
 
 # Small committed example trace: a contended elastic run with
 # suspend-to-disk, exported as Chrome trace-event JSON + service metrics.

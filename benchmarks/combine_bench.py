@@ -1,0 +1,304 @@
+"""Benchmark section ``combine``: map-side combining's two claims.
+
+* **contraction** — on the *skewed* WordCount corpus (Zipf word ids, the
+  natural-language skew the paper's shuffle models care about), turning
+  the combiner on must contract the shuffle's on-wire bytes by at least
+  30% while leaving the job output **bit-exact**: the guarded metric is
+  ``net_reduction`` — combiner-on ``shuffle.net_bytes`` over combiner-off
+  — which must stay <= 0.7 and is gated (lower-is-better) against the
+  committed value by ``run.py --check``.  The experiment runs the *live
+  traced engine* both ways and asserts in-bench that the collected
+  (key -> value) dicts match exactly and that neither run drops pairs,
+  so the contraction is never bought with wrong answers.  The
+  combiner-on per-phase trace (with its ``combine`` phase and conserved
+  counters) is exported as ``combine.trace.json``.
+
+* **scheduling** — on a *contended* fabric (``Cluster(...,
+  net_capacity=...)``), a predictive policy that may choose the combiner
+  per job (``predict-combine``: the category grid widens along the
+  combine axis) must beat the identical policy with the axis closed
+  (``predict-sjf``) on makespan: the combiner trades a little map-side
+  compute for a large shuffle-byte contraction, which is exactly what a
+  saturated fabric rewards.  The guarded metric is ``contended_win`` —
+  combiner-blind makespan over combiner-aware makespan, > 1,
+  gated higher-is-better.
+
+* **models** — the combined shuffle-bytes curve is *nonlinear* in (M,
+  size): per-task distinct keys follow the occupancy expectation
+  ``V * (1 - (1 - 1/V)^s)``, not ``s`` itself.  The per-phase regression
+  (same quadratic (M, R, size) basis as PR 9) fit on combiner-on
+  analytic traces must still track it on held-out configs:
+  ``combined_net_mae_pct`` is gated lower-is-better within a 10% band
+  (against ~0.01% for the uncombined exact form — the gap is the price
+  of the nonlinearity, and the reason the combiner is a *modelable*
+  axis rather than a constant rescale).
+
+The scheduling and model experiments are closed-form analytic
+simulations: committed values and CI re-runs must agree exactly.  The
+contraction experiment runs the real engine, but its guarded ratio is a
+deterministic function of (corpus seed, config) — byte counters are
+measured from the arrays, not wall-clocked.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import heldout_configs, training_configs
+from repro.cluster import (
+    AnalyticOracle,
+    Cluster,
+    generate_workload,
+    get_policy,
+)
+
+SEED = 13
+
+# ---- contraction experiment (live engine) ---------------------------------
+
+ENGINE_M, ENGINE_R, ENGINE_W = 8, 4, 4
+ZIPF_A = 1.3
+#: the gate: combiner-on net bytes over combiner-off must stay under this.
+NET_REDUCTION_BAND = 0.7
+
+# ---- scheduling experiment ------------------------------------------------
+
+SCHED_JOBS = 32
+SCHED_WORKERS = 8
+#: same contended-fabric setup as the resource section: a lone shuffle
+#: already stretches, overlaps stretch much harder — so halving shuffle
+#: bytes is worth far more than the combine stage costs.
+NET_CAPACITY = 1.5e6
+SCHED_SIZES = (1 << 16, 1 << 18)
+SCHED_INTERARRIVAL = 0.03
+
+# ---- model experiment -----------------------------------------------------
+
+MODEL_APP = "wordcount"
+MODEL_SIZES = (1 << 14, 1 << 15, 1 << 16)
+MODEL_WORKERS = 8
+MODEL_REPEATS = 3
+MODEL_NOISE = 0.03
+#: heldout MAE band for the *combined* net-bytes model (percent).  The
+#: occupancy curve is nonlinear in the quadratic basis, so the band is
+#: wide where the uncombined exact form's is numerical (0.01%).
+COMBINED_NET_BAND_PCT = 10.0
+
+
+def run_contraction(tokens: int, outdir: str | None) -> dict:
+    """Traced engine, combiner off vs on, same corpus/config: byte
+    contraction + bit-exactness + conservation."""
+    import dataclasses
+
+    import jax.numpy as jnp
+
+    from repro.mapreduce import JobConfig, build_job
+    from repro.mapreduce.apps import wordcount
+    from repro.mapreduce.datagen import wordcount_corpus
+    from repro.mapreduce.engine import collect_results
+    from repro.telemetry import PhaseRecorder
+
+    app = wordcount()
+    corpus = jnp.asarray(
+        wordcount_corpus(tokens, app.key_space, zipf_a=ZIPF_A, seed=SEED)
+    )
+    cfg_off = JobConfig(
+        num_mappers=ENGINE_M, num_reducers=ENGINE_R, num_workers=ENGINE_W,
+        reduce_backend="jnp", combiner=False,
+    )
+    cfg_on = dataclasses.replace(cfg_off, combiner=True)
+
+    results, traces = {}, {}
+    for label, cfg in (("off", cfg_off), ("on", cfg_on)):
+        rec = PhaseRecorder()
+        job = build_job(app, cfg, int(corpus.shape[0]), recorder=rec)
+        out_keys, out_vals, dropped = job(corpus)
+        if int(dropped) != 0:
+            raise AssertionError(
+                f"combiner={label}: {int(dropped)} pairs dropped — the "
+                "contraction comparison requires lossless runs"
+            )
+        violations = rec.last.check_conservation()
+        if violations:
+            raise AssertionError(
+                f"combiner={label}: conservation violated: {violations}"
+            )
+        results[label] = collect_results(out_keys, out_vals)
+        traces[label] = rec.last
+    # Bit-exactness: sum is commutative+associative, so pre-aggregating
+    # per task must not change a single output value.
+    if results["on"] != results["off"]:
+        raise AssertionError(
+            "combiner changed the job output — combine is only legal "
+            "because it is semantics-preserving, so this is a real bug"
+        )
+    net_off = traces["off"].counter("shuffle", "net_bytes")
+    net_on = traces["on"].counter("shuffle", "net_bytes")
+    net_reduction = net_on / max(net_off, 1e-9)
+    if outdir:
+        os.makedirs(outdir, exist_ok=True)
+        with open(os.path.join(outdir, "combine.trace.json"), "w") as f:
+            f.write(traces["on"].to_json(indent=1))
+    return {
+        "tokens": int(tokens),
+        "mappers": ENGINE_M,
+        "zipf_a": ZIPF_A,
+        "net_bytes_off": int(net_off),
+        "net_bytes_on": int(net_on),
+        "combine_pairs_in": int(traces["on"].counter("combine", "pairs_in")),
+        "combine_pairs_out": int(
+            traces["on"].counter("combine", "pairs_out")
+        ),
+        # Guarded (lower-better) by run.py --check.
+        "net_reduction": round(net_reduction, 4),
+        "within_band": net_reduction <= NET_REDUCTION_BAND,
+        "band": NET_REDUCTION_BAND,
+        "bit_exact": True,          # asserted above, recorded for the row
+        "unique_keys": len(results["on"]),
+    }
+
+
+def _policy(name: str, *, combiner: bool):
+    kwargs = dict(
+        seed=SEED,
+        # One grant size so several jobs co-schedule (8 workers / grant 2
+        # = 4 concurrent shuffles): the fabric, not the pool, is the
+        # bottleneck under test — same setup as the resource section.
+        worker_grid=(2,),
+        mapper_grid=(4, 8, 16),
+        reducer_grid=(4, 8, 16),
+        online=False,
+    )
+    if combiner:
+        kwargs["combiner_grid"] = (False, True)
+    return get_policy(name, **kwargs)
+
+
+def sched_run(policy_name: str, *, combiner: bool) -> dict:
+    oracle = AnalyticOracle(noise=0.02, seed=SEED)
+    jobs = generate_workload(
+        SCHED_JOBS, seed=SEED, arrival="bursty",
+        mean_interarrival=SCHED_INTERARRIVAL, size_range=SCHED_SIZES,
+    )
+    cluster = Cluster(SCHED_WORKERS, oracle, net_capacity=NET_CAPACITY)
+    result = cluster.run(jobs, _policy(policy_name, combiner=combiner))
+    m = result.metrics()
+    return {
+        "makespan_s": m["makespan_s"],
+        "mean_turnaround_s": m["mean_turnaround_s"],
+        "contention_s_total": round(m["contention_s_total"], 4),
+        "n_contended_jobs": m["n_contended_jobs"],
+        "combiner_histogram": m["combiner_histogram"],
+    }
+
+
+def _collect(oracle, configs, job_ids) -> tuple[np.ndarray, list]:
+    """(params, traces_per_config) over the (M, R) x size grid, with the
+    combiner on — every trace carries the combine phase and contracted
+    shuffle counters."""
+    params, traces = [], []
+    for m, r in configs:
+        for size in MODEL_SIZES:
+            reps = []
+            for j in job_ids:
+                oracle.time(
+                    MODEL_APP, "jnp", size, int(m), int(r),
+                    MODEL_WORKERS, job_id=j, combiner=True,
+                )
+                reps.append(oracle.take_trace())
+            params.append((float(m), float(r), float(size) / 1024.0))
+            traces.append(reps)
+    return np.asarray(params, dtype=np.float64), traces
+
+
+def run_models() -> dict:
+    from repro.telemetry.models import (
+        fit_phase_models,
+        targets_from_traces,
+    )
+
+    fit_kwargs = dict(degree=2, cross_terms=True, scale=True, lam=1e-8)
+    train_p, train_t = _collect(
+        AnalyticOracle(noise=MODEL_NOISE, seed=SEED),
+        training_configs(), job_ids=range(MODEL_REPEATS),
+    )
+    models = fit_phase_models(
+        train_p, targets_from_traces(train_t), **fit_kwargs
+    )
+    held_p, held_t = _collect(
+        AnalyticOracle(noise=0.0, seed=SEED), heldout_configs(),
+        job_ids=(0,),
+    )
+    truth = targets_from_traces(held_t)
+
+    def mae_pct(phase: str, resource: str) -> float:
+        pred = models.predict(phase, resource, held_p)
+        true = truth[(phase, resource)]
+        return float(np.mean(np.abs(pred - true) / np.abs(true)) * 100.0)
+
+    net_mae = round(mae_pct("shuffle", "net_bytes"), 3)
+    pairs_mae = round(mae_pct("combine", "pairs_out"), 3)
+    return {
+        "n_train": int(train_p.shape[0]),
+        "n_heldout": int(held_p.shape[0]),
+        # Guarded (lower-better): the combined-bytes curve is nonlinear
+        # in the basis, so the band is 10%, not the exact-form 0.01%.
+        "combined_net_mae_pct": net_mae,
+        "combined_net_band_pct": COMBINED_NET_BAND_PCT,
+        "net_within_band": net_mae <= COMBINED_NET_BAND_PCT,
+        "combine_pairs_mae_pct": pairs_mae,
+        "combine_time_mae_pct": round(mae_pct("combine", "time_s"), 3),
+    }
+
+
+def main(
+    tokens: int, repeats: int, outdir: str | None = None
+) -> tuple[list[str], dict]:
+    """Section entry point.  ``repeats`` is unused (byte counters are
+    deterministic, the simulations closed-form); ``tokens`` sizes only
+    the live-engine contraction run."""
+    del repeats
+    contraction = run_contraction(tokens, outdir)
+    blind = sched_run("predict-sjf", combiner=False)
+    aware = sched_run("predict-combine", combiner=True)
+    contended_win = blind["makespan_s"] / max(aware["makespan_s"], 1e-9)
+    model = run_models()
+
+    rows = [
+        "combine,experiment,metric,value",
+        *(
+            f"combine,contraction,{k},{v}"
+            for k, v in sorted(contraction.items())
+        ),
+        *(
+            f"combine,sched_blind,{k},{v}"
+            for k, v in sorted(blind.items()) if not isinstance(v, dict)
+        ),
+        *(
+            f"combine,sched_aware,{k},{v}"
+            for k, v in sorted(aware.items()) if not isinstance(v, dict)
+        ),
+        f"combine,sched,contended_win,{contended_win:.3f}",
+        *(f"combine,models,{k},{v}" for k, v in sorted(model.items())),
+    ]
+    summary = {
+        # net_reduction is guarded (lower-better).
+        "contraction": contraction,
+        "scheduling": {
+            "net_capacity": NET_CAPACITY,
+            "n_jobs": SCHED_JOBS,
+            "workers": SCHED_WORKERS,
+            "blind": blind,
+            "aware": aware,
+            # Guarded (higher-better): opening the combiner axis must
+            # keep beating the closed-axis twin on the contended trace.
+            "contended_win": round(contended_win, 3),
+            "aware_wins": contended_win > 1.0,
+        },
+        # combined_net_mae_pct is guarded (lower-better).
+        "models": model,
+    }
+    return rows, summary

@@ -19,6 +19,11 @@ Sections (CSV rows on stdout):
             control must strictly beat a static admission cap on both
             p99 turnaround and SLO-good goodput (also lands
             service.trace.json / service.prom artifacts)
+  combine — beyond-paper: map-side combining — live-engine shuffle-byte
+            contraction on skewed WordCount (bit-exactness asserted
+            in-bench), contended-fabric makespan win from opening the
+            combiner axis, heldout combined-bytes model error (also
+            lands combine.trace.json)
   roofline— §Roofline table from the dry-run artifacts
   kernels — per-kernel microbench (us/call, interpret mode)
 
@@ -48,8 +53,8 @@ import time
 
 ALL_SECTIONS = (
     "table1", "fig3", "fig4", "tuner", "backends", "phases", "cluster",
-    "elastic", "pipeline", "obs", "service", "resource", "roofline",
-    "kernels",
+    "elastic", "pipeline", "obs", "service", "resource", "combine",
+    "roofline", "kernels",
 )
 
 
@@ -161,6 +166,9 @@ def run_section(sec: str, tokens: int, repeats: int, outdir: str = ""):
     if sec == "resource":
         from benchmarks import resource_bench
         return resource_bench.main(tokens, repeats, outdir=outdir or None)
+    if sec == "combine":
+        from benchmarks import combine_bench
+        return combine_bench.main(tokens, repeats, outdir=outdir or None)
     if sec == "roofline":
         from benchmarks import roofline
         return roofline.main(), None
@@ -181,7 +189,8 @@ def _walk_metrics(summary, path=""):
             if k in (
                 "makespan_s", "slo_attainment", "speedup", "recovery",
                 "p99_turnaround_s", "goodput", "makespan_win",
-                "cpu_mae_pct", "net_mae_pct",
+                "cpu_mae_pct", "net_mae_pct", "net_reduction",
+                "contended_win", "combined_net_mae_pct",
             ) and isinstance(v, (int, float)):
                 yield p, k, float(v)
             else:
@@ -252,7 +261,7 @@ def check_regressions(committed: dict, fresh: dict) -> list[str]:
             new_v = new_metrics[p][1]
             if kind in (
                 "makespan_s", "p99_turnaround_s", "cpu_mae_pct",
-                "net_mae_pct",
+                "net_mae_pct", "net_reduction", "combined_net_mae_pct",
             ) and (
                 new_v > old_v * (1 + CHECK_TOLERANCE)
             ):
@@ -262,7 +271,7 @@ def check_regressions(committed: dict, fresh: dict) -> list[str]:
                 )
             elif kind in (
                 "slo_attainment", "speedup", "recovery", "goodput",
-                "makespan_win",
+                "makespan_win", "contended_win",
             ) and new_v < old_v * (1 - CHECK_TOLERANCE):
                 problems.append(
                     f"{sec}: {p} regressed {old_v:.3f} -> {new_v:.3f} "

@@ -10,6 +10,10 @@ any path) with --phase-times.
     PYTHONPATH=src python examples/mapreduce_wordcount.py --phase-times
     # software-pipelined wave schedule (bit-exact vs fused):
     PYTHONPATH=src python examples/mapreduce_wordcount.py --depth 4
+    # map-side combining (bit-exact; contracts shuffle bytes — pair
+    # --combiner with --phase-times to see the combine phase counters):
+    PYTHONPATH=src python examples/mapreduce_wordcount.py \
+        --combiner --phase-times
     # multi-worker shuffle:
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
         PYTHONPATH=src python examples/mapreduce_wordcount.py --workers 4
@@ -38,6 +42,11 @@ def main() -> None:
     ap.add_argument("--depth", type=int, default=1,
                     help="overlap depth: group this many waves per "
                          "software-pipeline step (1 = serial fused)")
+    ap.add_argument("--combiner", action="store_true",
+                    help="map-side combine: pre-aggregate each map "
+                         "task's pairs before the shuffle (bit-exact "
+                         "for WordCount's sum; contracts shuffle bytes "
+                         "hard on the Zipf-skewed corpus)")
     ap.add_argument("--phase-times", action="store_true",
                     help="run the traced mode: fence + wall-clock each "
                          "phase (three fenced mesh programs when sharded)")
@@ -50,6 +59,7 @@ def main() -> None:
     cfg = JobConfig(
         num_mappers=args.mappers, num_reducers=args.reducers,
         num_workers=args.workers, overlap_depth=args.depth,
+        combiner=args.combiner,
     )
     recorder = None
     if args.phase_times:
@@ -82,6 +92,8 @@ def main() -> None:
     dt = time.perf_counter() - t0
     counts = collect_results(ok, ov)
     top = sorted(counts.items(), key=lambda kv: -kv[1])[:10]
+    if args.combiner:
+        path += ", combiner on"
     print(f"{args.tokens} tokens, M={cfg.num_mappers} R={cfg.num_reducers} "
           f"({cfg.map_waves}/{cfg.reduce_waves} waves), {path}")
     print(f"execution time: {dt * 1e3:.1f}ms; dropped={int(dropped)}")

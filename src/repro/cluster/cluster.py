@@ -34,6 +34,7 @@ class Plan:
     workers: int                      # worker slots granted from the pool
     predicted_time: float | None = None  # policy's prediction, if it made one
     depth: int = 1                    # pipelined overlap depth (1 = serial)
+    combiner: bool = False            # map-side combine stage on/off
 
     def __post_init__(self):
         if self.mappers < 1 or self.reducers < 1 or self.workers < 1:
@@ -197,6 +198,14 @@ class TraceResult:
             "depth_histogram": {
                 str(r.plan.depth): sum(
                     1 for q in done if q.plan.depth == r.plan.depth
+                )
+                for r in done
+            },
+            # Combiner-choice split (all "off" for combiner-unaware
+            # policies) — how often the map-side combine axis paid off.
+            "combiner_histogram": {
+                ("on" if r.plan.combiner else "off"): sum(
+                    1 for q in done if q.plan.combiner == r.plan.combiner
                 )
                 for r in done
             },
@@ -472,9 +481,11 @@ class Cluster:
                 rec = records[job.job_id]
                 rec.plan = plan
                 rec.start = now
-                # depth=1 stays out of the call so depth-unaware oracle
-                # stand-ins (tests, stubs) keep their narrow signature.
+                # Off-default knobs stay out of the call so knob-unaware
+                # oracle stand-ins (tests, stubs) keep narrow signatures.
                 extra = {"depth": plan.depth} if plan.depth != 1 else {}
+                if plan.combiner:
+                    extra["combiner"] = True
                 rec.true_time = self.oracle.time(
                     job.app, plan.backend, job.size,
                     plan.mappers, plan.reducers, plan.workers,

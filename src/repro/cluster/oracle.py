@@ -40,10 +40,35 @@ PROFILE_JOB_ID = 1_000_000
 #: eximparse: one pair per 3-token record) — sizes the shuffle traffic.
 _PAIRS_PER_TOKEN = {"wordcount": 1.0, "eximparse": 1.0 / 3.0}
 
+#: key-space size per application — must match the corpora the
+#: :class:`EngineOracle` builds (wordcount vocab 4096, eximparse 1024
+#: transactions), because the analytic combined-bytes term is a
+#: distinct-keys expectation over exactly this space.
+_KEY_SPACE = {"wordcount": 4096, "eximparse": 1024}
+
+
+def expected_combined_pairs(app: str, size: int, mappers: int) -> float:
+    """Closed-form post-combine shuffle pairs for one job.
+
+    A map task emits ``s = pairs_per_token * size / M`` pairs drawn from a
+    key space of ``V`` keys; after map-side combining it ships one pair
+    per *distinct* key, whose expectation under uniform draws is the
+    coupon-collector occupancy ``V * (1 - (1 - 1/V)^s)``.  Clamped by the
+    emitted count (a combiner never expands the stream), summed over the
+    M tasks.  Real corpora are Zipf-skewed, not uniform, so this is an
+    upper bound on the true combined traffic — the model error the
+    heldout bench measures.
+    """
+    V = float(_KEY_SPACE[app])
+    s = _PAIRS_PER_TOKEN[app] * float(size) / max(1, int(mappers))
+    distinct = V * (1.0 - (1.0 - 1.0 / V) ** s)
+    return int(mappers) * min(s, distinct)
+
 
 def _analytic_trace(app, backend, size, M, R, W, phase_s, noise_factor,
                     depth: int = 1, overlap_s: float = 0.0,
-                    cpu_s: dict | None = None):
+                    cpu_s: dict | None = None,
+                    combined_pairs: float | None = None):
     """Build a JobTrace-shaped record from closed-form phase components.
 
     The analytic oracle has no real arrays to count, so the counters are
@@ -59,11 +84,17 @@ def _analytic_trace(app, backend, size, M, R, W, phase_s, noise_factor,
     serial phase components stay intact and the four walls still sum
     exactly to the overlapped total, so the timing conservation law
     closes on pipelined analytic traces too.
+
+    ``combined_pairs`` (combiner jobs) inserts a ``combine`` phase between
+    map and shuffle and contracts the shuffle/fabric counters to the
+    combined stream — the same counter flow the engine's traced modes
+    record, so conservation laws close identically on both oracles.
     """
     from repro.telemetry.trace import PAIR_BYTES, JobTrace
 
     pairs = _PAIRS_PER_TOKEN[app] * float(size)
-    nbytes = pairs * PAIR_BYTES
+    shuffle_pairs = pairs if combined_pairs is None else float(combined_pairs)
+    nbytes = shuffle_pairs * PAIR_BYTES
     cpu_s = cpu_s or {}
 
     def cpu(phase):
@@ -87,9 +118,16 @@ def _analytic_trace(app, backend, size, M, R, W, phase_s, noise_factor,
         tasks=M, waves=math.ceil(M / W), records_in=size,
         pairs_emitted=pairs, **cpu("map"),
     )
+    if combined_pairs is not None:
+        trace.record_phase(
+            "combine", phase_s["combine"] * noise_factor,
+            tasks=M, pairs_in=pairs, pairs_out=shuffle_pairs,
+            bytes_in=pairs * PAIR_BYTES, bytes_out=nbytes,
+            net_bytes=0.0, **cpu("combine"),
+        )
     trace.record_phase(
         "shuffle", phase_s["shuffle"] * noise_factor,
-        pairs_in=pairs, pairs_out=pairs, pairs_dropped=0,
+        pairs_in=shuffle_pairs, pairs_out=shuffle_pairs, pairs_dropped=0,
         bytes_in=nbytes, bytes_out=nbytes, bytes_dropped=0,
         partitions=R,
         net_bytes=nbytes, net_s=phase_s["shuffle"] * noise_factor,
@@ -224,6 +262,8 @@ class AnalyticOracle:
     C_PART = 0.004      # per-reducer partition/merge overhead
     C_RED = 6.0e-6      # reduce aggregation, per token
     C_PIPE = 0.012      # per-extra-depth pipeline fill/drain overhead
+    C_COMB = 6.0e-7     # map-side combine, per emitted pair
+    COMB_SETUP = 0.01   # combine barrier launch overhead, per job
 
     def __init__(
         self,
@@ -263,8 +303,17 @@ class AnalyticOracle:
     def _phase_components(
         self, app: str, backend: str, size: int,
         mappers: int, reducers: int, workers: int,
+        combiner: bool = False,
     ) -> dict[str, float]:
-        """Noise-free per-phase seconds — the closed-form decomposition."""
+        """Noise-free per-phase seconds — the closed-form decomposition.
+
+        With ``combiner=True`` the dict gains a ``combine`` entry (the
+        barrier pays ``C_COMB`` per emitted pair plus a fixed launch) and
+        the shuffle term contracts by the expected combined-pairs ratio
+        (:func:`expected_combined_pairs`) — pre-aggregation buys smaller
+        fabric transfers at the price of extra map-side compute, so the
+        knob has a genuine interior tradeoff for a policy to learn.
+        """
         if app not in _APP_IDS:
             raise ValueError(f"unknown app {app!r}")
         if backend not in self.BACKENDS:
@@ -286,7 +335,13 @@ class AnalyticOracle:
             1.0 + 0.5 / math.sqrt(R) + self.C_PART * R
         )
         t_reduce = red_waves * (setup + self.C_RED * thr * n / R)
-        return {"map": t_map, "shuffle": t_shuffle, "reduce": t_reduce}
+        out = {"map": t_map, "shuffle": t_shuffle, "reduce": t_reduce}
+        if combiner:
+            pairs = _PAIRS_PER_TOKEN[app] * n
+            ratio = expected_combined_pairs(app, size, M) / max(pairs, 1.0)
+            out["combine"] = self.COMB_SETUP + self.C_COMB * pairs
+            out["shuffle"] = t_shuffle * min(1.0, ratio)
+        return out
 
     def _cpu_components(
         self, phase_s: dict[str, float], size: int,
@@ -299,15 +354,19 @@ class AnalyticOracle:
         The shuffle's ``c_shuf * n`` term is pure wire time; the
         imbalance and partition/merge terms are host CPU work, so
         shuffle CPU is the wall minus the wire term (single-threaded
-        merge: always <= wall).
+        merge: always <= wall).  The combine barrier (if present) is
+        pure local compute — no wire time — so its CPU equals its wall.
         """
         M, R, W = int(mappers), int(reducers), int(workers)
         wire = self.C_SHUF * float(size)
-        return {
+        out = {
             "map": phase_s["map"] * M / math.ceil(M / W),
             "shuffle": max(0.0, phase_s["shuffle"] - wire),
             "reduce": phase_s["reduce"] * R / math.ceil(R / W),
         }
+        if "combine" in phase_s:
+            out["combine"] = phase_s["combine"]
+        return out
 
     def _overlapped_total(self, phase_s: dict[str, float], depth: int
                           ) -> float:
@@ -323,7 +382,9 @@ class AnalyticOracle:
         total = sum(phase_s.values())
         if depth <= 1:
             return total
-        t_map = phase_s["map"]
+        # The combine barrier (if present) rides the compute half of the
+        # pipeline: it overlaps with the fabric side like the map does.
+        t_map = phase_s["map"] + phase_s.get("combine", 0.0)
         t_sr = phase_s["shuffle"] + phase_s["reduce"]
         return (
             max(t_map, t_sr)
@@ -353,17 +414,20 @@ class AnalyticOracle:
         workers: int,
         job_id: int = 0,
         depth: int = 1,
+        combiner: bool = False,
         _noiseless: bool = False,
     ) -> float:
         if int(depth) < 1:
             raise ValueError(f"depth must be >= 1, got {depth}")
         phase_s = self._phase_components(
-            app, backend, size, mappers, reducers, workers
+            app, backend, size, mappers, reducers, workers,
+            combiner=bool(combiner),
         )
         t = self._overlapped_total(phase_s, int(depth))
         self._last_call = (
             app, backend, int(size), int(mappers), int(reducers),
-            int(workers), int(job_id), int(depth), bool(_noiseless),
+            int(workers), int(job_id), int(depth), bool(combiner),
+            bool(_noiseless),
         )
         if not _noiseless:
             t *= self._noise_factor(
@@ -380,9 +444,11 @@ class AnalyticOracle:
         """
         if self._last_call is None:
             return None
-        app, backend, size, M, R, W, job_id, depth, noiseless = \
+        app, backend, size, M, R, W, job_id, depth, combiner, noiseless = \
             self._last_call
-        phase_s = self._phase_components(app, backend, size, M, R, W)
+        phase_s = self._phase_components(
+            app, backend, size, M, R, W, combiner=combiner
+        )
         factor = (1.0 if noiseless else self._noise_factor(
             app, backend, M, R, W, job_id
         )) * self._shift(job_id)
@@ -393,6 +459,9 @@ class AnalyticOracle:
             app, backend, size, M, R, W, phase_s, factor,
             depth=depth, overlap_s=overlap,
             cpu_s=self._cpu_components(phase_s, size, M, R, W),
+            combined_pairs=(
+                expected_combined_pairs(app, size, M) if combiner else None
+            ),
         )
 
     # ---- partial execution (elastic layer) ------------------------------
@@ -410,14 +479,18 @@ class AnalyticOracle:
         shuffled: bool = False,
         reduce_tasks_done: int = 0,
         job_id: int = 0,
+        combiner: bool = False,
+        combined: bool = False,
         _noiseless: bool = False,
     ) -> list[tuple[str, float]]:
         """Per-wave-boundary segment costs of the *remaining* work.
 
         Returns ``[(kind, seconds), ...]`` with kind in
-        ``{"map", "shuffle", "reduce"}`` — one entry per remaining map
-        wave, one for the shuffle barrier (if not yet passed), one per
-        remaining reduce wave, all under grant ``workers``.  The closed
+        ``{"map", "combine", "shuffle", "reduce"}`` — one entry per
+        remaining map wave, one for the combine barrier (combiner jobs
+        that have not passed it), one for the shuffle barrier (if not yet
+        passed), one per remaining reduce wave, all under grant
+        ``workers``.  The closed
         form is the exact per-wave decomposition of :meth:`time`: each map
         wave costs ``setup + c_map*S + c_sort*S*log2(S)``, the shuffle its
         full closed-form term, each reduce wave ``setup + c_red*thr*n/R``,
@@ -428,7 +501,8 @@ class AnalyticOracle:
         waves of the *new* grant.
         """
         phase_s = self._phase_components(
-            app, backend, size, mappers, reducers, workers
+            app, backend, size, mappers, reducers, workers,
+            combiner=bool(combiner),
         )
         M, R, W = int(mappers), int(reducers), int(workers)
         factor = (1.0 if _noiseless else self._noise_factor(
@@ -438,6 +512,8 @@ class AnalyticOracle:
         map_waves_left = math.ceil(max(0, M - int(map_tasks_done)) / W)
         per_map_wave = phase_s["map"] / math.ceil(M / W)
         segs += [("map", per_map_wave * factor)] * map_waves_left
+        if combiner and not combined and not shuffled:
+            segs.append(("combine", phase_s["combine"] * factor))
         if not shuffled:
             segs.append(("shuffle", phase_s["shuffle"] * factor))
         red_waves_left = math.ceil(max(0, R - int(reduce_tasks_done)) / W)
@@ -457,16 +533,22 @@ class AnalyticOracle:
         mappers: int,
         reducers: int,
         workers: int,
+        combiner: bool = False,
     ) -> dict:
         """Noise-free per-phase times, CPU seconds, and shuffle/fabric
         bytes for one config — the profiling source for decomposed
-        (per-phase, per-resource) models."""
+        (per-phase, per-resource) models.  With ``combiner=True`` the
+        byte counters are the expected *combined* stream."""
         phase_s = self._phase_components(
-            app, backend, size, mappers, reducers, workers
+            app, backend, size, mappers, reducers, workers,
+            combiner=bool(combiner),
         )
         from repro.telemetry.trace import PAIR_BYTES
 
-        nbytes = _PAIRS_PER_TOKEN[app] * float(size) * PAIR_BYTES
+        pairs = _PAIRS_PER_TOKEN[app] * float(size)
+        if combiner:
+            pairs = min(pairs, expected_combined_pairs(app, size, mappers))
+        nbytes = pairs * PAIR_BYTES
         return {
             "time_s": dict(phase_s),
             "shuffle_bytes": nbytes,
@@ -596,7 +678,7 @@ class EngineOracle:
         return self._meshes[W]
 
     def _build_mode(self, app, backend, size, mappers, reducers, workers,
-                    recorder, depth: int = 1):
+                    recorder, depth: int = 1, combiner: bool = False):
         """One ExecutionPlan, lowered in this oracle's scheduling mode."""
         from repro.mapreduce import ExecutionPlan, JobConfig
 
@@ -607,6 +689,7 @@ class EngineOracle:
                 num_mappers=int(mappers),
                 num_reducers=int(reducers),
                 num_workers=int(workers),
+                combiner=bool(combiner),
                 reduce_backend=backend,
                 overlap_depth=int(depth),
             ),
@@ -625,15 +708,18 @@ class EngineOracle:
         return job, corpus
 
     def _get_job(self, app, backend, size, mappers, reducers, workers,
-                 depth: int = 1):
+                 depth: int = 1, combiner: bool = False):
         import jax
 
+        # The combiner flag is part of the compile-cache identity: a
+        # combined and an uncombined job at the same (M, R, W, depth)
+        # lower different pipelines and must never share a cached trace.
         key = (app, size, backend, int(mappers), int(reducers),
-               int(workers), int(depth))
+               int(workers), int(depth), bool(combiner))
         if key not in self._jobs:
             job, corpus = self._build_mode(
                 app, backend, size, mappers, reducers, workers,
-                self.recorder, depth,
+                self.recorder, depth, combiner=bool(combiner),
             )
             for _ in range(self.warmup):
                 jax.block_until_ready(job(corpus))
@@ -650,6 +736,7 @@ class EngineOracle:
         workers: int,
         job_id: int = 0,
         depth: int = 1,
+        combiner: bool = False,
     ) -> float:
         import time as _time
 
@@ -664,7 +751,8 @@ class EngineOracle:
         size = max(self.size_quantum,
                    (int(size) // self.size_quantum) * self.size_quantum)
         job, corpus = self._get_job(
-            app, backend, size, mappers, reducers, workers, int(depth)
+            app, backend, size, mappers, reducers, workers, int(depth),
+            combiner=bool(combiner),
         )
         t0 = _time.perf_counter()
         jax.block_until_ready(job(corpus))
@@ -684,6 +772,7 @@ class EngineOracle:
         mappers: int,
         reducers: int,
         workers: int,
+        combiner: bool = False,
     ) -> dict:
         """Measured per-phase times + shuffle bytes for one config.
 
@@ -693,7 +782,8 @@ class EngineOracle:
         traced-job cache so :meth:`time` stays on the fused path.
         """
         if self.recorder is not None:
-            self.time(app, backend, size, mappers, reducers, workers)
+            self.time(app, backend, size, mappers, reducers, workers,
+                      combiner=bool(combiner))
             return self._profile_from(self.recorder.last)
 
         import jax
@@ -702,11 +792,13 @@ class EngineOracle:
 
         size = max(self.size_quantum,
                    (int(size) // self.size_quantum) * self.size_quantum)
-        key = (app, size, backend, int(mappers), int(reducers), int(workers))
+        key = (app, size, backend, int(mappers), int(reducers),
+               int(workers), bool(combiner))
         if key not in self._traced_jobs:
             rec = PhaseRecorder(max_traces=4)
             job, corpus = self._build_mode(
-                app, backend, size, mappers, reducers, workers, rec
+                app, backend, size, mappers, reducers, workers, rec,
+                combiner=bool(combiner),
             )
             for _ in range(self.warmup):
                 jax.block_until_ready(job(corpus))
@@ -735,11 +827,13 @@ class EngineOracle:
 
     # ---- partial execution (elastic layer) ------------------------------
 
-    def _get_resumable(self, app, backend, size, mappers, reducers):
+    def _get_resumable(self, app, backend, size, mappers, reducers,
+                       combiner: bool = False):
         from repro.elastic.resumable import ResumableJob
         from repro.mapreduce import JobConfig
 
-        key = ("resumable", app, size, backend, int(mappers), int(reducers))
+        key = ("resumable", app, size, backend, int(mappers),
+               int(reducers), bool(combiner))
         if key not in self._jobs:
             mr_app, corpus = self._corpus(app, size)
             job = ResumableJob(
@@ -748,6 +842,7 @@ class EngineOracle:
                     num_mappers=int(mappers),
                     num_reducers=int(reducers),
                     num_workers=1,
+                    combiner=bool(combiner),
                     reduce_backend=backend,
                 ),
                 len(corpus),
@@ -768,6 +863,8 @@ class EngineOracle:
         shuffled: bool = False,
         reduce_tasks_done: int = 0,
         job_id: int = 0,
+        combiner: bool = False,
+        combined: bool = False,
     ) -> list[tuple[str, float]]:
         """Wave-step the *real* engine over the remaining work, wall-
         clocking each step — the engine-backed twin of
@@ -790,7 +887,7 @@ class EngineOracle:
         size = max(self.size_quantum,
                    (int(size) // self.size_quantum) * self.size_quantum)
         job, corpus = self._get_resumable(
-            app, backend, size, mappers, reducers
+            app, backend, size, mappers, reducers, combiner=bool(combiner)
         )
         # Warm the steppers for this grant once, untimed (compile fence).
         warm_key = (id(job), int(workers))
@@ -810,6 +907,9 @@ class EngineOracle:
             if not c.map_done:
                 if min(M, c.map_tasks_done + W) > target_m:
                     break
+            elif combiner and not c.combined and not c.shuffled:
+                if not (combined or shuffled):
+                    break
             elif not c.shuffled:
                 if not shuffled:
                     break
@@ -826,6 +926,8 @@ class EngineOracle:
             dt = _time.perf_counter() - t0
             if before.map_tasks_done != state.cursor.map_tasks_done:
                 segs.append(("map", dt))
+            elif before.combined != state.cursor.combined:
+                segs.append(("combine", dt))
             elif before.shuffled != state.cursor.shuffled:
                 segs.append(("shuffle", dt))
             else:
@@ -847,6 +949,7 @@ class EngineOracle:
         map_tasks_done: int = 0,
         shuffled: bool = False,
         reduce_tasks_done: int = 0,
+        combiner: bool = False,
     ) -> tuple[float, float]:
         """Measured ``(save_s, restore_s)`` walls of a real wave-boundary
         snapshot round-trip at this cursor — what a preemption *actually*
@@ -869,7 +972,7 @@ class EngineOracle:
         size = max(self.size_quantum,
                    (int(size) // self.size_quantum) * self.size_quantum)
         job, corpus = self._get_resumable(
-            app, backend, size, mappers, reducers
+            app, backend, size, mappers, reducers, combiner=bool(combiner)
         )
         # The snapshot layout flips only once the shuffle barrier has
         # *executed* (map accumulators swap for partitions + outputs); a

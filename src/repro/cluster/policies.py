@@ -43,22 +43,28 @@ from repro.core.tuner import tune_categorical
 SIZE_UNIT = 1024.0
 
 
-def _cat_key(backend: str, depth: int = 1) -> str:
-    """Category key for the (backend, overlap_depth) model slot.
+def _cat_key(backend: str, depth: int = 1, combiner: bool = False) -> str:
+    """Category key for the (backend, overlap_depth, combiner) model slot.
 
-    Depth joins the model database the same way the backend did: as a
-    *categorical* axis — one polynomial model per category value (the
-    paper's numeric basis can't embed it; see ``tune_categorical``).
-    Depth 1 keys as the bare backend so existing on-disk databases and
-    every depth-unaware policy keep their exact legacy keys."""
+    Depth and the combiner join the model database the same way the
+    backend did: as *categorical* axes — one polynomial model per
+    category value (the paper's numeric basis can't embed them; see
+    ``tune_categorical``).  Depth 1 keys as the bare backend and the
+    combiner-off key carries no suffix, so existing on-disk databases
+    and every depth/combiner-unaware policy keep their exact legacy
+    keys; combiner-on appends ``+c`` (``"xla@d2+c"``, ``"jnp+c"``)."""
     d = int(depth)
-    return backend if d == 1 else f"{backend}@d{d}"
+    key = backend if d == 1 else f"{backend}@d{d}"
+    return f"{key}+c" if combiner else key
 
 
-def _parse_cat(key: str) -> tuple[str, int]:
-    """Inverse of :func:`_cat_key`: ``"xla@d2" -> ("xla", 2)``."""
+def _parse_cat(key: str) -> tuple[str, int, bool]:
+    """Inverse of :func:`_cat_key`: ``"xla@d2+c" -> ("xla", 2, True)``."""
+    combiner = key.endswith("+c")
+    if combiner:
+        key = key[:-2]
     backend, _, d = key.partition("@d")
-    return backend, int(d) if d else 1
+    return backend, int(d) if d else 1, combiner
 
 
 def _np_design(spec, rows: np.ndarray) -> np.ndarray:
@@ -186,6 +192,7 @@ class PredictivePolicy(SchedulingPolicy):
         seed: int = 0,
         fit_kwargs: dict | None = None,
         depth_grid: tuple[int, ...] = (1,),
+        combiner_grid: tuple[bool, ...] = (False,),
         ledger=None,
     ):
         self.db = db if db is not None else ModelDatabase()
@@ -196,6 +203,13 @@ class PredictivePolicy(SchedulingPolicy):
         self.depth_grid = tuple(sorted(set(int(d) for d in depth_grid)))
         if not self.depth_grid or self.depth_grid[0] < 1:
             raise ValueError(f"bad depth_grid {depth_grid!r}")
+        #: combiner axis: (False,) = legacy off-only; (False, True) lets
+        #: the policy profile and choose map-side combining per job.
+        self.combiner_grid = tuple(
+            dict.fromkeys(bool(c) for c in combiner_grid)
+        )
+        if not self.combiner_grid:
+            raise ValueError(f"bad combiner_grid {combiner_grid!r}")
         self.bootstrap_sizes = tuple(bootstrap_sizes)
         self.n_bootstrap = n_bootstrap
         self.bootstrap_repeats = bootstrap_repeats
@@ -228,13 +242,15 @@ class PredictivePolicy(SchedulingPolicy):
         oracle = cluster.oracle
         self.platform = oracle.platform
         self.backends = tuple(self._backends_arg or oracle.backends())
-        #: one model category per (backend, overlap_depth) — depth is a
-        #: categorical axis exactly like the backend, so the numeric
-        #: feature rows (M, R, W, size) and the wire format of every
-        #: stored model are unchanged.
+        #: one model category per (backend, overlap_depth, combiner) —
+        #: depth and the combiner are categorical axes exactly like the
+        #: backend, so the numeric feature rows (M, R, W, size) and the
+        #: wire format of every stored model are unchanged.
         self.categories = tuple(
-            _cat_key(b, d)
-            for b, d in itertools.product(self.backends, self.depth_grid)
+            _cat_key(b, d, c)
+            for b, d, c in itertools.product(
+                self.backends, self.depth_grid, self.combiner_grid
+            )
         )
         self.worker_grid = tuple(
             w for w in self.worker_grid if w <= cluster.total_workers
@@ -260,8 +276,12 @@ class PredictivePolicy(SchedulingPolicy):
             ):
                 continue  # warm start: models reloaded from disk
 
-            def make_run_fn(app_name, backend_name, depth):
+            def make_run_fn(app_name, backend_name, depth, combiner):
+                # Off-default knobs stay out of the call signature so
+                # narrow oracle stubs (and legacy oracles) keep working.
                 extra = {} if depth == 1 else {"depth": depth}
+                if combiner:
+                    extra["combiner"] = True
 
                 def run(row):
                     return oracle.time(
@@ -274,9 +294,9 @@ class PredictivePolicy(SchedulingPolicy):
 
             result = tune_categorical(
                 {
-                    _cat_key(b, d): make_run_fn(app, b, d)
-                    for b, d in itertools.product(
-                        self.backends, self.depth_grid
+                    _cat_key(b, d, c): make_run_fn(app, b, d, c)
+                    for b, d, c in itertools.product(
+                        self.backends, self.depth_grid, self.combiner_grid
                     )
                 },
                 space,
@@ -343,10 +363,11 @@ class PredictivePolicy(SchedulingPolicy):
             if best is None or pred[i] < best[0]:
                 best = (float(pred[i]), cat, rows[i])
         t, cat, row = best
-        backend, depth = _parse_cat(cat)
+        backend, depth, combiner = _parse_cat(cat)
         return Plan(
             backend=backend, mappers=int(row[0]), reducers=int(row[1]),
             workers=int(row[2]), predicted_time=t, depth=depth,
+            combiner=combiner,
         )
 
     # ---- online refinement ----------------------------------------------
@@ -357,7 +378,8 @@ class PredictivePolicy(SchedulingPolicy):
         plan, spec = record.plan, record.spec
         row = (plan.mappers, plan.reducers, plan.workers,
                spec.size / SIZE_UNIT)
-        cat = _cat_key(plan.backend, getattr(plan, "depth", 1))
+        cat = _cat_key(plan.backend, getattr(plan, "depth", 1),
+                       getattr(plan, "combiner", False))
         refitted = self.refiner.observe(
             spec.app, cat, row, record.true_time
         )
@@ -455,6 +477,29 @@ class PipelinedSJF(PredictedSJF):
 
 
 @register_policy
+class CombinerSJF(PredictedSJF):
+    """``predict-sjf`` with the map-side-combiner axis switched on.
+
+    Profiles every (backend, combiner) category during bootstrap (the
+    ``+c`` categories ride :func:`tune_categorical` exactly like the
+    backend), so per job the joint (backend, M, R, W, combiner) argmin
+    decides whether pre-aggregating map output — paying combine compute
+    for contracted shuffle bytes — beats shipping the raw stream.  The
+    tradeoff is size- and key-space-dependent (big skewed jobs combine,
+    small or high-cardinality ones don't), which is the paper's
+    configuration-dependency thesis on the combiner axis.
+
+    Requires an oracle whose ``time`` accepts ``combiner=`` (both
+    bundled oracles do)."""
+
+    name = "predict-combine"
+
+    def __init__(self, **kwargs):
+        kwargs.setdefault("combiner_grid", (False, True))
+        super().__init__(**kwargs)
+
+
+@register_policy
 class DeadlineAware(PredictivePolicy):
     """Earliest-deadline-first + model-based admission control.
 
@@ -509,10 +554,11 @@ class DeadlineAware(PredictivePolicy):
         if best is None:
             return None
         _, t, cat, row = best
-        backend, depth = _parse_cat(cat)
+        backend, depth, combiner = _parse_cat(cat)
         return Plan(
             backend=backend, mappers=int(row[0]), reducers=int(row[1]),
             workers=int(row[2]), predicted_time=t, depth=depth,
+            combiner=combiner,
         )
 
     def _admission_sweep(self, order, free_workers, now):
@@ -683,18 +729,28 @@ class ResourceAware(PredictedSJF):
             dtype=np.float64,
         )
         for app in apps:
-            for backend in self.backends:
+            for backend, comb in itertools.product(
+                self.backends, self.combiner_grid
+            ):
+                # Fabric models are per (app, backend, combiner): the
+                # combined stream ships fewer bytes over a different
+                # window, and the whole point of the axis is that the
+                # scheduler can *predict* that contraction.  Combiner-off
+                # keeps the bare-backend key (legacy databases load).
+                cat = _cat_key(backend, 1, comb)
+                extra = {"combiner": True} if comb else {}
                 fitted = {
-                    name: self.db.get(app, self.platform, backend,
+                    name: self.db.get(app, self.platform, cat,
                                       resource=rk)
                     for name, rk in res_keys.items()
-                    if (app, self.platform, backend, rk) in self.db
+                    if (app, self.platform, cat, rk) in self.db
                 }
                 if len(fitted) < len(res_keys):
                     profs = [
                         profile(
                             app, backend, int(row[3] * SIZE_UNIT),
                             int(row[0]), int(row[1]), int(row[2]),
+                            **extra,
                         )
                         for row in rows
                     ]
@@ -719,12 +775,12 @@ class ResourceAware(PredictedSJF):
                             lam=1e-9,
                         )
                         self.db.put(
-                            app, self.platform, model, backend=backend,
+                            app, self.platform, model, backend=cat,
                             resource=rk,
                         )
                         fitted[name] = model
-                self._bytes_models[(app, backend)] = fitted["bytes"]
-                self._window_models[(app, backend)] = (
+                self._bytes_models[(app, backend, comb)] = fitted["bytes"]
+                self._window_models[(app, backend, comb)] = (
                     fitted["pre"], fitted["wall"]
                 )
 
@@ -734,8 +790,9 @@ class ResourceAware(PredictedSJF):
         self, job: JobSpec, plan: Plan, now: float
     ) -> tuple[float, float, float] | None:
         """Predicted fabric transfer (t0, t1, bytes/s) for this dispatch."""
-        wmodels = self._window_models.get((job.app, plan.backend))
-        bmodel = self._bytes_models.get((job.app, plan.backend))
+        comb = bool(getattr(plan, "combiner", False))
+        wmodels = self._window_models.get((job.app, plan.backend, comb))
+        bmodel = self._bytes_models.get((job.app, plan.backend, comb))
         if wmodels is None or bmodel is None or plan.predicted_time is None:
             return None
         row = np.asarray(
@@ -907,7 +964,8 @@ class ElasticDeadline(DeadlineAware):
         — the regression evaluated off the plan's frozen (M, R)."""
         model = self.db.get(
             spec.app, self.platform,
-            backend=_cat_key(plan.backend, getattr(plan, "depth", 1)),
+            backend=_cat_key(plan.backend, getattr(plan, "depth", 1),
+                             getattr(plan, "combiner", False)),
         )
         row = np.asarray(
             (plan.mappers, plan.reducers, workers, spec.size / SIZE_UNIT),

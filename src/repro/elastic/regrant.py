@@ -38,9 +38,17 @@ class WorkProgress:
     map_tasks_done: int = 0
     shuffled: bool = False
     reduce_tasks_done: int = 0
+    #: barrier steps between map and shuffle (1 when the job runs a
+    #: map-side combiner, else 0) and whether the barrier has passed —
+    #: combiner jobs have one more wave-boundary step, and the regrant
+    #: cost model must price the remaining fraction against it.
+    combine_steps: int = 0
+    combined: bool = False
 
     def __post_init__(self):
         if self.mappers < 1 or self.reducers < 1:
+            raise ValueError(f"bad progress {self}")
+        if self.combine_steps not in (0, 1):
             raise ValueError(f"bad progress {self}")
 
     @property
@@ -49,13 +57,14 @@ class WorkProgress:
 
     def steps_total(self, workers: int) -> int:
         return (
-            _ceil_div(self.mappers, workers) + 1
+            _ceil_div(self.mappers, workers) + self.combine_steps + 1
             + _ceil_div(self.reducers, workers)
         )
 
     def steps_remaining(self, workers: int) -> int:
         return (
             _ceil_div(max(0, self.mappers - self.map_tasks_done), workers)
+            + (0 if self.combined else self.combine_steps)
             + (0 if self.shuffled else 1)
             + _ceil_div(
                 max(0, self.reducers - self.reduce_tasks_done), workers

@@ -13,6 +13,11 @@ and resume **bit-identically**:
   task-major accumulators.  A map task's output depends only on its
   split and the frozen config, never on W or on which wave ran it, so
   any wave re-grouping produces the same rows.
+* **combine** — combiner jobs run one extra W-independent barrier step
+  between map and shuffle: each task row is aggregated and compacted in
+  place (the map accumulators shrink to the plan's combine capacity), so
+  a job can be preempted either side of the combine and the cursor's
+  ``combined`` flag says which side it stopped on.
 * **shuffle** — one barrier step.  The ``lexsort`` backend partitions
   the canonical M·P pair stream with a *canonical* W-independent
   capacity, so even the overflow accounting is identical under any
@@ -156,6 +161,17 @@ class ResumableJob:
                 map_tasks_done=min(self.M, c.map_tasks_done + W),
                 waves_executed=c.waves_executed + 1,
             )
+        elif plan.combiner and not c.combined and not c.shuffled:
+            # Map-side combine barrier: aggregate + compact the task rows
+            # in place.  W-independent (pure per-row work), so the result
+            # is identical under any grant history.
+            ck, cv, cp = plan.combine_stepper()(
+                arrays["map_keys"], arrays["map_vals"], arrays["map_valid"]
+            )
+            arrays.update(map_keys=ck, map_vals=cv, map_valid=cp)
+            cursor = dataclasses.replace(
+                c, combined=True, waves_executed=c.waves_executed + 1
+            )
         elif not c.shuffled:
             pk, pv, dropped, ok, ov = plan.shuffle_stepper(W)(
                 arrays["map_keys"], arrays["map_vals"], arrays["map_valid"]
@@ -206,6 +222,7 @@ class ResumableJob:
                 preempt_after is None or executed < preempt_after
             ):
                 before = state.cursor
+                before_arrays = state.arrays
                 t0 = _time.perf_counter()
                 c0 = _time.process_time()
                 state = self.step(state, tokens)
@@ -215,7 +232,9 @@ class ResumableJob:
                 dt = _time.perf_counter() - t0
                 executed += 1
                 if trace is not None:
-                    self._record_step(trace, before, state, dt, cpu)
+                    self._record_step(
+                        trace, before, before_arrays, state, dt, cpu
+                    )
         except Exception:
             if trace is not None and trace in self.recorder.traces:
                 self.recorder.traces.remove(trace)
@@ -241,10 +260,14 @@ class ResumableJob:
 
     # ----------------------------------------------------------- telemetry
 
-    def _record_step(self, trace, before: JobCursor, after: ElasticState,
-                     wall_s: float, cpu_s: float = 0.0) -> None:
+    def _record_step(self, trace, before: JobCursor, before_arrays: dict,
+                     after: ElasticState, wall_s: float,
+                     cpu_s: float = 0.0) -> None:
         """One trace phase entry per executed step, counters measured from
-        the actual buffers (same discipline as the engine's traced path)."""
+        the actual buffers (same discipline as the engine's traced path).
+        ``before_arrays`` is the pre-step buffer dict — the combine entry's
+        ``pairs_in`` is the live count the barrier consumed, which only the
+        pre-combine map accumulators still hold."""
         c_after = after.cursor
         if before.map_tasks_done != c_after.map_tasks_done:
             lo, hi = before.map_tasks_done, c_after.map_tasks_done
@@ -256,6 +279,20 @@ class ResumableJob:
                 records_in=min(self.input_len, hi * self.S)
                 - min(self.input_len, lo * self.S),
                 cpu_s=cpu_s, cpu_workers=_NCPU,
+            )
+        elif before.combined != c_after.combined:
+            pairs_in = int(np.asarray(before_arrays["map_valid"]).sum())
+            pairs_out = int(np.asarray(after.arrays["map_valid"]).sum())
+            pair_bytes = phases.PAIR_BYTES
+            trace.record_phase(
+                "combine", wall_s,
+                tasks=self.M, waves=1, workers=before.workers,
+                pairs_in=pairs_in, pairs_out=pairs_out,
+                bytes_in=pairs_in * pair_bytes,
+                bytes_out=pairs_out * pair_bytes,
+                combine_capacity=self.plan.combine_cap,
+                cpu_s=cpu_s, cpu_workers=_NCPU,
+                net_bytes=0.0,  # combining is local: no fabric traffic
             )
         elif before.shuffled != c_after.shuffled:
             pairs_out = int(

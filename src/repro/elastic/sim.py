@@ -133,6 +133,7 @@ class _Running:
     segments: list
     seg_start: float             # absolute start time of segments[0]
     m_done: int = 0
+    combined: bool = False       # combine barrier passed (combiner jobs)
     shuffled: bool = False
     r_done: int = 0
     pending: tuple[int, float] | None = None   # (new_W, boundary time)
@@ -153,6 +154,10 @@ class _Running:
             map_tasks_done=self.m_done,
             shuffled=self.shuffled,
             reduce_tasks_done=self.r_done,
+            combine_steps=(
+                1 if getattr(self.rec.plan, "combiner", False) else 0
+            ),
+            combined=self.combined,
         )
 
     def advance(self, t: float) -> None:
@@ -175,6 +180,8 @@ class _Running:
                 self.rec.waves.append([start, end, kind, self.workers])
             if kind == "map":
                 self.m_done = min(M, self.m_done + self.workers)
+            elif kind == "combine":
+                self.combined = True
             elif kind == "shuffle":
                 self.shuffled = True
             else:
@@ -231,8 +238,20 @@ class ElasticCluster(Cluster):
             rec.plan.mappers, rec.plan.reducers,
             map_tasks_done=rj.m_done, shuffled=rj.shuffled,
             reduce_tasks_done=rj.r_done,
+            **self._combine_kwargs(rec.plan),
         )
         return float(save_s), float(restore_s)
+
+    @staticmethod
+    def _combine_kwargs(plan, rj: "_Running | None" = None) -> dict:
+        """Combiner kwargs for oracle calls — only when the plan turns
+        the combiner on, so combiner-unaware oracles keep working."""
+        if not getattr(plan, "combiner", False):
+            return {}
+        extra = {"combiner": True}
+        if rj is not None:
+            extra["combined"] = rj.combined
+        return extra
 
     @staticmethod
     def _notify_overhead(policy, save_s: float, restore_s: float) -> None:
@@ -467,6 +486,7 @@ class ElasticCluster(Cluster):
                 job.app, plan.backend, job.size,
                 plan.mappers, plan.reducers, plan.workers,
                 job_id=job.job_id,
+                **self._combine_kwargs(plan),
             )
         ]
         rj = _Running(
@@ -564,6 +584,7 @@ class ElasticCluster(Cluster):
                 map_tasks_done=rj.m_done, shuffled=rj.shuffled,
                 reduce_tasks_done=rj.r_done,
                 job_id=rj.spec.job_id,
+                **self._combine_kwargs(rec.plan, rj),
             )
         ]
         if not rj.segments:
@@ -666,6 +687,7 @@ class ElasticCluster(Cluster):
                 map_tasks_done=rj.m_done, shuffled=rj.shuffled,
                 reduce_tasks_done=rj.r_done,
                 job_id=rj.spec.job_id,
+                **self._combine_kwargs(rec.plan, rj),
             )
         ]
         if not rj.segments:
@@ -722,12 +744,15 @@ class ElasticCluster(Cluster):
         )
         counters = {
             "map": {"tasks": rec.plan.mappers},
+            "combine": {"tasks": rec.plan.mappers},
             "shuffle": {"partitions": rec.plan.reducers},
             "reduce": {"tasks": rec.plan.reducers},
             "regrant": {"events": rec.n_regrants},
             "suspended": {"events": rec.n_suspends},
         }
-        for kind in ("map", "shuffle", "reduce", "regrant", "suspended"):
+        for kind in (
+            "map", "combine", "shuffle", "reduce", "regrant", "suspended"
+        ):
             wall = rj.phase_wall.get(kind)
             if wall:
                 trace.record_phase(kind, wall, **counters[kind])

@@ -63,6 +63,11 @@ class JobCursor:
     reduce_backend: str
     shuffle_backend: str
     map_tasks_done: int = 0
+    combined: bool = False      # map-side combine barrier passed (combiner
+    #                             jobs only; defaulted so older snapshots
+    #                             load — the barrier is idempotent for the
+    #                             combinable op set, so a legacy resume
+    #                             stays value-correct)
     shuffled: bool = False
     partition_cap: int = 0      # partition width, fixed at shuffle time
     reduce_tasks_done: int = 0
@@ -85,6 +90,8 @@ class JobCursor:
             mappers=self.mappers, reducers=self.reducers,
             map_tasks_done=self.map_tasks_done, shuffled=self.shuffled,
             reduce_tasks_done=self.reduce_tasks_done,
+            combine_steps=1 if self.combiner else 0,
+            combined=self.combined,
         )
 
     @property
@@ -97,7 +104,8 @@ class JobCursor:
 
     def steps_total(self, workers: int | None = None) -> int:
         """Wave-boundary step count for the whole job under a grant:
-        map waves + the shuffle barrier + reduce waves."""
+        map waves + the combine barrier (combiner jobs) + the shuffle
+        barrier + reduce waves."""
         return self.progress().steps_total(
             self.workers if workers is None else workers
         )

@@ -11,6 +11,7 @@ cost_analysis) — see EXPERIMENTS.md §Dry-run.
 from repro.kernels import (  # noqa: F401
     decode_attention,
     flash_attention,
+    local_reduce,
     rwkv6,
     segment_reduce,
 )
@@ -18,6 +19,7 @@ from repro.kernels import (  # noqa: F401
 __all__ = [
     "decode_attention",
     "flash_attention",
+    "local_reduce",
     "rwkv6",
     "segment_reduce",
 ]

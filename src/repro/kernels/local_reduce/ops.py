@@ -1,0 +1,29 @@
+"""jit'd public wrapper for the local-reduce (map-side combine) kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.local_reduce.kernel import local_reduce_fwd
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def local_reduce(keys, values, *, interpret: bool = True):
+    """keys/values (N, C) (sorted, PAD_KEY-padded per row) or (C,) 1-D.
+
+    Returns (out_keys, out_vals) with each row's equal-key aggregates
+    front-packed in ascending key order and a (PAD_KEY, 0) tail — the
+    compacting counterpart of ``segment_reduce``.
+    """
+    squeeze = keys.ndim == 1
+    if squeeze:
+        keys, values = keys[None], values[None]
+    vals_f = values.astype(jnp.float32)
+    ok, ov = local_reduce_fwd(keys, vals_f, interpret=interpret)
+    ov = ov.astype(values.dtype)
+    if squeeze:
+        return ok[0], ov[0]
+    return ok, ov

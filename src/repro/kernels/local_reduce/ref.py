@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the local-reduce (map-side combine) kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.segment_reduce.ref import PAD_KEY, segment_reduce_ref
+
+
+def local_reduce_ref(keys, values):
+    """keys (N,) sorted int32 (PAD_KEY = invalid); values (N,) int32.
+
+    Returns (out_keys, out_vals): each equal-key run's aggregate,
+    front-packed in ascending key order with a (PAD_KEY, 0) tail.
+    """
+    ok, ov = segment_reduce_ref(keys, values)
+    # First occurrences of a sorted row are ascending and distinct, so an
+    # ascending sort of the sparse output front-packs the live aggregates
+    # in key order (PAD_KEY sorts last; dead slots are all (PAD_KEY, 0)).
+    order = jnp.argsort(ok)
+    return ok[order], ov[order]

@@ -13,6 +13,10 @@ analytic cost (small traces only: every distinct config compiles once).
 ``--overlap-depth 1,2,4`` widens every predictive policy's category grid
 with the pipelined execution mode's overlap depth, so plans carry a
 per-job depth choice (the ``depths`` column histograms what was picked).
+``--combiner`` widens the grid along the map-side-combine axis instead:
+each predictive policy profiles every backend with the combiner off *and*
+on and chooses per job (the ``comb`` column histograms the choice; the
+``predict-combine`` policy tunes this axis even without the flag).
 ``--elastic`` runs the trace on the :class:`repro.elastic.ElasticCluster`,
 where the ``predict-elastic`` policy may preempt running jobs at wave
 boundaries and shrink/grow their worker grants (``--ckpt-overhead`` /
@@ -114,6 +118,14 @@ def build_parser() -> argparse.ArgumentParser:
                          "profiled category and plans carry the chosen "
                          "depth per job (default: policy-specific — "
                          "predict-pipeline tunes 1,2,4; others stay at 1)")
+    ap.add_argument("--combiner", action="store_true",
+                    help="widen every predictive policy's category grid "
+                         "with the map-side combine axis: each backend is "
+                         "profiled with the combiner off and on, and plans "
+                         "carry a per-job combiner choice (the 'comb' "
+                         "column histograms what was picked; default: "
+                         "policy-specific — predict-combine tunes off+on, "
+                         "others stay off)")
     ap.add_argument("--net-capacity", type=float, default=None,
                     help="shared shuffle-fabric bytes/s budget: the "
                          "simulated ground truth fair-share-stretches "
@@ -341,6 +353,8 @@ def _run_service(args, oracle, log) -> None:
         kwargs: dict = {}
         if issubclass(POLICIES[inner_name], PredictivePolicy):
             kwargs["seed"] = args.seed
+            if args.combiner:
+                kwargs["combiner_grid"] = (False, True)
         policy, ctrl, monitor = _service_arm(
             kind, args, get_policy(inner_name, **kwargs)
         )
@@ -551,7 +565,7 @@ def main(argv=None) -> None:
     header = (
         f"{'policy':<18} {'makespan':>9} {'wait':>7} {'turnaround':>10} "
         f"{'util':>5} {'SLO':>5} {'rej':>4} {'rgr':>4} {'MAE%':>6} "
-        f"{'MAE% 1st→2nd half':>18} {'depths':>12}"
+        f"{'MAE% 1st→2nd half':>18} {'depths':>12} {'comb':>11}"
     )
     log.info(
         "run",
@@ -573,6 +587,8 @@ def main(argv=None) -> None:
             kwargs["seed"] = args.seed
             if depth_grid is not None:
                 kwargs["depth_grid"] = depth_grid
+            if args.combiner:
+                kwargs["combiner_grid"] = (False, True)
             if name == "predict-resource" and args.net_capacity is not None:
                 kwargs["net_capacity"] = args.net_capacity
             if name == "predict-elastic" and args.suspend:
@@ -628,12 +644,15 @@ def main(argv=None) -> None:
                 m["depth_histogram"].items(), key=lambda kv: int(kv[0])
             )
         )
+        comb = "+".join(
+            f"{k}:{n}" for k, n in sorted(m["combiner_histogram"].items())
+        )
         print(
             f"{name:<18} {f(m['makespan_s']):>9} {f(m['mean_wait_s']):>7} "
             f"{f(m['mean_turnaround_s']):>10} {f(m['utilization']):>5} "
             f"{f(m['slo_attainment']):>5} {m['n_rejected']:>4} "
             f"{m['n_regrants']:>4} {f(m['pred_mae_pct'], 1):>6} "
-            f"{halves:>18} {depths:>12}"
+            f"{halves:>18} {depths:>12} {comb:>11}"
         )
         if hasattr(policy, "db"):
             save_db = policy.db

@@ -49,6 +49,15 @@ class ReduceBackend:
     each row sorted by key with PAD_KEY padding — and returns (out_keys,
     out_vals) of the same shape: the aggregate of each equal-key run at its
     first occurrence, (PAD_KEY, 0) elsewhere.
+
+    ``combine(keys, values, reduce_op)`` is the map-side variant of the
+    same aggregation: identical validity contract, but each row's
+    aggregates come back *front-packed* in ascending key order with a
+    (PAD_KEY, 0) tail — so the caller can truncate the row to its
+    distinct-key bound and shrink the shuffle stream.  The default
+    derivation sorts the sparse ``reduce`` output (first occurrences of a
+    sorted row are ascending and distinct, so an ascending key sort IS the
+    compaction); backends with a native compacting kernel override it.
     """
 
     name: str = "abstract"
@@ -57,12 +66,20 @@ class ReduceBackend:
     def reduce(self, keys, values, reduce_op: str):
         raise NotImplementedError
 
+    def combine(self, keys, values, reduce_op: str):
+        ok, ov = self.reduce(keys, values, reduce_op)
+        order = jnp.argsort(ok, axis=1)  # PAD_KEY sorts last
+        return (
+            jnp.take_along_axis(ok, order, axis=1),
+            jnp.take_along_axis(ov, order, axis=1),
+        )
+
 
 class JnpReduceBackend(ReduceBackend):
     """Portable reference: scatter-add/max segment reduce (pure jnp)."""
 
     name = "jnp"
-    supported_ops = ("sum", "max")
+    supported_ops = ("sum", "max", "first")
 
     def reduce(self, keys, values, reduce_op: str):
         ok, ov, _ = jax.vmap(
@@ -106,12 +123,27 @@ class PallasReduceBackend(ReduceBackend):
             interpret = jax.default_backend() != "tpu"
         return segment_reduce(keys, values, interpret=interpret)
 
+    def combine(self, keys, values, reduce_op: str):
+        # Native compacting kernel: the one-hot segment matmul indexed by
+        # segment id front-packs in one pass — no host-visible sort.
+        if reduce_op not in self.supported_ops:
+            raise ValueError(
+                f"pallas reduce backend supports {self.supported_ops}, "
+                f"got {reduce_op!r}"
+            )
+        from repro.kernels.local_reduce import local_reduce
+
+        interpret = self.interpret
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        return local_reduce(keys, values, interpret=interpret)
+
 
 class XlaReduceBackend(ReduceBackend):
     """XLA segment primitives (``jax.ops.segment_sum`` / ``segment_max``)."""
 
     name = "xla"
-    supported_ops = ("sum", "max")
+    supported_ops = ("sum", "max", "first")
 
     def reduce(self, keys, values, reduce_op: str):
         def one_row(k, v):
@@ -131,6 +163,13 @@ class XlaReduceBackend(ReduceBackend):
                     jnp.where(valid, v, jnp.iinfo(jnp.int32).min),
                     seg,
                     num_segments=n,
+                )
+            elif reduce_op == "first":
+                # Delivery order is the stable sort order, so the first
+                # value of each run already sits at the first-occurrence
+                # slot (order-dependent: deliberately not combinable).
+                agg = jax.ops.segment_sum(
+                    jnp.where(first, v, 0), seg, num_segments=n
                 )
             else:
                 raise ValueError(reduce_op)

@@ -56,7 +56,12 @@ class JobConfig:
     num_mappers: int            # M: map tasks       (paper parameter 1)
     num_reducers: int           # R: reduce tasks    (paper parameter 2)
     num_workers: int = 1        # W: parallel worker slots (cluster size)
-    combiner: bool = False      # map-side combine (extra modeled knob)
+    combiner: bool = False      # map-side combine stage between map and
+    #                             shuffle (extra modeled knob): pre-aggregate
+    #                             each task's pairs, contracting shuffle
+    #                             bytes; requires a commutative+associative
+    #                             reduce_op (COMBINABLE_OPS — the plan
+    #                             rejects e.g. "first")
     capacity_factor: float = 4.0  # reducer partition capacity multiplier
     setup_rounds: int = 4       # per-task startup overhead (matmul rounds)
     setup_dim: int = 32         # startup compute size
@@ -86,7 +91,10 @@ class JobConfig:
 @dataclasses.dataclass(frozen=True)
 class MapReduceApp:
     """A MapReduce application: map emits (key, value) pairs; reduce
-    aggregates values per key with ``reduce_op`` (associative, commutative).
+    aggregates values per key with ``reduce_op``.  ``sum`` and ``max`` are
+    commutative+associative and therefore combiner-eligible; ``first``
+    (keep the earliest value per key in delivery order) is order-dependent
+    and only legal with the combiner off.
     """
 
     name: str
@@ -94,7 +102,7 @@ class MapReduceApp:
     # map_fn(tokens (S,), valid (S,)) -> keys (P,), values (P,), valid (P,)
     map_fn: Callable
     pairs_per_token: int = 1
-    reduce_op: str = "sum"  # "sum" | "max"
+    reduce_op: str = "sum"  # "sum" | "max" | "first"
 
 
 def build_job(app: MapReduceApp, cfg: JobConfig, input_len: int,

@@ -7,9 +7,12 @@ combiner, partition, and reduce logic — one in ``build_job`` and one in
 
 * :func:`task_setup`        — fixed per-task startup compute (JVM analogue);
 * :func:`hash_to_reducer`   — Knuth multiplicative key hashing;
-* :func:`segment_sum_sorted`— sorted equal-key aggregation (sum / max);
-* :func:`run_map_task`      — setup + ``map_fn`` + spill sort + combiner;
+* :func:`segment_sum_sorted`— sorted equal-key aggregation (sum / max / first);
+* :func:`run_map_task`      — setup + ``map_fn`` + local spill sort;
 * :func:`map_phase`         — wave-scheduled map over (waves, W) task grid;
+* :func:`combine_rows`      — map-side combine: per-task aggregation +
+  compaction of the spill-sorted rows, shrinking everything downstream
+  (:func:`combine_capacity` is the static distinct-key bound);
 * :func:`bucket_scatter`    — capacity-bounded partition scatter, with
   overflow *accounting* (the ``dropped`` count) instead of silent loss;
 * :func:`reduce_phase` / :func:`reduce_local` — wave-scheduled reduce
@@ -32,6 +35,13 @@ PAD_KEY = jnp.iinfo(jnp.int32).max  # sorts to the end
 #: telemetry layer's byte counters (shuffle bytes_in/out/dropped) are pair
 #: counts scaled by this, so conservation in pairs and bytes coincide.
 PAIR_BYTES = 8
+
+#: reduce ops safe to pre-aggregate map-side: a combiner applies the op
+#: twice (per task, then per reducer), which is only semantics-preserving
+#: for commutative + associative ops.  ``first`` keeps the earliest value
+#: per key in shuffle-delivery order, so combining it would change which
+#: value survives — the plan rejects combiner configs for it.
+COMBINABLE_OPS = ("sum", "max")
 
 
 def count_live(keys) -> jnp.ndarray:
@@ -88,6 +98,14 @@ def segment_sum_sorted(keys, values, valid, reduce_op: str = "sum"):
         agg = agg.at[seg_id].max(
             jnp.where(valid, values, jnp.iinfo(jnp.int32).min)
         )
+    elif reduce_op == "first":
+        # The earliest value of each run in delivery order: the stable
+        # sorts upstream put it at the first-occurrence slot, so the
+        # aggregate IS the value already sitting there.  Order-dependent
+        # by definition — hence not in COMBINABLE_OPS.
+        agg = jnp.zeros((n,), dtype=values.dtype).at[seg_id].add(
+            jnp.where(first, values, 0)
+        )
     else:
         raise ValueError(reduce_op)
     # The aggregate for the segment starting at a first-occurrence position i
@@ -98,20 +116,18 @@ def segment_sum_sorted(keys, values, valid, reduce_op: str = "sum"):
 
 
 def run_map_task(app, cfg, tokens, valid):
-    """One map task: startup + map_fn + local spill sort + optional combiner.
+    """One map task: startup + map_fn + local spill sort.
 
-    tokens/valid: (S,).  Returns keys/values/pvalid of shape (P,).
+    tokens/valid: (S,).  Returns keys/values/pvalid of shape (P,).  The
+    map-side combiner is *not* applied here — it is its own fenced stage
+    (:func:`combine_rows`, run by the plan between map and shuffle) so it
+    can be wall-clocked, counted, and checkpointed at a wave boundary.
     """
     setup = task_setup(cfg.setup_dim, cfg.setup_rounds, tokens.sum())
     keys, values, pvalid = app.map_fn(tokens, valid)
     # Local spill sort (Hadoop sorts map output before the shuffle).
     order = jnp.argsort(jnp.where(pvalid, keys, PAD_KEY))
     keys, values, pvalid = keys[order], values[order], pvalid[order]
-    if cfg.combiner:
-        keys, values, first = segment_sum_sorted(
-            keys, values, pvalid, app.reduce_op
-        )
-        pvalid = first
     values = values + setup.astype(values.dtype)  # keep setup live
     return keys, values, pvalid
 
@@ -140,6 +156,37 @@ def partition_capacity(n_pairs: int, n_buckets: int, factor: float) -> int:
     """Capacity per partition: uniform share x safety factor, clamped."""
     cap = max(1, int(math.ceil(n_pairs / max(n_buckets, 1) * factor)))
     return min(cap, n_pairs)
+
+
+def combine_capacity(n_pairs: int, key_space: int) -> int:
+    """Static per-task combined-row width: a task emitting ``n_pairs``
+    pairs over ``key_space`` possible keys produces at most
+    ``min(n_pairs, key_space)`` distinct keys, so truncating the combined
+    row there is lossless — and it is this *static* shrink that pulls
+    every downstream capacity (:func:`partition_capacity` feeds on the
+    stream width) down with it."""
+    return max(1, min(int(n_pairs), int(key_space)))
+
+
+def combine_rows(backend, keys, values, pvalid, reduce_op: str, cap: int):
+    """Map-side combine over task-major rows: aggregate each task's
+    equal-key runs and compact the row to ``cap`` columns.
+
+    keys/values/pvalid: (N, P) spill-sorted task rows.  Dead slots may
+    hold garbage keys (the spill sort only orders by the masked view), so
+    they are first masked to PAD_KEY — the validity contract of
+    :class:`repro.mapreduce.backends.ReduceBackend`.  The backend's
+    ``combine`` front-packs each row's aggregates in ascending key order;
+    the static ``[:cap]`` truncation (``cap`` from
+    :func:`combine_capacity`) then drops only dead tail slots.
+
+    Returns (ck, cv, cvalid) of shape (N, cap).
+    """
+    km = jnp.where(pvalid, keys, PAD_KEY)
+    vm = jnp.where(pvalid, values, 0)
+    ck, cv = backend.combine(km, vm, reduce_op)
+    ck, cv = ck[:, :cap], cv[:, :cap]
+    return ck, cv, ck != PAD_KEY
 
 
 def bucket_scatter(ids, n_buckets, n_rows, cap, arrays, fills):

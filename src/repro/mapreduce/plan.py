@@ -32,6 +32,11 @@ The canonical stepper contract (all shapes static per plan):
 * ``prep(tokens)``                        → ``(splits (M, S), valid (M, S))``
 * ``map_step(W)(splits, valid, bk, bv, bp, start)``
                                           → updated ``(M, P)`` accumulators
+* ``combine_step()(bk, bv, bp)``          → compacted ``(M, Pc)`` task rows
+  (only when ``cfg.combiner``): per-task local segment-reduce +
+  front-packing through the reduce backend's ``combine``, with
+  ``Pc = min(P, key_space)`` — the static distinct-key bound — so every
+  downstream capacity shrinks with the combined stream;
 * ``shuffle_step(W)(bk, bv, bp)``         → ``(pk, pv, dropped, ok0, ov0)``
   with partitions ``(R, cap)``; the ``lexsort`` backend uses the
   *canonical* W-independent capacity ``partition_capacity(M·P, R, f)``,
@@ -102,24 +107,40 @@ class ExecutionPlan:
                 f"{app.name!r} needs {app.reduce_op!r}"
             )
         self.shuffle = _backends.get_shuffle_backend(cfg.shuffle_backend)
+        self.combiner = bool(getattr(cfg, "combiner", False))
+        if self.combiner and app.reduce_op not in phases.COMBINABLE_OPS:
+            raise ValueError(
+                f"combiner requires a commutative+associative reduce op "
+                f"{phases.COMBINABLE_OPS}, but app {app.name!r} uses "
+                f"{app.reduce_op!r}"
+            )
         self.M = cfg.num_mappers
         self.R = cfg.num_reducers
         self.S = math.ceil(self.input_len / self.M)
         self.P = self.S * app.pairs_per_token
-        #: canonical (W-independent) lexsort partition capacity
+        #: combined per-task row width (static distinct-key bound)
+        self.combine_cap = phases.combine_capacity(self.P, app.key_space)
+        #: column width of the task rows entering the shuffle barrier
+        self.shuffle_width = self.combine_cap if self.combiner else self.P
+        #: canonical (W-independent) lexsort partition capacity — sized
+        #: from the *combined* stream when the combiner is on, so the
+        #: byte contraction propagates into the partition buffers too
         self.lex_capacity = phases.partition_capacity(
-            self.M * self.P, self.R, cfg.capacity_factor
+            self.M * self.shuffle_width, self.R, cfg.capacity_factor
         )
         # Per-grant jitted stepper caches (shared by every mode and every
         # ResumableJob derived from this plan).  Keys are canonicalized:
         # any grant W >= M (or R) compiles the same stepper as W == M, so
         # re-planning after a regrant to an equivalent grant is a cache
-        # hit, not a re-trace.
+        # hit, not a re-trace.  Every key carries the combiner flag —
+        # combined and uncombined grants must never share a jitted trace
+        # (their buffer widths differ).
         self._jit_prep = None
-        self._jit_map: dict[int, callable] = {}
-        self._jit_shuffle: dict[int, callable] = {}
-        self._jit_reduce: dict[tuple[int, int], callable] = {}
-        self._jit_pipelined: dict[tuple[int, int], callable] = {}
+        self._jit_map: dict[tuple[int, bool], callable] = {}
+        self._jit_combine = None
+        self._jit_shuffle: dict[tuple[int, bool], callable] = {}
+        self._jit_reduce: dict[tuple[int, int, bool], callable] = {}
+        self._jit_pipelined: dict[tuple[int, int, bool], callable] = {}
         self._cache_hits = 0
         self._cache_misses = 0
 
@@ -132,7 +153,7 @@ class ExecutionPlan:
             return self.lex_capacity
         W = self.cfg.num_workers if workers is None else int(workers)
         cfg_w = dataclasses.replace(self.cfg, num_workers=W)
-        n_local = cfg_w.map_waves * self.P
+        n_local = cfg_w.map_waves * self.shuffle_width
         return phases.partition_capacity(
             W * n_local, self.R, self.cfg.capacity_factor
         )
@@ -149,6 +170,9 @@ class ExecutionPlan:
             "map_waves": math.ceil(self.M / W),
             "reduce_waves": math.ceil(self.R / W),
             "n_pairs": self.M * self.P,
+            "combiner": self.combiner,
+            "combine_capacity": self.combine_cap,
+            "shuffle_width": self.shuffle_width,
             "partition_capacity": self.partition_cap(W),
             "r_pad": self.R,
             "overlap_depth": getattr(self.cfg, "overlap_depth", 1),
@@ -218,6 +242,22 @@ class ExecutionPlan:
 
         return step
 
+    def _combine_step_fn(self):
+        """Map-side combine barrier: aggregate + compact every task row.
+
+        W-independent like the lexsort barrier — combining is per-row, so
+        one batched backend call covers all M tasks regardless of the
+        grant held when the barrier executes (bit-exact under regrants by
+        construction).
+        """
+        backend, op = self.reduce_backend, self.app.reduce_op
+        cap = self.combine_cap
+
+        def step(bk, bv, bp):
+            return phases.combine_rows(backend, bk, bv, bp, op, cap)
+
+        return step
+
     def _shuffle_step_fn(self, W: int):
         if self.shuffle.collective:
             return self._a2a_shuffle_fn(W)
@@ -253,18 +293,24 @@ class ExecutionPlan:
         barrier executes.
         """
         cfg_w = dataclasses.replace(self.cfg, num_workers=W)
-        shuffle, M, R, P = self.shuffle, self.M, self.R, self.P
+        shuffle, M, R = self.shuffle, self.M, self.R
         waves_m = cfg_w.map_waves
         waves_r = cfg_w.reduce_waves
         M_pad = waves_m * W
-        n_local = waves_m * P
         init_out = self.initial_reduce_buffers
 
         def step(bk, bv, bp):
+            # Column width comes from the input, not the config: the
+            # combiner hands this barrier compacted (M, Pc) rows, and the
+            # per-worker stream (hence the exchange capacity) shrinks
+            # with them — same contraction a real mesh run sees.
+            Pb = bk.shape[1]
+            n_local = waves_m * Pb
+
             # Worker-major local streams: worker w owns tasks w, w+W, ...
             def per_worker(buf, fill):
                 padded = _pad_rows(buf, M_pad - M, fill)
-                return padded.reshape(waves_m, W, P).transpose(
+                return padded.reshape(waves_m, W, Pb).transpose(
                     1, 0, 2
                 ).reshape(W, n_local)
 
@@ -477,11 +523,15 @@ class ExecutionPlan:
             )
             return pipe(pk, pv)
 
-        return {
-            "map": phase_map,
-            "shuffle": phase_shuffle,
-            "reduce": phase_reduce,
-        }
+        fns = {"map": phase_map}
+        if self.combiner:
+            # The combine rides the compute side of the pipeline: pure
+            # per-row work on the committed map buffers, ahead of the
+            # global shuffle barrier (no commit state of its own).
+            fns["combine"] = self._combine_step_fn()
+        fns["shuffle"] = phase_shuffle
+        fns["reduce"] = phase_reduce
+        return fns
 
     # ----------------------------------------- jitted steppers (per grant)
 
@@ -494,25 +544,34 @@ class ExecutionPlan:
         # A grant wider than the task count slices/updates the identical
         # M-row window (the pad rows are write-through ballast), so every
         # W >= M is the same stepper: canonicalize the key to min(W, M).
-        key = min(int(W), self.M)
+        key = (min(int(W), self.M), self.combiner)
         if key not in self._jit_map:
             self._cache_misses += 1
-            self._jit_map[key] = jax.jit(self._map_step_fn(key))
+            self._jit_map[key] = jax.jit(self._map_step_fn(key[0]))
         else:
             self._cache_hits += 1
         return self._jit_map[key]
 
+    def combine_stepper(self):
+        # W-independent barrier (like the lexsort shuffle): one entry.
+        if self._jit_combine is None:
+            self._cache_misses += 1
+            self._jit_combine = jax.jit(self._combine_step_fn())
+        else:
+            self._cache_hits += 1
+        return self._jit_combine
+
     def shuffle_stepper(self, W: int):
-        key = W if self.shuffle.collective else 1
+        key = (W if self.shuffle.collective else 1, self.combiner)
         if key not in self._jit_shuffle:
             self._cache_misses += 1
-            self._jit_shuffle[key] = jax.jit(self._shuffle_step_fn(key))
+            self._jit_shuffle[key] = jax.jit(self._shuffle_step_fn(key[0]))
         else:
             self._cache_hits += 1
         return self._jit_shuffle[key]
 
     def reduce_stepper(self, W: int, cap: int):
-        key = (min(int(W), self.R), cap)
+        key = (min(int(W), self.R), cap, self.combiner)
         if key not in self._jit_reduce:
             self._cache_misses += 1
             self._jit_reduce[key] = jax.jit(self._reduce_step_fn(key[0]))
@@ -525,6 +584,7 @@ class ExecutionPlan:
         re-planning should mostly *hit*; equivalent grants share keys)."""
         return {
             "map_entries": len(self._jit_map),
+            "combine_entries": int(self._jit_combine is not None),
             "shuffle_entries": len(self._jit_shuffle),
             "reduce_entries": len(self._jit_reduce),
             "pipelined_entries": len(self._jit_pipelined),
@@ -573,11 +633,12 @@ class ExecutionPlan:
                 0, red_waves, body, init_red(pk.shape[1])
             )
 
-        return {
-            "map": phase_map,
-            "shuffle": phase_shuffle,
-            "reduce": phase_reduce,
-        }
+        fns = {"map": phase_map}
+        if self.combiner:
+            fns["combine"] = self._combine_step_fn()
+        fns["shuffle"] = phase_shuffle
+        fns["reduce"] = phase_reduce
+        return fns
 
     # ---------------------------------------------------------------- modes
 
@@ -590,8 +651,10 @@ class ExecutionPlan:
         fns = self.phase_fns(workers)
 
         def job(tokens):
-            bk, bv, bp = fns["map"](tokens)
-            pk, pv, dropped = fns["shuffle"](bk, bv, bp)
+            bufs = fns["map"](tokens)
+            if "combine" in fns:
+                bufs = fns["combine"](*bufs)
+            pk, pv, dropped = fns["shuffle"](*bufs)
             ok, ov = fns["reduce"](pk, pv)
             return ok, ov, dropped
 
@@ -613,7 +676,7 @@ class ExecutionPlan:
              if depth is None else int(depth))
         if D < 1:
             raise ValueError(f"overlap depth must be >= 1, got {D}")
-        key = (W, D)
+        key = (W, D, self.combiner)
         if key in self._jit_pipelined:
             self._cache_hits += 1
             return self._jit_pipelined[key]
@@ -621,8 +684,10 @@ class ExecutionPlan:
         fns = self.pipelined_phase_fns(W, D)
 
         def job(tokens):
-            bk, bv, bp = fns["map"](tokens)
-            pk, pv, dropped = fns["shuffle"](bk, bv, bp)
+            bufs = fns["map"](tokens)
+            if "combine" in fns:
+                bufs = fns["combine"](*bufs)
+            pk, pv, dropped = fns["shuffle"](*bufs)
             ok, ov = fns["reduce"](pk, pv)
             return ok, ov, dropped
 
@@ -649,6 +714,9 @@ class ExecutionPlan:
              if depth is None else int(depth))
         fns = self.pipelined_phase_fns(workers, D)
         jit_map = jax.jit(fns["map"])
+        jit_combine = (
+            jax.jit(fns["combine"]) if "combine" in fns else None
+        )
         jit_shuffle = jax.jit(fns["shuffle"])
         jit_reduce = jax.jit(fns["reduce"])
         m = self.meta(workers)
@@ -683,6 +751,32 @@ class ExecutionPlan:
                 cpu_s=cpu, cpu_workers=_NCPU,
             )
 
+            if jit_combine is not None:
+                t0 = _time.perf_counter()
+                c0 = _time.process_time()
+                bk, bv, bp = jax.block_until_ready(
+                    jit_combine(bk, bv, bp)
+                )
+                cpu = _time.process_time() - c0
+                dt = _time.perf_counter() - t0
+                pairs_combined = int(np.asarray(bp).sum())
+                trace.record_phase(
+                    "combine", dt,
+                    tasks=m["mappers"],
+                    pairs_in=pairs_emitted, pairs_out=pairs_combined,
+                    bytes_in=pairs_emitted * pair_bytes,
+                    bytes_out=pairs_combined * pair_bytes,
+                    combine_capacity=m["combine_capacity"],
+                    cpu_s=cpu, cpu_workers=_NCPU,
+                    # Combining is map-local CPU work: it moves no fabric
+                    # bytes (net_bytes == 0 is a checked invariant) — the
+                    # contraction shows up in the *shuffle* counters.
+                    net_bytes=0.0,
+                )
+                shuffle_pairs_in = pairs_combined
+            else:
+                shuffle_pairs_in = pairs_emitted
+
             t0 = _time.perf_counter()
             c0 = _time.process_time()
             pk, pv, dropped = jax.block_until_ready(
@@ -694,18 +788,19 @@ class ExecutionPlan:
             pairs_out = int((np.asarray(pk) != int(PAD_KEY)).sum())
             trace.record_phase(
                 "shuffle", dt,
-                pairs_in=pairs_emitted, pairs_out=pairs_out,
+                pairs_in=shuffle_pairs_in, pairs_out=pairs_out,
                 pairs_dropped=n_dropped,
-                bytes_in=pairs_emitted * pair_bytes,
+                bytes_in=shuffle_pairs_in * pair_bytes,
                 bytes_out=pairs_out * pair_bytes,
                 bytes_dropped=n_dropped * pair_bytes,
                 partitions=m["reducers"],
                 partition_capacity=int(pk.shape[1]),
                 cpu_s=cpu, cpu_workers=_NCPU,
-                # Fabric accounting: every emitted pair crosses the wire
-                # (dropped ones included); the transfer occupies the
-                # fabric for the fenced shuffle wall.
-                net_bytes=pairs_emitted * pair_bytes,
+                # Fabric accounting: every pair entering the shuffle
+                # crosses the wire (dropped ones included) — post-combine
+                # pairs when the combiner is on, which is exactly the
+                # byte contraction the fabric sees.
+                net_bytes=shuffle_pairs_in * pair_bytes,
                 net_s=dt,
             )
 
@@ -789,6 +884,12 @@ class ExecutionPlan:
         waves_r = cfg.reduce_waves
         M_pad = waves_m * W
         n_local = waves_m * P
+        combiner = self.combiner
+        combine_cap = self.combine_cap
+        reduce_op = app.reduce_op
+        #: per-worker stream width entering the collective — the combine
+        #: contraction shrinks the literal all_to_all itself
+        n_local_c = waves_m * (combine_cap if combiner else P)
 
         from jax.sharding import PartitionSpec as P_
 
@@ -825,7 +926,25 @@ class ExecutionPlan:
                 pv.reshape(1, n_local),
             )
 
-        def w_shuffle(k, v, pv):  # (1, n_local) local pair streams
+        def w_combine(k, v, pv):  # (1, n_local) local pair streams
+            # Shard-local map-side combine: this worker's waves_m task
+            # rows, aggregated + compacted before any byte crosses the
+            # mesh — the per-worker stream (and the collective built on
+            # it) shrinks from waves_m*P to waves_m*Pc.
+            ck, cv, cp = phases.combine_rows(
+                reduce_backend,
+                k[0].reshape(waves_m, P),
+                v[0].reshape(waves_m, P),
+                pv[0].reshape(waves_m, P),
+                reduce_op, combine_cap,
+            )
+            return (
+                ck.reshape(1, n_local_c),
+                cv.reshape(1, n_local_c),
+                cp.reshape(1, n_local_c),
+            )
+
+        def w_shuffle(k, v, pv):  # (1, n_local[_c]) local pair streams
             bk, bv, dropped = shuffle.exchange(
                 cfg, axis, k[0], v[0], pv[0]
             )
@@ -853,9 +972,11 @@ class ExecutionPlan:
 
         if recorder is None:
             # Fused single mesh program (the zero-overhead deployment
-            # path): all three phases in one shard_map body.
+            # path): all phases in one shard_map body.
             def worker(splits, valid):
                 k, v, pv = w_map(splits, valid)
+                if combiner:
+                    k, v, pv = w_combine(k, v, pv)
                 bk, bv, dropped = w_shuffle(k, v, pv)
                 ok, ov = w_reduce(bk, bv)
                 return ok, ov, dropped
@@ -886,12 +1007,19 @@ class ExecutionPlan:
 
             return with_counters
 
-        # Phase-fenced sharded execution: three separate mesh programs,
-        # each wall-clocked, counters cross-shard reduced on the host.
+        # Phase-fenced sharded execution: separate mesh programs, each
+        # wall-clocked, counters cross-shard reduced on the host.
         pair_bytes = phases.PAIR_BYTES
         jit_map = jax.jit(
             lambda tokens: smap(w_map, (spec3, spec3),
                                 (spec2, spec2, spec2))(*prep(tokens))
+        )
+        jit_combine = (
+            jax.jit(
+                smap(w_combine, (spec2, spec2, spec2),
+                     (spec2, spec2, spec2))
+            )
+            if combiner else None
         )
         jit_shuffle = jax.jit(
             smap(w_shuffle, (spec2, spec2, spec2), (spec3, spec3, spec2))
@@ -926,6 +1054,27 @@ class ExecutionPlan:
                 cpu_s=cpu, cpu_workers=_NCPU,
             )
 
+            if jit_combine is not None:
+                t0 = _time.perf_counter()
+                c0 = _time.process_time()
+                k, v, pv = jax.block_until_ready(jit_combine(k, v, pv))
+                cpu = _time.process_time() - c0
+                dt = _time.perf_counter() - t0
+                pairs_combined = int(np.asarray(pv).sum())
+                trace.record_phase(
+                    "combine", dt,
+                    tasks=M, workers=W,
+                    pairs_in=pairs_emitted, pairs_out=pairs_combined,
+                    bytes_in=pairs_emitted * pair_bytes,
+                    bytes_out=pairs_combined * pair_bytes,
+                    combine_capacity=combine_cap,
+                    cpu_s=cpu, cpu_workers=_NCPU,
+                    net_bytes=0.0,
+                )
+                shuffle_pairs_in = pairs_combined
+            else:
+                shuffle_pairs_in = pairs_emitted
+
             t0 = _time.perf_counter()
             c0 = _time.process_time()
             bk, bv, dropped = jax.block_until_ready(
@@ -938,9 +1087,9 @@ class ExecutionPlan:
             pairs_out = int((np.asarray(bk) != int(PAD_KEY)).sum())
             trace.record_phase(
                 "shuffle", dt,
-                pairs_in=pairs_emitted, pairs_out=pairs_out,
+                pairs_in=shuffle_pairs_in, pairs_out=pairs_out,
                 pairs_dropped=n_dropped,
-                bytes_in=pairs_emitted * pair_bytes,
+                bytes_in=shuffle_pairs_in * pair_bytes,
                 bytes_out=pairs_out * pair_bytes,
                 bytes_dropped=n_dropped * pair_bytes,
                 partitions=R, workers=W,
@@ -951,7 +1100,7 @@ class ExecutionPlan:
                 dropped_send=int(per_worker[:, 0].sum()),
                 dropped_recv=int(per_worker[:, 1].sum()),
                 cpu_s=cpu, cpu_workers=_NCPU,
-                net_bytes=pairs_emitted * pair_bytes,
+                net_bytes=shuffle_pairs_in * pair_bytes,
                 net_s=dt,
             )
 

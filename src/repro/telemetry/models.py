@@ -33,9 +33,10 @@ from repro.core import regression
 from repro.core.predictor import ModelDatabase
 from repro.telemetry.trace import JobTrace
 
-#: the engine's phase order (collect is host-side and usually negligible,
-#: but it is part of the job and therefore part of the composed total).
-PHASE_ORDER = ("map", "shuffle", "reduce", "collect")
+#: the engine's phase order (combine only appears on combiner-enabled
+#: traces; collect is host-side and usually negligible, but it is part of
+#: the job and therefore part of the composed total).
+PHASE_ORDER = ("map", "combine", "shuffle", "reduce", "collect")
 
 #: the per-phase wall-time resource name.
 TIME_RESOURCE = "time_s"
@@ -59,6 +60,12 @@ DEFAULT_COUNTER_TARGETS = (
     ("shuffle", "cpu_s"),
     ("reduce", "cpu_s"),
     ("shuffle", "net_bytes"),
+    # Combine counters (map-side combining): pairs surviving the local
+    # pre-aggregation — the contraction that shrinks shuffle net_bytes —
+    # and the stage's CPU cost.  Combiner-off traces have no combine
+    # phase, so these fit only on combiner-enabled trace sets.
+    ("combine", "pairs_out"),
+    ("combine", "cpu_s"),
 )
 
 

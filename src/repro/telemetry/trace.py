@@ -20,7 +20,12 @@ Counters are computed from the actual phase outputs, not from the
 configuration, so conservation laws are real invariants:
 
 * ``shuffle.bytes_in == shuffle.bytes_out + shuffle.bytes_dropped``
-* ``map.pairs_emitted == shuffle.pairs_in``
+* ``map.pairs_emitted == shuffle.pairs_in`` — or, when a map-side combine
+  stage ran, ``map.pairs_emitted == combine.pairs_in``,
+  ``combine.pairs_out <= combine.pairs_in``, and
+  ``combine.pairs_out == shuffle.pairs_in`` (the combiner is the only
+  stage allowed to contract the pair stream, and it must do so between
+  the map's emit counter and the shuffle's intake)
 * per-phase wall times sum to ~the outer job wall time.
 
 Resource counters extend the same discipline to CPU and fabric:
@@ -193,9 +198,17 @@ class JobTrace:
                 bad.append("shuffle pairs_in != pairs_out + pairs_dropped")
             if "map" in names and "pairs_in" in has:
                 emitted = self.counter("map", "pairs_emitted")
-                if emitted != c("pairs_in"):
+                # The shuffle consumes the map's emitted stream directly —
+                # unless a combine stage sat between them, in which case
+                # the shuffle consumes the combiner's (contracted) output.
+                expect = emitted
+                label = "map pairs_emitted"
+                if "combine" in names:
+                    expect = self.counter("combine", "pairs_out")
+                    label = "combine pairs_out"
+                if expect != c("pairs_in"):
                     bad.append(
-                        f"map pairs_emitted {emitted} != shuffle pairs_in "
+                        f"{label} {expect} != shuffle pairs_in "
                         f"{c('pairs_in')}"
                     )
             if "net_bytes" in has and "pairs_in" in has:
@@ -206,6 +219,34 @@ class JobTrace:
                     )
             if "net_s" in has and c("net_s") < 0:
                 bad.append(f"shuffle net_s {c('net_s')} negative")
+        if "combine" in names:
+            has_c = set().union(
+                *(p.counters for p in self.phases if p.phase == "combine")
+            )
+            cc = lambda name: self.counter("combine", name)
+            if "map" in names and "pairs_in" in has_c:
+                emitted = self.counter("map", "pairs_emitted")
+                if emitted != cc("pairs_in"):
+                    bad.append(
+                        f"map pairs_emitted {emitted} != combine pairs_in "
+                        f"{cc('pairs_in')}"
+                    )
+            # The combiner may only *contract* the stream (it merges
+            # equal-key pairs, never invents new ones).
+            if {"pairs_in", "pairs_out"} <= has_c and (
+                cc("pairs_out") > cc("pairs_in")
+            ):
+                bad.append(
+                    f"combine pairs_out {cc('pairs_out')} > pairs_in "
+                    f"{cc('pairs_in')}"
+                )
+            if {"bytes_in", "bytes_out"} <= has_c and (
+                cc("bytes_out") > cc("bytes_in")
+            ):
+                bad.append(
+                    f"combine bytes_out {cc('bytes_out')} > bytes_in "
+                    f"{cc('bytes_in')}"
+                )
         # Only the shuffle phase moves bytes over the fabric; bookkeeping
         # phases (pipelined overlap credit, contention stalls) and compute
         # phases must record net_bytes as exactly zero if they record it.

@@ -446,8 +446,9 @@ class TestResourceAwarePolicy:
         res_key = phase_resource_key("shuffle", "bytes")
         for b in oracle.backends():
             assert ("wordcount", oracle.platform, b, res_key) in pol.db
-        # the bytes model tracks the oracle's linear size law
-        model = pol._bytes_models[("wordcount", "jnp")]
+        # the bytes model tracks the oracle's linear size law (models
+        # are keyed per combiner arm; default grid is combiner-off only)
+        model = pol._bytes_models[("wordcount", "jnp", False)]
         from repro.cluster.policies import SIZE_UNIT, _np_predict
 
         lo = _np_predict(model, np.asarray([8, 8, 4, (1 << 14) / SIZE_UNIT]))

@@ -10,6 +10,7 @@ from hypothesis import given, settings, strategies as st
 from repro.kernels.decode_attention import decode_attention, decode_attention_ref
 from repro.kernels.flash_attention import attention_ref, flash_attention
 from repro.kernels.rwkv6 import wkv6, wkv6_ref
+from repro.kernels.local_reduce import local_reduce, local_reduce_ref
 from repro.kernels.segment_reduce import (
     PAD_KEY,
     segment_reduce,
@@ -163,3 +164,54 @@ class TestSegmentReduce:
         assert int(np.asarray(ov).sum()) == int(vals.sum())
         # one output slot per distinct key
         assert (np.asarray(ok) != int(PAD_KEY)).sum() == len(set(keys))
+
+
+class TestLocalReduce:
+    """Map-side combine kernel: dense front-packed aggregates vs the
+    scan-based reference, same PAD_KEY convention as segment_reduce."""
+
+    @pytest.mark.parametrize("N,C,nkeys", [(4, 64, 7), (1, 128, 3),
+                                           (8, 32, 32), (2, 256, 100)])
+    def test_matches_reference(self, N, C, nkeys):
+        keys = RNG.integers(0, nkeys, size=(N, C)).astype(np.int32)
+        for r in range(N):
+            npad = int(RNG.integers(0, C // 3))
+            if npad:
+                keys[r, -npad:] = int(PAD_KEY)
+            keys[r] = np.sort(keys[r])
+        vals = RNG.integers(1, 10, size=(N, C)).astype(np.int32)
+        ok, ov = local_reduce(jnp.asarray(keys), jnp.asarray(vals))
+        for r in range(N):
+            rk, rv = local_reduce_ref(jnp.asarray(keys[r]),
+                                      jnp.asarray(vals[r]))
+            np.testing.assert_array_equal(np.asarray(ok[r]), np.asarray(rk))
+            np.testing.assert_array_equal(np.asarray(ov[r]), np.asarray(rv))
+
+    def test_all_pad_rows(self):
+        """Empty task rows (a mapper past the corpus tail) compact to an
+        all-(PAD_KEY, 0) row, not garbage."""
+        keys = jnp.full((2, 64), int(PAD_KEY), jnp.int32)
+        vals = jnp.ones((2, 64), jnp.int32)
+        ok, ov = local_reduce(keys, vals)
+        assert (np.asarray(ok) == int(PAD_KEY)).all()
+        assert (np.asarray(ov) == 0).all()
+
+    @given(
+        c=st.sampled_from([16, 64, 128]),
+        nkeys=st.integers(1, 40),
+        seed=st.integers(0, 10_000),
+    )
+    @settings(max_examples=15, deadline=None)
+    def test_property_front_packed_sum_conserved(self, c, nkeys, seed):
+        """The contraction contract the shuffle relies on: one slot per
+        distinct key, front-packed ascending, dead tail, sum conserved."""
+        rng = np.random.default_rng(seed)
+        keys = np.sort(rng.integers(0, nkeys, c).astype(np.int32))
+        vals = rng.integers(0, 100, c).astype(np.int32)
+        ok, ov = local_reduce(jnp.asarray(keys), jnp.asarray(vals))
+        ok, ov = np.asarray(ok), np.asarray(ov)
+        n = int((ok != int(PAD_KEY)).sum())
+        assert n == len(set(keys.tolist()))
+        np.testing.assert_array_equal(ok[:n], np.unique(keys))
+        assert (ok[n:] == int(PAD_KEY)).all() and (ov[n:] == 0).all()
+        assert int(ov.sum()) == int(vals.sum())

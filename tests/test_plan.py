@@ -153,6 +153,23 @@ class TestShardedEquivalence:
         assert collect_results(lex[0], lex[1]) == want
         assert int(lex[2]) == int(sharded[2])
 
+    @pytest.mark.parametrize("reduce_backend", ALL_REDUCE)
+    def test_sharded_combiner_bit_exact(self, mesh1, reduce_backend):
+        """The combine barrier runs before the collective too: the mesh
+        mode of a combined plan matches the uncombined fused output."""
+        corpus = wordcount_corpus(1200, vocab_size=97, seed=4)
+        app = wordcount(97)
+        want = dict(Counter(np.asarray(corpus).tolist()))
+        cfg = _cfg(num_mappers=4, num_workers=1,
+                   reduce_backend=reduce_backend,
+                   shuffle_backend="all_to_all", combiner=True)
+        plan = ExecutionPlan(app, cfg, len(corpus))
+        ref = plan.fused()(corpus)
+        sharded = plan.sharded(mesh1)(corpus)
+        _assert_same(ref, sharded, reduce_backend)
+        assert collect_results(sharded[0], sharded[1]) == want
+        assert int(sharded[2]) == 0
+
     def test_sharded_dropped_matches_lexsort_under_skew(self, mesh1):
         corpus = np.zeros(600, dtype=np.int32)  # one key: max skew
         app = wordcount(16)
@@ -334,6 +351,92 @@ class TestPipelinedEquivalence:
         assert trace.check_conservation() == []
 
 
+@pytest.mark.parametrize("reduce_backend", ALL_REDUCE)
+@pytest.mark.parametrize("shuffle_backend", ALL_SHUFFLE)
+class TestCombinerEquivalence:
+    """Map-side combining is a pure byte-contraction: for every
+    commutative+associative app the combined plan is bit-exact against
+    the uncombined one, in every execution mode, on a ragged (W∤M)
+    wave configuration."""
+
+    def test_all_modes_bit_exact_vs_uncombined(self, reduce_backend,
+                                               shuffle_backend):
+        # M=7 over W=2: 4 map waves, last partial — the ragged case.
+        kw = dict(num_mappers=7, num_reducers=3, num_workers=2,
+                  reduce_backend=reduce_backend,
+                  shuffle_backend=shuffle_backend)
+        base = ExecutionPlan(APP, _cfg(**kw), len(CORPUS)).fused()(CORPUS)
+        plan = ExecutionPlan(APP, _cfg(combiner=True, **kw), len(CORPUS))
+        ref = plan.fused()(CORPUS)
+        # Against the uncombined plan: identical *results* (the combined
+        # plan's output buffers are narrower — lex_capacity is sized
+        # from the contracted stream — so padded shapes differ).
+        assert collect_results(ref[0], ref[1]) == WANT
+        assert collect_results(base[0], base[1]) == WANT
+        assert int(ref[2]) == int(base[2]) == 0
+        # Within the combined plan: every mode bit-exact vs its fused.
+        recorder = PhaseRecorder()
+        _assert_same(ref, plan.traced(recorder)(CORPUS), "traced")
+        for depth in (2, 3):
+            _assert_same(ref, plan.pipelined(depth=depth)(CORPUS),
+                         (depth, "pipelined"))
+        job = plan.resumable()
+        _assert_same(ref, job.result(run_resumable(job, CORPUS)),
+                     "resumable")
+        # The traced run recorded the combine stage and its contraction,
+        # and the combined trace satisfies every conservation law.
+        trace = recorder.last
+        assert "combine" in trace.phase_names()
+        assert trace.check_conservation() == []
+        assert trace.counter("combine", "pairs_in") == trace.counter(
+            "map", "pairs_emitted"
+        )
+        assert trace.counter("combine", "pairs_out") <= trace.counter(
+            "combine", "pairs_in"
+        )
+        assert trace.counter("shuffle", "pairs_in") == trace.counter(
+            "combine", "pairs_out"
+        )
+
+    def test_preempt_every_boundary_with_combiner(self, reduce_backend,
+                                                  shuffle_backend):
+        """The combine barrier is a first-class preemption boundary:
+        preempt after k steps then resume, for every k."""
+        cfg = _cfg(reduce_backend=reduce_backend,
+                   shuffle_backend=shuffle_backend, combiner=True)
+        plan = ExecutionPlan(APP, cfg, len(CORPUS))
+        ref = plan.fused()(CORPUS)
+        job = plan.resumable()
+        total = run_resumable(job, CORPUS).cursor.waves_executed
+        assert total == 3 + 1 + 1 + 2  # map + combine + shuffle + reduce
+        for k in range(1, total):
+            part = run_resumable(job, CORPUS, preempt_after=k)
+            assert part.cursor.waves_executed == k
+            assert not part.cursor.done
+            full = run_resumable(job, CORPUS, state=part)
+            _assert_same(ref, job.result(full), k)
+
+
+class TestCombinerValidation:
+    """Order-dependent reduce ops must be rejected at plan construction
+    — a map-side combine would silently reorder their merges."""
+
+    def test_combiner_rejects_order_dependent_op(self):
+        from repro.mapreduce import MapReduceApp
+
+        app = MapReduceApp(
+            name="firstapp", key_space=8,
+            map_fn=lambda t, v: (t, t, v), reduce_op="first",
+        )
+        cfg = JobConfig(num_mappers=2, num_reducers=2, combiner=True)
+        with pytest.raises(ValueError, match="combiner"):
+            ExecutionPlan(app, cfg, 64)
+        # The same app lowers fine without the combiner.
+        ExecutionPlan(
+            app, JobConfig(num_mappers=2, num_reducers=2), 64
+        )
+
+
 class TestPipelinedRouting:
     """build_job routes overlap_depth; bad depths fail fast."""
 
@@ -390,6 +493,32 @@ class TestStepperCaches:
         assert info["reduce_entries"] == 1
         assert info["hits"] == 2
         assert info["misses"] == 4
+
+    def test_combiner_flag_in_every_stepper_cache_key(self):
+        """Combined and uncombined grants must never share a jitted
+        trace (their buffer widths differ): the combine stepper is one
+        W-independent entry, and every per-grant key carries the
+        combiner flag."""
+        on = ExecutionPlan(APP, _cfg(combiner=True), len(CORPUS))
+        off = ExecutionPlan(APP, _cfg(), len(CORPUS))
+        stepper = on.combine_stepper()
+        assert on.combine_stepper() is stepper  # W-independent: cached
+        assert on.cache_info()["combine_entries"] == 1
+        assert on.cache_info()["hits"] == 1
+        assert off.cache_info()["combine_entries"] == 0
+        on.map_stepper(2)
+        off.map_stepper(2)
+        on.reduce_stepper(2, on.partition_cap())
+        off.reduce_stepper(2, off.partition_cap())
+        assert set(on._jit_map) == {(2, True)}
+        assert set(off._jit_map) == {(2, False)}
+        assert all(k[-1] is True for k in on._jit_reduce)
+        assert all(k[-1] is False for k in off._jit_reduce)
+        # The contraction is structural: the combined plan's partition
+        # buffers are sized from the combined stream.
+        assert on.meta()["combiner"] is True
+        assert on.shuffle_width <= off.shuffle_width
+        assert on.lex_capacity <= off.lex_capacity
 
     def test_pipelined_jobs_cached_per_grant_and_depth(self):
         plan = ExecutionPlan(APP, _cfg(), len(CORPUS))

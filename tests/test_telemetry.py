@@ -201,6 +201,49 @@ class TestConservation:
         assert any("bytes" in b for b in bad)
         assert any("pairs" in b for b in bad)
 
+    def test_check_conservation_flags_combine_violations(self):
+        """The combine laws actually trigger: expansion, intake
+        mismatch, and map/combine intake disagreement are each
+        flagged; the clean contracted trace is not."""
+
+        def run(combine_out, shuffle_in, combine_in=10):
+            trace = JobTrace(app="x", config={})
+            trace.record_phase("map", 0.0, pairs_emitted=10)
+            trace.record_phase(
+                "combine", 0.0, pairs_in=combine_in,
+                pairs_out=combine_out, bytes_in=combine_in * 8,
+                bytes_out=combine_out * 8,
+            )
+            trace.record_phase(
+                "shuffle", 0.0, pairs_in=shuffle_in, pairs_out=shuffle_in,
+                pairs_dropped=0, bytes_in=shuffle_in * 8,
+                bytes_out=shuffle_in * 8, bytes_dropped=0,
+            )
+            return trace.check_conservation()
+
+        assert run(6, 6) == []  # clean contracted trace
+        # A combiner that *expands* the stream is a bug.
+        bad = run(12, 12)
+        assert any("combine pairs_out" in v and "> pairs_in" in v
+                   for v in bad)
+        assert any("combine bytes_out" in v for v in bad)
+        # The shuffle must consume exactly the combiner's output.
+        assert any("combine pairs_out" in v and "shuffle pairs_in" in v
+                   for v in run(6, 9))
+        # The combiner must consume exactly the map's emitted stream.
+        assert any("map pairs_emitted" in v and "combine pairs_in" in v
+                   for v in run(6, 6, combine_in=8))
+
+    def test_check_conservation_flags_nonshuffle_net_bytes(self):
+        """Only the shuffle occupies the fabric: a combine phase that
+        claims wire bytes is flagged."""
+        trace = JobTrace(app="x", config={})
+        trace.record_phase("map", 0.0, pairs_emitted=4)
+        trace.record_phase("combine", 0.0, pairs_in=4, pairs_out=4,
+                           net_bytes=32)
+        bad = trace.check_conservation()
+        assert any("only shuffle occupies the fabric" in v for v in bad)
+
     def test_trace_round_trips_through_dict(self):
         corpus = wordcount_corpus(800, vocab_size=32, seed=6)
         trace, _ = traced_run(
